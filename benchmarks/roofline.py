@@ -1,0 +1,95 @@
+"""Roofline table: reads the dry-run artifacts and renders §Roofline.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and HBM fit — exactly the columns
+EXPERIMENTS.md §Roofline requires.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "stablelm-12b", "granite-3-2b", "qwen2.5-32b", "gemma3-12b",
+    "zamba2-1.2b", "grok-1-314b", "kimi-k2-1t-a32b", "mamba2-1.3b",
+    "internvl2-1b", "seamless-m4t-large-v2",
+]
+
+
+def load(art_dir=ARTIFACT_DIR, mesh="single", tag=""):
+    rows = []
+    suffix = f"_{tag}" if tag else ""
+    for f in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}{suffix}.json"))):
+        r = json.load(open(f))
+        if (r.get("tag") or "") != tag:
+            continue
+        rows.append(r)
+    key = {a: i for i, a in enumerate(ARCH_ORDER)}
+    skey = {s: i for i, s in enumerate(SHAPE_ORDER)}
+    rows.sort(key=lambda r: (key.get(r["arch"], 99), skey.get(r["shape"], 9)))
+    return rows
+
+
+def render(rows, *, show_skipped=True):
+    hdr = (f"{'arch':22s} {'shape':11s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'dominant':>10s} {'roofline':>9s} "
+           f"{'useful':>7s} {'peakGB':>7s} {'fit':>4s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] == "skipped":
+            if show_skipped:
+                print(f"{r['arch']:22s} {r['shape']:11s} "
+                      f"{'— skipped: ' + r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['shape']:11s} ERROR {r['error'][:60]}")
+            continue
+        t = r["roofline"]
+        uf = t.get("useful_flops_fraction")
+        print(f"{r['arch']:22s} {r['shape']:11s} {t['compute_s']:8.3f} "
+              f"{t['memory_s']:8.3f} {t['collective_s']:8.3f} "
+              f"{t['dominant']:>10s} {t['roofline_fraction']:9.3f} "
+              f"{uf if uf is None else round(uf, 2)!s:>7s} "
+              f"{r['peak_bytes_per_device'] / 2**30:7.1f} "
+              f"{'Y' if r['fits_hbm'] else 'N':>4s}")
+
+
+def run(mesh="single", tag=""):
+    rows = load(mesh=mesh, tag=tag)
+    print(f"# Roofline — {mesh}-pod mesh"
+          + (f" (tag={tag})" if tag else "") + "\n")
+    render(rows)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        return {}
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["bound_s"]
+                     if "bound_s" in r["roofline"] else
+                     max(r["roofline"]["compute_s"],
+                         r["roofline"]["memory_s"],
+                         r["roofline"]["collective_s"]), 1e-12))
+    print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.3f})")
+    print(f"most collective-bound:  {coll['arch']} x {coll['shape']} "
+          f"(coll {coll['roofline']['collective_s']:.2f}s)")
+    return {"n_ok": len(ok), "worst": worst["arch"] + "/" + worst["shape"]}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    a = ap.parse_args()
+    run(a.mesh, a.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark aggregator: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import fig6_utilization, kernel_bench, roofline, \
+        table2_comparison
+
+    print("=" * 72)
+    fig6 = fig6_utilization.run()
+    print("\n" + "=" * 72)
+    t2 = table2_comparison.run()
+    print("\n" + "=" * 72)
+    kb = kernel_bench.run()
+    print("\n" + "=" * 72)
+    roofline.run(mesh="single")
+    print("\n" + "=" * 72)
+    roofline.run(mesh="multi")
+    print("\n" + "=" * 72)
+
+    ok = (fig6["overall_util"] > 0.95
+          and abs(t2["gops"] - 780.2) / 780.2 < 0.05
+          and kb["max_err"] < 1e-2)
+    print(f"\nbenchmarks completed in {time.time() - t0:.0f}s — "
+          f"{'PASS' if ok else 'CHECK FAILURES ABOVE'}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Table II reproduction + TMP-dataflow ablation.
+
+Rows: prior works (paper-reported) vs our cycle-level model of the
+paper's accelerator, plus the fused-vs-unfused ablation that isolates the
+paper's TMP contribution (§III-D) — inter-layer (DW->PW) and intra-layer
+(MSA) fusion on/off.
+"""
+from __future__ import annotations
+
+from repro.core.accelerator_model import HwConfig, TABLE_II, analyze
+from repro.core.efficientvit import B1
+
+
+def run():
+    rep, _, _ = analyze(B1, fuse=True)
+    rep_nf, _, _ = analyze(B1, fuse=False)
+
+    print("# Table II — comparison with SOTA works")
+    hdr = f"{'design':28s} {'GOPS':>8s} {'W':>6s} {'GOPS/W':>8s} {'GOPS/DSP':>9s}"
+    print(hdr)
+    for name, d in TABLE_II.items():
+        dsp = {"ViA [16] (Alveo U50)": 2420,
+               "Auto-ViT-Acc [17] (ZCU102)": 1936,
+               "Paper (ZCU102)": 1024}.get(name)
+        gd = f"{d['gops'] / dsp:9.2f}" if dsp else f"{'—':>9s}"
+        print(f"{name:28s} {d['gops']:8.1f} {d['power']:6.2f} "
+              f"{d['eff']:8.2f} {gd}")
+    print(f"{'Ours (cycle model)':28s} {rep.gops:8.1f} "
+          f"{rep.hw.power_w:6.2f} {rep.gops_per_w:8.2f} "
+          f"{rep.gops_per_dsp:9.2f}")
+
+    print("\n# TMP dataflow ablation (the paper's §III-D contribution)")
+    print(f"{'config':24s} {'GOPS':>8s} {'util':>7s} {'latency_ms':>11s} "
+          f"{'DRAM_MB':>8s}")
+    for name, r in (("TMP fused (paper)", rep), ("unfused baseline", rep_nf)):
+        print(f"{name:24s} {r.gops:8.1f} {r.utilization:7.1%} "
+              f"{r.latency_ms:11.3f} {r.dram_bytes / 1e6:8.1f}")
+    speedup = rep_nf.total_cycles / rep.total_cycles
+    print(f"\nfusion speedup: {speedup:.3f}x cycles; "
+          f"DRAM traffic saved: "
+          f"{(rep_nf.dram_bytes - rep.dram_bytes) / 1e6:.1f} MB/inference")
+
+    cpu = TABLE_II["EfficientViT [8] (CPU)"]
+    print(f"vs CPU baseline: {rep.gops / cpu['gops']:.1f}x throughput "
+          f"(paper: 14.3x), {rep.gops_per_w / cpu['eff']:.1f}x efficiency "
+          f"(paper: 21.1x)")
+    return {"gops": rep.gops, "gops_per_w": rep.gops_per_w,
+            "fusion_speedup": speedup}
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Design-space exploration with the cycle-level accelerator model.
+
+Reproduces the paper's configuration, then sweeps the knobs the paper
+fixed — engine split (M x N vs S x T), DRAM bandwidth, fusion on/off —
+showing WHY the paper's (8x8 + 8x8) x 16 point with TMP fusion is a good
+one.  This is the kind of co-design loop the paper ran on the FPGA, run
+here in milliseconds.
+
+    PYTHONPATH=src python examples/accelerator_sim.py
+"""
+import dataclasses
+
+from repro.core.accelerator_model import HwConfig, analyze
+from repro.core.efficientvit import B1
+
+
+def row(tag, hw, fuse=True):
+    rep, _, _ = analyze(B1, hw, fuse=fuse)
+    print(f"{tag:34s} {rep.gops:8.1f} {rep.utilization:7.1%} "
+          f"{rep.latency_ms:9.3f} {rep.dram_bytes / 1e6:9.1f}")
+    return rep
+
+
+def main():
+    print(f"{'config':34s} {'GOPS':>8s} {'util':>7s} {'lat_ms':>9s} "
+          f"{'DRAM_MB':>9s}")
+    base = HwConfig()
+    row("paper: (8x8+8x8)x16 + TMP", base)
+    row("  ... fusion off", base, fuse=False)
+
+    # engine split sweep at constant 2048 multipliers
+    for m, s in ((4, 12), (12, 4), (16, 0)):
+        if s == 0:
+            hw = dataclasses.replace(base, M=16, S=1, T=8)
+        else:
+            hw = dataclasses.replace(base, M=m, S=s)
+        row(f"  split RPE {m}x8 / MAT {hw.S}x{hw.T}", hw)
+
+    # DRAM bandwidth sensitivity (the fusion argument)
+    for bw in (4.8, 9.6, 19.2, 38.4):
+        hw = dataclasses.replace(base, dram_gbps=bw)
+        f = row(f"  DDR {bw:4.1f} GB/s + TMP", hw)
+        nf = analyze(B1, hw, fuse=False)[0]
+        print(f"{'':34s} fusion saves {nf.total_cycles / f.total_cycles - 1:6.1%} cycles")
+
+    # frequency scaling
+    for mhz in (100, 200, 300):
+        hw = dataclasses.replace(base, freq_hz=mhz * 1e6)
+        row(f"  {mhz} MHz", hw)
+
+    print("\nconclusions: the paper's even RPE/MAT split maximizes fused-"
+          "pair overlap; fusion matters most when DRAM is scarce; "
+          "utilization is bandwidth-robust BECAUSE of the TMP dataflow.")
+
+
+if __name__ == "__main__":
+    main()

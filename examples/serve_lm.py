@@ -1,0 +1,62 @@
+"""Serving example: continuous batching over ragged requests, comparing a
+softmax-KV arch with the paper's relu_linear O(1)-state backend.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.common.tree import param_bytes
+from repro.configs import get_arch, smoke_variant
+from repro.models.registry import build_model
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.sampler import SamplerConfig
+
+
+def serve(backend: str, max_len: int, *, w8: bool = False):
+    arch = smoke_variant(get_arch("granite-3-2b")).scaled(
+        attn_backend=backend)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    if w8:
+        from repro.core.quantization import quantize_lm_params
+        params = quantize_lm_params(params)
+    eng = ServingEngine(arch, params, ServeConfig(
+        max_slots=4, max_len=max_len,
+        sampler=SamplerConfig(temperature=0.7, top_k=20), seed=7))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, arch.vocab,
+                                        size=int(rng.integers(4, 24))),
+                    max_tokens=12) for i in range(10)]
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    cache_bytes = sum(x.nbytes
+                      for x in jax.tree_util.tree_leaves(eng.caches))
+    toks = sum(len(r.out_tokens) for r in done)
+    wbytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(params))
+    tag = backend + ("+w8" if w8 else "")
+    print(f"  {tag:15s}: {len(done)} reqs, {toks} tokens, "
+          f"{toks / dt:6.1f} tok/s, decode-state {cache_bytes / 1e6:7.2f} MB, "
+          f"weights {wbytes / 1e6:5.2f} MB @ max_len={max_len}")
+    return cache_bytes
+
+
+def main():
+    print("continuous batching, 10 ragged requests, 4 slots:")
+    for max_len in (256, 2048):
+        kv = serve("softmax", max_len)
+        state = serve("relu_linear", max_len)
+        print(f"  -> at max_len={max_len}: relu_linear state is "
+              f"{kv / state:.0f}x smaller than the softmax KV cache\n")
+    serve("relu_linear", 2048, w8=True)
+    print("serve_lm OK — the paper's linear attention makes long-context "
+          "slots O(1), and its FIX8 datapath (W8) shrinks the weights "
+          "the decode step streams")
+
+
+if __name__ == "__main__":
+    main()

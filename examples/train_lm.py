@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+The arch is a scaled granite-3 (same family as the assigned config) with
+the paper's ReLU linear attention as the backend — demonstrating the
+technique as a first-class LM feature.  Data is the learnable synthetic
+Markov distribution from the data pipeline, so the loss visibly converges
+toward the chain's entropy floor.  The full fault-tolerance machinery is
+live: async checkpoints every 50 steps, auto-resume if re-launched.
+
+    PYTHONPATH=src python examples/train_lm.py             # ~100M params
+    PYTHONPATH=src python examples/train_lm.py --tiny      # CI-sized
+"""
+import argparse
+import logging
+
+from repro.common.tree import param_count
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig
+from repro.models.registry import build_model
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def arch_100m(tiny: bool = False):
+    base = get_arch("granite-3-2b")
+    if tiny:
+        return base.scaled(n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                           head_dim=16, d_ff=128, vocab=512,
+                           attn_backend="relu_linear",
+                           param_dtype="float32", compute_dtype="float32",
+                           loss_chunk=64, q_chunk=64, kv_chunk=64)
+    # ~100M params: 12L x 768 with the paper's linear attention.
+    # vocab 1024 keeps the synthetic Markov task learnable in a few
+    # hundred steps (the embedding still dominates nothing at 768 wide).
+    return base.scaled(n_layers=12, d_model=768, n_heads=12, n_kv=4,
+                       head_dim=64, d_ff=2048, vocab=1024,
+                       attn_backend="relu_linear",
+                       param_dtype="float32", compute_dtype="float32",
+                       loss_chunk=256, q_chunk=256, kv_chunk=256)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    arch = arch_100m(args.tiny)
+    if args.tiny:
+        args.steps, args.seq, args.batch = min(args.steps, 60), 64, 8
+
+    import jax
+    model = build_model(arch)
+    n = param_count(jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0))))
+    print(f"arch: granite-family, {arch.n_layers}L x {arch.d_model}, "
+          f"attn={arch.attn_backend}, {n / 1e6:.1f}M params")
+
+    data = DataConfig(vocab=arch.vocab, seq_len=args.seq,
+                      global_batch=args.batch, sharpness=6.0)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir,
+        log_every=10,
+        schedule=ScheduleConfig(kind="cosine", warmup_steps=10,
+                                total_steps=args.steps))
+    trainer = Trainer(arch, data, tcfg)
+    floor = trainer.data.optimal_loss_estimate()
+    print(f"markov-chain entropy floor (perfect-model loss): {floor:.3f}")
+    out = trainer.run()
+    losses = out["losses"]
+    print(f"loss: step0 {losses[0]:.3f} -> step{len(losses) - 1} "
+          f"{losses[-1]:.3f} (floor {floor:.3f})")
+    assert losses[-1] < losses[0], "training failed to reduce loss"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.common.tree import (  # noqa: F401
+    flatten_with_paths,
+    global_norm,
+    match_first,
+    param_bytes,
+    param_count,
+    path_str,
+    tree_map_with_path_str,
+    tree_select,
+    tree_zeros_like,
+)

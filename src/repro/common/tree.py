@@ -1,0 +1,81 @@
+"""Pytree utilities shared across the framework.
+
+Params are plain nested dicts of jnp arrays.  Helpers here provide
+path-string flattening (for partition-rule matching, checkpointing and
+debugging) and a few small conveniences that optax/flax would normally
+provide but are unavailable in this offline container.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _key_str(k) -> str:
+    """Render one pytree path entry as a short string."""
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def flatten_with_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    """Flatten ``tree`` into a list of (path_string, leaf)."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(path_str(p), v) for p, v in leaves]
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """``tree_map`` where ``fn`` receives the slash-joined path string."""
+    return jax.tree_util.tree_map_with_path(lambda p, v: fn(path_str(p), v), tree)
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    """L2 norm across every leaf of ``tree`` (fp32 accumulation)."""
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def tree_select(pred, a: PyTree, b: PyTree) -> PyTree:
+    """Elementwise ``where(pred, a, b)`` over matching pytrees."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def match_first(patterns: Iterable[tuple[str, Any]], path: str, default=None):
+    """Return the value of the first regex in ``patterns`` matching ``path``."""
+    for pat, val in patterns:
+        if re.search(pat, path):
+            return val
+    return default

@@ -1,0 +1,26 @@
+"""Config registry: ``--arch <id>`` resolution for launchers and tests."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, smoke_variant, supports  # noqa: F401
+from repro.configs.gemma3_12b import CONFIG as gemma3_12b
+from repro.configs.granite_3_2b import CONFIG as granite_3_2b
+from repro.configs.grok_1_314b import CONFIG as grok_1_314b
+from repro.configs.internvl2_1b import CONFIG as internvl2_1b
+from repro.configs.kimi_k2_1t import CONFIG as kimi_k2_1t
+from repro.configs.mamba2_1_3b import CONFIG as mamba2_1_3b
+from repro.configs.qwen2_5_32b import CONFIG as qwen2_5_32b
+from repro.configs.seamless_m4t_large import CONFIG as seamless_m4t_large
+from repro.configs.stablelm_12b import CONFIG as stablelm_12b
+from repro.configs.zamba2_1_2b import CONFIG as zamba2_1_2b
+from repro.configs.efficientvit_b1 import VISION  # noqa: F401 (paper's model)
+
+ARCHS: dict[str, ArchConfig] = {c.name: c for c in [
+    stablelm_12b, granite_3_2b, qwen2_5_32b, gemma3_12b, zamba2_1_2b,
+    grok_1_314b, kimi_k2_1t, mamba2_1_3b, internvl2_1b, seamless_m4t_large,
+]}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,24 @@
+"""EfficientViT-B1 — the paper's own workload, as a selectable config.
+
+Not part of the 10 assigned LM archs; exposed so launchers, tests and
+benchmarks address the paper's vision model through the same config
+machinery (``configs.VISION["efficientvit-b1"]``).  Dims follow Cai et
+al. (ICCV'23) B1: widths (16..256), depths (1,2,3,3,4), 16-dim heads,
+scale-5 aggregation, 224px input — 0.52 GMACs/inference (validated by
+tests/test_core_paper.py::test_efficientvit_b1_macs).
+"""
+from repro.core.efficientvit import B1, B1_SMOKE, EfficientViTConfig
+
+CONFIG = B1
+SMOKE = B1_SMOKE
+
+B2 = EfficientViTConfig(
+    name="efficientvit-b2", widths=(24, 48, 96, 192, 384),
+    depths=(1, 3, 4, 4, 6), head_dim=32, head_widths=(2304, 2560))
+
+B3 = EfficientViTConfig(
+    name="efficientvit-b3", widths=(32, 64, 128, 256, 512),
+    depths=(1, 4, 6, 6, 9), head_dim=32, head_widths=(2304, 2560))
+
+VISION = {"efficientvit-b1": CONFIG, "efficientvit-b2": B2,
+          "efficientvit-b3": B3}

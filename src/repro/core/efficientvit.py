@@ -1,0 +1,286 @@
+"""EfficientViT backbone (Cai et al., ICCV'23) — the paper's workload.
+
+Macro architecture (paper Fig. 1): input stem (generic Conv + DSConv),
+then four stages: S1/S2 stack MBConvs, S3/S4 stack EfficientViT Modules
+(MSA + MBConv).  Every conv is followed by BN (foldable) and Hardswish
+except block-final projections, matching §II.
+
+Besides the JAX forward, the model exports a **layer manifest** — one
+record per hardware operation (type, shapes, MACs) — which drives both
+the cycle-level accelerator model (core/accelerator_model.py) and the
+fig6/table2 benchmarks, so the numbers trace to one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.relu_attention import MSAConfig, init_msa, msa
+from repro.layers.conv import conv2d, dwconv2d, init_conv2d, init_dwconv2d, init_pwconv, pwconv
+from repro.layers.norms import batchnorm, init_batchnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficientViTConfig:
+    name: str = "efficientvit-b1"
+    widths: Sequence[int] = (16, 32, 64, 128, 256)
+    depths: Sequence[int] = (1, 2, 3, 3, 4)
+    head_dim: int = 16
+    msa_scales: Sequence[int] = (5,)
+    expand_ratio: int = 4
+    head_widths: Sequence[int] = (1536, 1600)
+    num_classes: int = 1000
+    image_size: int = 224
+    dtype: jnp.dtype = jnp.float32
+
+
+B1 = EfficientViTConfig()
+B1_SMOKE = EfficientViTConfig(
+    name="efficientvit-b1-smoke", widths=(8, 16, 24, 32, 48),
+    depths=(1, 1, 1, 1, 1), head_widths=(64, 64), num_classes=10,
+    image_size=64)
+
+
+def _act(x):
+    return jax.nn.hard_swish(x)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_conv_bn(key, k, c_in, c_out, dtype, *, groups=1):
+    return {
+        "conv": init_conv2d(key, k, c_in, c_out, groups=groups, bias=False,
+                            dtype=dtype),
+        "bn": init_batchnorm(c_out, dtype),
+    }
+
+
+def conv_bn_act(p, x, *, stride=1, groups=1, act=True):
+    """fp32 conv+BN, or the FIX8 folded path when the block was quantized
+    by core.quantization.quantize_efficientvit."""
+    if "qconv" in p:
+        from repro.core.quantization import conv2d_int8
+        y = conv2d_int8(p["qconv"], x, stride=stride, groups=groups)
+    else:
+        y = conv2d(p["conv"], x, stride=stride, groups=groups)
+        y = batchnorm(p["bn"], y)
+    return _act(y) if act else y
+
+
+def init_dsconv(key, c_in, c_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "dw": init_conv_bn(k1, 3, c_in, c_in, dtype, groups=c_in),
+        "pw": init_conv_bn(k2, 1, c_in, c_out, dtype),
+    }
+
+
+def dsconv(p, x, *, stride=1):
+    y = conv_bn_act(p["dw"], x, stride=stride, groups=x.shape[-1])
+    return conv_bn_act(p["pw"], y, act=False)
+
+
+def init_mbconv(key, c_in, c_out, expand, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    mid = c_in * expand
+    return {
+        "pw1": init_conv_bn(k1, 1, c_in, mid, dtype),
+        "dw": init_conv_bn(k2, 3, mid, mid, dtype, groups=mid),
+        "pw2": init_conv_bn(k3, 1, mid, c_out, dtype),
+    }
+
+
+def mbconv(p, x, *, stride=1):
+    """PWConv -> DWConv -> PWConv, BN+Hardswish on all but the last (§II)."""
+    y = conv_bn_act(p["pw1"], x)
+    y = conv_bn_act(p["dw"], y, stride=stride, groups=y.shape[-1])
+    return conv_bn_act(p["pw2"], y, act=False)
+
+
+def init_evit_module(key, c, head_dim, scales, expand, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "msa": init_msa(k1, MSAConfig(c, head_dim, scales, dtype)),
+        "mbconv": init_mbconv(k2, c, c, expand, dtype),
+    }
+
+
+def evit_module(p, x, cfg: EfficientViTConfig, c, *, attention_fn=None):
+    mcfg = MSAConfig(c, cfg.head_dim, tuple(cfg.msa_scales), cfg.dtype)
+    kw = {} if attention_fn is None else {"attention_fn": attention_fn}
+    x = x + msa(p["msa"], x, mcfg, **kw)
+    x = x + mbconv(p["mbconv"], x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_efficientvit(key, cfg: EfficientViTConfig = B1):
+    keys = iter(jax.random.split(key, 64))
+    w, d = cfg.widths, cfg.depths
+    params = {"stem_conv": init_conv_bn(next(keys), 3, 3, w[0], cfg.dtype)}
+    params["stem_ds"] = [init_dsconv(next(keys), w[0], w[0], cfg.dtype)
+                         for _ in range(d[0])]
+    for si in (1, 2):  # conv stages
+        blocks = []
+        c_in = w[si - 1]
+        for bi in range(d[si]):
+            blocks.append(init_mbconv(next(keys), c_in, w[si],
+                                      cfg.expand_ratio, cfg.dtype))
+            c_in = w[si]
+        params[f"stage{si}"] = blocks
+    for si in (3, 4):  # transformer stages
+        c_in = w[si - 1]
+        down = init_mbconv(next(keys), c_in, w[si], cfg.expand_ratio, cfg.dtype)
+        blocks = [init_evit_module(next(keys), w[si], cfg.head_dim,
+                                   tuple(cfg.msa_scales), cfg.expand_ratio,
+                                   cfg.dtype) for _ in range(d[si])]
+        params[f"stage{si}"] = {"down": down, "blocks": blocks}
+    kh, k1, k2 = jax.random.split(next(keys), 3)
+    hw1, hw2 = cfg.head_widths
+    params["head"] = {
+        "conv": init_conv_bn(kh, 1, w[4], hw1, cfg.dtype),
+        "fc1": {"w": (jax.random.normal(k1, (hw1, hw2), jnp.float32)
+                      * hw1 ** -0.5).astype(cfg.dtype)},
+        "fc2": {"w": (jax.random.normal(k2, (hw2, cfg.num_classes),
+                                        jnp.float32) * hw2 ** -0.5
+                      ).astype(cfg.dtype)},
+    }
+    return params
+
+
+def efficientvit(params, x, cfg: EfficientViTConfig = B1, *,
+                 attention_fn=None):
+    """x: (B, H, W, 3) image -> (B, num_classes) logits."""
+    y = conv_bn_act(params["stem_conv"], x, stride=2)
+    for p in params["stem_ds"]:
+        y = y + dsconv(p, y)
+    for si in (1, 2):
+        for bi, p in enumerate(params[f"stage{si}"]):
+            stride = 2 if bi == 0 else 1
+            out = mbconv(p, y, stride=stride)
+            y = out if bi == 0 else y + out
+    for si in (3, 4):
+        stage = params[f"stage{si}"]
+        y = mbconv(stage["down"], y, stride=2)
+        for p in stage["blocks"]:
+            y = evit_module(p, y, cfg, y.shape[-1], attention_fn=attention_fn)
+    y = conv_bn_act(params["head"]["conv"], y)
+    y = jnp.mean(y, axis=(1, 2))
+
+    def fc(p, h):
+        if "qw" in p:
+            from repro.core.quantization import matmul_int8
+            return matmul_int8(h, p["qw"], p["scale"])
+        return jnp.einsum("bc,cf->bf", h, p["w"].astype(h.dtype))
+
+    y = _act(fc(params["head"]["fc1"], y))
+    return fc(params["head"]["fc2"], y)
+
+
+# ---------------------------------------------------------------------------
+# layer manifest (drives the accelerator cycle model + benchmarks)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpRecord:
+    stage: str
+    name: str
+    kind: str          # conv | pw | dw | matmul | group_pw
+    h: int             # output spatial height (or M rows for matmul)
+    w: int             # output spatial width (or 1 for matmul)
+    c_in: int          # reduction length (C_in * k * k for conv)
+    c_out: int
+    k: int = 1
+    fused_with_prev: bool = False   # TMP inter-layer fusion target
+
+    @property
+    def macs(self) -> int:
+        if self.kind == "dw":  # one input channel per output channel
+            return self.h * self.w * self.c_out * self.k * self.k
+        return self.h * self.w * self.c_out * self.c_in * (
+            self.k * self.k if self.kind == "conv" else 1)
+
+    @property
+    def reduction(self) -> int:
+        """Parallelizable reduction length per output element."""
+        if self.kind == "dw":
+            return self.k * self.k
+        if self.kind == "conv":
+            return self.c_in * self.k * self.k
+        return self.c_in
+
+
+def layer_manifest(cfg: EfficientViTConfig = B1) -> list[OpRecord]:
+    """Enumerate hardware ops for one inference at cfg.image_size."""
+    ops: list[OpRecord] = []
+    w, d = cfg.widths, cfg.depths
+    r = cfg.image_size // 2
+    ops.append(OpRecord("stem", "conv1", "conv", r, r, 3, w[0], 3))
+    for i in range(d[0]):
+        ops.append(OpRecord("stem", f"ds{i}.dw", "dw", r, r, w[0], w[0], 3))
+        ops.append(OpRecord("stem", f"ds{i}.pw", "pw", r, r, w[0], w[0],
+                            fused_with_prev=True))
+
+    def add_mbconv(stage, name, res, c_in, c_out, stride):
+        mid = c_in * cfg.expand_ratio
+        ro = res // stride
+        ops.append(OpRecord(stage, f"{name}.pw1", "pw", res, res, c_in, mid))
+        ops.append(OpRecord(stage, f"{name}.dw", "dw", ro, ro, mid, mid, 3,
+                            fused_with_prev=False))
+        ops.append(OpRecord(stage, f"{name}.pw2", "pw", ro, ro, mid, c_out,
+                            fused_with_prev=True))
+        return ro
+
+    for si in (1, 2):
+        c_in = w[si - 1]
+        for bi in range(d[si]):
+            r = add_mbconv(f"S{si}", f"mb{bi}", r, c_in, w[si],
+                           2 if bi == 0 else 1)
+            c_in = w[si]
+
+    for si in (3, 4):
+        c = w[si]
+        r = add_mbconv(f"S{si}", "down", r, w[si - 1], c, 2)
+        heads = c // cfg.head_dim
+        total = heads * cfg.head_dim
+        n_tok = r * r
+        for bi in range(d[si]):
+            pre = f"evit{bi}"
+            ops.append(OpRecord(f"S{si}", f"{pre}.qkv", "pw", r, r, c,
+                                3 * total))
+            for s in cfg.msa_scales:
+                ops.append(OpRecord(f"S{si}", f"{pre}.agg{s}.dw", "dw", r, r,
+                                    3 * total, 3 * total, s))
+                # grouped 1x1: reduction = channels per group
+                ops.append(OpRecord(f"S{si}", f"{pre}.agg{s}.pw", "group_pw",
+                                    r, r, cfg.head_dim, 3 * total,
+                                    fused_with_prev=True))
+            n_scales = 1 + len(cfg.msa_scales)
+            # ReLU(K)^T V : per head d x d state over n_tok tokens
+            ops.append(OpRecord(f"S{si}", f"{pre}.ktv", "matmul",
+                                n_scales * heads * cfg.head_dim, 1, n_tok,
+                                cfg.head_dim))
+            # ReLU(Q) @ [KtV | ksum]: fused with previous on MAT engine
+            ops.append(OpRecord(f"S{si}", f"{pre}.qz", "matmul",
+                                n_scales * heads * n_tok, 1, cfg.head_dim,
+                                cfg.head_dim + 1, fused_with_prev=True))
+            ops.append(OpRecord(f"S{si}", f"{pre}.proj", "pw", r, r,
+                                n_scales * total, c))
+            add_mbconv(f"S{si}", f"{pre}.mb", r, c, c, 1)
+    hw1, hw2 = cfg.head_widths
+    ops.append(OpRecord("head", "conv", "pw", r, r, w[4], hw1))
+    ops.append(OpRecord("head", "fc1", "matmul", 1, 1, hw1, hw2))
+    ops.append(OpRecord("head", "fc2", "matmul", 1, 1, hw2, cfg.num_classes))
+    return ops
+
+
+def total_macs(cfg: EfficientViTConfig = B1) -> int:
+    return sum(op.macs for op in layer_manifest(cfg))

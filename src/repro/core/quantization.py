@@ -1,0 +1,188 @@
+"""FIX8 (int8) post-training quantization — the paper's arithmetic.
+
+The accelerator computes 8x8-bit fixed-point multiplies (two per DSP via
+WP486 packing).  The TPU analogue is the MXU's native int8 path (int8 x
+int8 -> int32 accumulate), giving the same ~2x-over-bf16 economics.
+
+Scheme, matching the paper + [18]:
+  * BN folded into the preceding conv first ("BN can be implemented via
+    1x1 convolutions, integrated into preceding convolutions", paper §II)
+  * weights: symmetric per-output-channel int8
+  * activations: symmetric per-tensor int8, dynamic (absmax) or calibrated
+  * accumulation: int32, dequantized by (s_act * s_w) per channel
+
+`quantize_efficientvit` rewrites an EfficientViT param tree in place-form:
+every conv+BN pair becomes a folded+quantized `qconv`, and the shared
+forward (`core.efficientvit.conv_bn_act`) dispatches on its presence, so
+the fp32 and FIX8 networks share one code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.norms import bn_fold_scale_bias
+
+
+def quantize_tensor(x, axis=None, bits: int = 8):
+    """Symmetric quantization.  axis=None -> per-tensor scale."""
+    qmax = 2 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    if axis is None:
+        absmax = jnp.max(jnp.abs(xf))
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        absmax = jnp.max(jnp.abs(xf), axis=red, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(xf / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def fold_bn_into_conv(conv_p, bn_p, eps: float = 1e-5):
+    """(conv, BN) -> folded (w', b') with BN absorbed per output channel."""
+    gamma, beta = bn_fold_scale_bias(bn_p, eps)
+    w = conv_p["w"].astype(jnp.float32) * gamma[None, None, None, :]
+    b = conv_p.get("b")
+    b = beta if b is None else beta + b.astype(jnp.float32) * gamma
+    return w, b
+
+
+def quantize_conv_bn(p, eps: float = 1e-5):
+    """{'conv','bn'} block -> {'qconv': {q, scale, bias, groups-compatible}}."""
+    w, b = fold_bn_into_conv(p["conv"], p["bn"], eps)
+    q, scale = quantize_tensor(w, axis=-1)  # per-output-channel (HWIO)
+    return {"qconv": {"q": q, "scale": scale[0, 0, 0, :], "bias": b}}
+
+
+def conv2d_int8(qp, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
+    """FIX8 conv: dynamic per-tensor act quant, int8 conv, int32 accumulate,
+    fp32 dequant + bias.  Mirrors layers.conv.conv2d semantics."""
+    xq, sx = quantize_tensor(x)
+    acc = lax.conv_general_dilated(
+        xq, qp["q"],
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * (sx * qp["scale"][None, None, None, :])
+    return (y + qp["bias"][None, None, None, :]).astype(x.dtype)
+
+
+def matmul_int8(x, qw, w_scale):
+    """(..., d) x int8 (d, f): int8 GEMM with int32 accumulation."""
+    xq, sx = quantize_tensor(x)
+    acc = jnp.einsum("...d,df->...f", xq, qw,
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * (sx * w_scale)).astype(x.dtype)
+
+
+def quantize_linear(p):
+    q, scale = quantize_tensor(p["w"], axis=-1)
+    out = {"qw": q, "scale": scale[0, :]}
+    if "b" in p:
+        out["bias"] = p["b"].astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# EfficientViT end-to-end quantization
+# ---------------------------------------------------------------------------
+
+def _is_conv_bn(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"conv", "bn"}
+
+
+def quantize_efficientvit(params):
+    """Recursively fold+quantize every conv+BN block of an EfficientViT
+    param tree; bare convs (MSA qkv/aggreg/proj) get weight+act int8 too."""
+
+    def walk(node):
+        if _is_conv_bn(node):
+            return quantize_conv_bn(node)
+        if isinstance(node, dict):
+            if "proj" in node and "proj_bn" in node:  # MSA tail: fold BN
+                out = {k: walk(v) for k, v in node.items()
+                       if k not in ("proj", "proj_bn")}
+                out["proj"] = quantize_conv_bn(
+                    {"conv": node["proj"], "bn": node["proj_bn"]})
+                return out
+            if set(node) == {"w"} and node["w"].ndim == 4:  # bare conv
+                q, scale = quantize_tensor(node["w"], axis=-1)
+                return {"qconv": {"q": q, "scale": scale[0, 0, 0, :],
+                                  "bias": jnp.zeros(node["w"].shape[-1])}}
+            if set(node) == {"w"} and node["w"].ndim == 2:  # fc
+                return quantize_linear(node)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(params)
+
+
+def quantization_error(x_fp, x_q):
+    """Relative L2 error — the acceptance metric for FIX8 parity tests."""
+    num = jnp.linalg.norm((x_fp - x_q).astype(jnp.float32).ravel())
+    den = jnp.maximum(jnp.linalg.norm(x_fp.astype(jnp.float32).ravel()), 1e-9)
+    return num / den
+
+
+# ---------------------------------------------------------------------------
+# LM weight-only int8 (W8) — the FIX8 datapath as a serving feature
+# ---------------------------------------------------------------------------
+
+_W8_SKIP = ("norm", "ln1", "ln2", "ln3", "final_norm", "enc_norm", "router",
+            "conv_w", "conv_b", "A_log", "dt_bias", "D", "proj_bn", "bn")
+
+
+def _q_per_out_channel(w):
+    """int8 per-(stack..., out-channel): scale reduces the in dim only,
+    so scan-stacked weights (L, in, out) / (L, E, D, F) quantize
+    per-layer-per-channel and slice correctly inside the layer scan."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_lm_params(params):
+    """Weight-only int8 transform of an LM param tree.
+
+    Matmul weights ({'w': (..., in, out)}) become {'qw' int8, 'scale'
+    (..., 1, out)}; embedding tables become {'qt' int8, 'scale' (V, 1)};
+    MoE expert tensors (stacked or not) become {'q' int8, 'scale'}.
+    Norms, biases, routers and SSM scalars stay fp.  ``layers.linear`` /
+    ``layers.moe`` dequantize on use, so the HBM-resident (and
+    ZeRO-gathered) bytes drop ~2x — the lever for weight-read/-gather-
+    bound decode (EXPERIMENTS.md §Perf H3b).
+    """
+
+    def walk(node, path=""):
+        if isinstance(node, dict):
+            if any(s in path.rsplit("/", 1)[-1] for s in _W8_SKIP):
+                return node
+            if "table" in node and node["table"].ndim == 2:
+                q, scale = quantize_tensor(node["table"], axis=0)
+                return {"qt": q, "scale": scale.astype(jnp.float32)}
+            if "w" in node and node["w"].ndim >= 2 \
+                    and not any(s in path for s in _W8_SKIP):
+                q, scale = _q_per_out_channel(node["w"])
+                out = {"qw": q, "scale": scale}
+                if "b" in node:
+                    out["b"] = node["b"]
+                return out
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if hasattr(node, "ndim") and node.ndim >= 3 and \
+                path.rsplit("/", 1)[-1] in ("w_in", "w_gate", "w_out"):
+            q, scale = _q_per_out_channel(node)
+            return {"q": q, "scale": scale}
+        return node
+
+    return walk(params)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, SyntheticLMDataset, host_shard, make_batch_specs)

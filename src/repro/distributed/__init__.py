@@ -1,0 +1,8 @@
+from repro.distributed.ctx import ShardingCtx, current_ctx, shard, use_sharding  # noqa: F401
+from repro.distributed.partition import (  # noqa: F401
+    DEFAULT_RULES,
+    make_ctx,
+    match_partition_rules,
+    named_shardings,
+    resolve_param_spec,
+)

@@ -1,0 +1,88 @@
+"""Logical-axis sharding context.
+
+Layers annotate activations with *logical* axis names ("dp", "sp", "tp",
+"ep", ...).  A :class:`ShardingCtx` installed for the duration of a jitted
+step maps those names onto concrete mesh axes and applies
+``with_sharding_constraint``.  When no context is installed (unit tests,
+single-device smoke runs) the annotations are no-ops, so every layer works
+unchanged on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass
+class ShardingCtx:
+    mesh: Mesh
+    # logical axis name -> mesh axis name (or tuple of mesh axes, or None)
+    rules: dict[str, object] = field(default_factory=dict)
+
+    def resolve(self, logical: Sequence[Optional[str]]) -> P:
+        out = []
+        used: set[str] = set()
+        for name in logical:
+            if name is None:
+                out.append(None)
+                continue
+            mesh_axes = self.rules.get(name)
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            picked = tuple(a for a in mesh_axes if a not in used)
+            used.update(picked)
+            if not picked:
+                out.append(None)
+            elif len(picked) == 1:
+                out.append(picked[0])
+            else:
+                out.append(picked)
+        return P(*out)
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain ``x`` to the sharding implied by logical axis names.
+
+    ``shard(x, "dp", "sp", None)`` pins batch to the data axes and sequence
+    to the sequence-parallel axes (when mapped).  Identity when no context.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(
+            f"shard(): rank {x.ndim} array got {len(logical)} axis names"
+        )
+    spec = ctx.resolve(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.resolve(logical))

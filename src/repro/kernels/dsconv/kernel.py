@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused DWConv(3x3) + Hardswish + PWConv.
+
+TPU translation of the paper's TMP *inter-layer* fusion (Fig. 5): on the
+FPGA the DWConv runs on the RPE and streams through an auxiliary buffer
+into the PWConv on the MAT engine.  Here the DW stage is VPU work
+(9 shifted multiply-adds over a VMEM-resident tile — no input-channel
+reduction, so the MXU would idle exactly as the paper's adder-trees
+would), its output lives only in VMEM scratch, and the PW stage is an
+MXU matmul over that scratch.  The intermediate NEVER touches HBM, which
+is the entire point of the fusion.
+
+Grid: (batch, c_out tiles).  The DW result is computed once per batch
+element (c_out tile 0) and reused by the remaining c_out tiles from
+scratch — the "RPE joins the PW" time-multiplexing becomes scratch reuse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dsconv_kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, o_ref,
+                   dw_scratch, *, stride: int, act: bool):
+    j = pl.program_id(1)
+    Hp, Wp, C = x_ref.shape[1], x_ref.shape[2], x_ref.shape[3]
+    H, W = Hp - 2, Wp - 2
+    Ho, Wo = H // stride, W // stride
+
+    @pl.when(j == 0)
+    def _dw():  # VPU stage: depthwise 3x3 + bias (+ Hardswish)
+        x = x_ref[0].astype(jnp.float32)               # (Hp, Wp, C)
+        acc = jnp.zeros((H, W, C), jnp.float32)
+        for dy in range(3):
+            for dx in range(3):
+                acc += x[dy:dy + H, dx:dx + W, :] * dww_ref[dy, dx][None, None, :]
+        acc += dwb_ref[0][None, None, :]
+        if stride > 1:
+            acc = acc[::stride, ::stride, :]
+        if act:
+            acc = jax.nn.hard_swish(acc)
+        dw_scratch[...] = acc.reshape(Ho * Wo, C)
+
+    # MXU stage: pointwise conv over the VMEM-resident DW output
+    out = jnp.dot(dw_scratch[...], pww_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    out += pwb_ref[0][None, :]
+    o_ref[0] = out.reshape(Ho, Wo, -1)
+
+
+def dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
+                 act: bool = True, block_f: int = 128,
+                 interpret: bool = True):
+    """x: (B, H, W, C); dw_w: (3, 3, C); pw_w: (C, F) -> (B, Ho, Wo, F)."""
+    B, H, W, C = x.shape
+    F = pw_w.shape[1]
+    assert H % stride == 0 and W % stride == 0
+    Ho, Wo = H // stride, W // stride
+    bf = min(block_f, F)
+    if F % bf != 0:
+        bf = F
+    nf = F // bf
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+
+    return pl.pallas_call(
+        functools.partial(_dsconv_kernel, stride=stride, act=act),
+        grid=(B, nf),
+        in_specs=[
+            pl.BlockSpec((1, H + 2, W + 2, C), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((3, 3, C), lambda b, j: (0, 0, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (0, 0)),
+            pl.BlockSpec((C, bf), lambda b, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, bf), lambda b, j: (b, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, F), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((Ho * Wo, C), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, dw_w, dw_b.reshape(1, C), pw_w, pw_b.reshape(1, F))

@@ -1,0 +1,44 @@
+"""Jitted wrapper: fused DSConv for framework param trees.
+
+``dsconv_apply(params, x)`` consumes the EfficientViT {'dw','pw'} conv+BN
+block pair (folding BN on the fly) and runs the fused kernel; shapes whose
+VMEM tile would exceed the budget fall back to the reference path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fold_bn_into_conv
+from repro.kernels.dsconv.kernel import dsconv_fused
+from repro.kernels.dsconv.ref import dsconv_ref
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act", "interpret"))
+def dsconv_op(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1, act: bool = True,
+              interpret: bool = True):
+    B, H, W, C = x.shape
+    tile_bytes = (H + 2) * (W + 2) * C * 4 + (H * W // stride ** 2) * C * 4
+    if tile_bytes > VMEM_BUDGET_BYTES:
+        return dsconv_ref(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act)
+    return dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act,
+                        interpret=interpret)
+
+
+def dsconv_apply(params, x, *, stride: int = 1):
+    """EfficientViT {'dw': conv+bn, 'pw': conv+bn} block -> fused kernel.
+
+    Matches core.efficientvit.dsconv / the mbconv dw->pw2 tail: BN is
+    folded into both convolutions, Hardswish between them, no activation
+    after the projection (paper §II).
+    """
+    dw_w4, dw_b = fold_bn_into_conv(params["dw"]["conv"], params["dw"]["bn"])
+    pw_w4, pw_b = fold_bn_into_conv(params["pw"]["conv"], params["pw"]["bn"])
+    dw_w = dw_w4[:, :, 0, :]          # (3,3,1,C) -> (3,3,C)
+    pw_w = pw_w4[0, 0]                # (1,1,C,F) -> (C,F)
+    out = dsconv_op(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=True)
+    return out.astype(x.dtype)

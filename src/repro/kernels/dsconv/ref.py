@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused DWConv->PWConv kernel.
+
+Semantics: 3x3 depthwise conv (explicit (1,1) spatial padding, stride 1
+or 2 anchored at the padded origin), + bias, Hardswish, then 1x1 pointwise
+conv + bias.  This is the MBConv tail (dw -> pw2) and the stem DSConv —
+the pair the paper's TMP inter-layer fusion targets (Fig. 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dsconv_ref(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
+               act: bool = True):
+    """x: (B, H, W, C); dw_w: (3, 3, C); pw_w: (C, F) -> (B, Ho, Wo, F).
+
+    Ho = H // stride (H, W must be divisible by stride).
+    """
+    B, H, W, C = x.shape
+    xf = x.astype(jnp.float32)
+    xp = jnp.pad(xf, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    acc = jnp.zeros((B, H, W, C), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + xp[:, dy:dy + H, dx:dx + W, :] * dw_w[dy, dx][None, None, None, :]
+    acc = acc + dw_b[None, None, None, :]
+    if stride > 1:
+        acc = acc[:, ::stride, ::stride, :]
+    if act:
+        acc = jax.nn.hard_swish(acc)
+    out = jnp.einsum("bhwc,cf->bhwf", acc, pw_w.astype(jnp.float32))
+    return out + pw_b[None, None, None, :]

@@ -1,0 +1,24 @@
+"""Jitted wrapper: quantize-on-the-fly W8A8 linear using the Pallas GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_tensor
+from repro.kernels.int8_matmul.kernel import int8_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def linear_w8a8(x, w_q, w_scale, *, interpret: bool = True):
+    """x: (..., K) fp; w_q: (K, N) int8; w_scale: (N,) -> (..., N) fp32.
+
+    Dynamic per-tensor activation quantization + fused int8 GEMM.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    x_q, x_scale = quantize_tensor(x2)
+    out = int8_matmul(x_q, w_q, x_scale[()], w_scale, interpret=interpret)
+    return out.reshape(*lead, -1)

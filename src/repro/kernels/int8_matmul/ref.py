@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the W8A8 int8 GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q, w_q, x_scale, w_scale):
+    """x_q: (M, K) int8; w_q: (K, N) int8; scales: scalar / (N,) fp32.
+
+    Returns fp32 (M, N) = (x_q @ w_q)_int32 * x_scale * w_scale.
+    """
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale * w_scale[None, :]

@@ -1,0 +1,173 @@
+"""Pallas TPU kernels for fused ReLU linear attention.
+
+TPU translation of the paper's intra-layer MSA fusion (§III-D):
+
+* ``kv_reduce``  — one pass over K/V tiles accumulating BOTH the d x d
+  state ReLU(K)^T V (MXU) and the d-vector rowsum(ReLU(K)) (VPU) in VMEM
+  scratch.  The rowsum is the K-adder-tree running concurrently with the
+  RPE's MatMul in Fig. 5; here the two accumulate in the same kernel pass
+  so K is read from HBM exactly once.
+* ``apply``      — streams Q tiles, multiplies by the cached state to get
+  dividend and divisor in one pass (the MAT engine's role), divides, and
+  writes the output.  Z never round-trips HBM.
+* ``causal``     — chunked prefix-state variant for LM decode/training:
+  grid is sequential over chunks; the (d x d) state and normalizer live in
+  VMEM scratch across grid steps — the auxiliary-buffer pattern of Fig. 5.
+
+Block shapes keep the last dim = head_dim (pad to 128 upstream for MXU
+alignment when d < 128) and tile the token dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# non-causal: kv_reduce + apply
+# ---------------------------------------------------------------------------
+
+def _kv_reduce_kernel(k_ref, v_ref, kv_ref, ksum_ref, kv_acc, ksum_acc):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        kv_acc[...] = jnp.zeros_like(kv_acc)
+        ksum_acc[...] = jnp.zeros_like(ksum_acc)
+
+    pk = jax.nn.relu(k_ref[0].astype(jnp.float32))          # (bn, d)
+    vf = v_ref[0].astype(jnp.float32)
+    # MXU: state accumulation; VPU: K-adder-tree rowsum — same pass.
+    kv_acc[...] += jax.lax.dot_general(
+        pk, vf, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    ksum_acc[...] += jnp.sum(pk, axis=0, keepdims=True)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _flush():
+        kv_ref[0] = kv_acc[...]
+        ksum_ref[0] = ksum_acc[...]
+
+
+def _apply_kernel(q_ref, kv_ref, ksum_ref, o_ref, *, eps):
+    pq = jax.nn.relu(q_ref[0].astype(jnp.float32))          # (bn, d)
+    num = jnp.dot(pq, kv_ref[0], preferred_element_type=jnp.float32)
+    den = jnp.dot(pq, ksum_ref[0].T, preferred_element_type=jnp.float32)
+    o_ref[0] = num / jnp.maximum(den, eps)
+
+
+def relu_attn_noncausal(q, k, v, *, block_n: int = 256, eps: float = EPS,
+                        interpret: bool = True):
+    """q, k, v: (BH, N, D) -> (BH, N, D) fp32."""
+    BH, N, D = q.shape
+    bn = min(block_n, N)
+    if N % bn != 0:
+        bn = N
+    nb = N // bn
+
+    kv, ksum = pl.pallas_call(
+        _kv_reduce_kernel,
+        grid=(BH, nb),
+        in_specs=[
+            pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1, D), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k, v)
+
+    out = pl.pallas_call(
+        functools.partial(_apply_kernel, eps=eps),
+        grid=(BH, nb),
+        in_specs=[
+            pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, D, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, N, D), jnp.float32),
+        interpret=interpret,
+    )(q, kv, ksum)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# causal: chunked prefix-state scan in one kernel
+# ---------------------------------------------------------------------------
+
+def _causal_kernel(q_ref, k_ref, v_ref, o_ref, state_acc, zsum_acc, *, eps):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        state_acc[...] = jnp.zeros_like(state_acc)
+        zsum_acc[...] = jnp.zeros_like(zsum_acc)
+
+    pq = jax.nn.relu(q_ref[0].astype(jnp.float32))          # (C, d)
+    pk = jax.nn.relu(k_ref[0].astype(jnp.float32))
+    vf = v_ref[0].astype(jnp.float32)
+    C = pq.shape[0]
+
+    # intra-chunk quadratic term (causal-masked)
+    s = jnp.dot(pq, pk.T, preferred_element_type=jnp.float32)
+    mask = jnp.tril(jnp.ones((C, C), jnp.float32))
+    s = s * mask
+    num = jnp.dot(s, vf, preferred_element_type=jnp.float32)
+    den = jnp.sum(s, axis=-1, keepdims=True)
+
+    # inter-chunk prefix state
+    num += jnp.dot(pq, state_acc[...], preferred_element_type=jnp.float32)
+    den += jnp.dot(pq, zsum_acc[...].T, preferred_element_type=jnp.float32)
+
+    o_ref[0] = num / jnp.maximum(den, eps)
+
+    # state update for the next chunk
+    state_acc[...] += jax.lax.dot_general(
+        pk, vf, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    zsum_acc[...] += jnp.sum(pk, axis=0, keepdims=True)
+
+
+def relu_attn_causal(q, k, v, *, chunk: int = 256, eps: float = EPS,
+                     interpret: bool = True):
+    """q, k, v: (BH, N, D) -> (BH, N, D) fp32, causal."""
+    BH, N, D = q.shape
+    C = min(chunk, N)
+    if N % C != 0:
+        C = N
+    nc = N // C
+    return pl.pallas_call(
+        functools.partial(_causal_kernel, eps=eps),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, C, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, C, D), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, N, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the fused ReLU linear attention kernels.
+
+Accepts the framework's multi-head layouts, folds (batch, heads) into one
+grid axis, pads head_dim to the MXU lane width when requested, and
+dispatches to the Pallas kernels (interpret=True on CPU; compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.relu_attn.kernel import relu_attn_causal, relu_attn_noncausal
+
+
+def _fold_heads(x):
+    """(B, N, H, D) -> (B*H, N, D)"""
+    B, N, H, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, N, D)
+
+
+def _unfold_heads(x, B, H):
+    BH, N, D = x.shape
+    return x.reshape(B, H, N, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_n", "interpret"))
+def relu_linear_attention(q, k, v, *, causal: bool = False,
+                          block_n: int = 256, interpret: bool = True):
+    """Fused ReLU linear attention.  q, k, v: (B, N, H, D).
+
+    Returns (B, N, H, D) in fp32.  The non-causal form is EfficientViT's
+    MSA core; the causal form is the LM backend.
+    """
+    B, N, H, D = q.shape
+    qf, kf, vf = _fold_heads(q), _fold_heads(k), _fold_heads(v)
+    if causal:
+        out = relu_attn_causal(qf, kf, vf, chunk=block_n, interpret=interpret)
+    else:
+        out = relu_attn_noncausal(qf, kf, vf, block_n=block_n,
+                                  interpret=interpret)
+    return _unfold_heads(out, B, H)
+
+
+def msa_attention_fn(q, k, v):
+    """Drop-in ``attention_fn`` for core.relu_attention.msa (B, N, h, d)."""
+    return relu_linear_attention(q, k, v, causal=False).astype(q.dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused ReLU linear attention kernels.
+
+Deliberately written in the most direct form (no chunking, no fusion) so
+it is an independent source of truth for the Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def relu_attn_noncausal_ref(q, k, v, eps: float = EPS):
+    """q, k, v: (BH, N, D) -> (BH, N, D) fp32.
+
+    out = ReLU(Q) (ReLU(K)^T V) / (ReLU(Q) . rowsum(ReLU(K)))
+    """
+    pq = jax.nn.relu(q.astype(jnp.float32))
+    pk = jax.nn.relu(k.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    kv = jnp.einsum("bnd,bne->bde", pk, vf)
+    ksum = pk.sum(axis=1)
+    num = jnp.einsum("bnd,bde->bne", pq, kv)
+    den = jnp.einsum("bnd,bd->bn", pq, ksum)[..., None]
+    return num / jnp.maximum(den, eps)
+
+
+def relu_attn_causal_ref(q, k, v, eps: float = EPS):
+    """Causal form via explicit O(N^2) masked attention (the slow dual)."""
+    pq = jax.nn.relu(q.astype(jnp.float32))
+    pk = jax.nn.relu(k.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    n = q.shape[1]
+    scores = jnp.einsum("bnd,bmd->bnm", pq, pk)
+    mask = jnp.tril(jnp.ones((n, n), bool))
+    scores = jnp.where(mask[None], scores, 0.0)
+    num = jnp.einsum("bnm,bme->bne", scores, vf)
+    den = scores.sum(axis=-1, keepdims=True)
+    return num / jnp.maximum(den, eps)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: chunked SSD (Mamba-2 state-space duality) scan.
+
+State-space duality makes this the same kernel skeleton as the causal
+ReLU linear attention (kernels/relu_attn): an intra-chunk quadratic term
+(MXU matmuls over a C x C score matrix) plus an inter-chunk recurrent
+state carried in VMEM scratch across sequential grid steps — the
+auxiliary-buffer pattern of the paper's TMP dataflow, with a per-step
+exponential decay that linear attention lacks.
+
+Grid: (BH, n_chunks); chunk axis is sequential ("arbitrary") so the
+(P x N) state scratch persists.  Scalar-per-step quantities (dt, dA)
+arrive as (1, C) rows; cumulative sums and the segment-sum decay matrix
+are computed on the VPU inside the kernel.
+
+Block shapes: chunk C tokens x P head dim (MXU-aligned when P, N are
+multiples of 128; the assigned configs use P, N in {64, 128}, padded
+upstream by ops.py when compiled for real hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, o_ref, state_acc):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        state_acc[...] = jnp.zeros_like(state_acc)
+
+    x = x_ref[0].astype(jnp.float32)          # (C, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (C,)
+    dA = da_ref[0].astype(jnp.float32)        # (C,)  = dt * A  (log-decay)
+    Bm = b_ref[0].astype(jnp.float32)         # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (C, N)
+    C = x.shape[0]
+
+    dA_cum = jnp.cumsum(dA)                   # (C,)
+    # intra-chunk: L[l, s] = exp(sum_{s < u <= l} dA_u), causal
+    seg = dA_cum[:, None] - dA_cum[None, :]
+    tril = jnp.tril(jnp.ones((C, C), jnp.float32))
+    L = jnp.exp(jnp.minimum(seg, 0.0) * tril) * tril  # seg <= 0 on tril
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32) * L
+    xdt = x * dt[:, None]
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contract cached state (N, P) with decayed C
+    out_decay = jnp.exp(dA_cum)[:, None]      # (C, 1)
+    y += jnp.dot(Cm * out_decay, state_acc[...],
+                 preferred_element_type=jnp.float32)
+    o_ref[0] = y
+
+    # state update: state <- B^T (decay.dt.x) + exp(dA_cum[-1]) * state
+    decay_states = jnp.exp(dA_cum[-1] - dA_cum)       # (C,)
+    w = (decay_states * dt)[:, None]                   # (C, 1)
+    new = jax.lax.dot_general(Bm * w, x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    state_acc[...] = new + jnp.exp(dA_cum[-1]) * state_acc[...]
+
+
+def ssd_chunked_pallas(x, dt, dA, Bm, Cm, *, chunk: int = 256,
+                       interpret: bool = True):
+    """Chunked SSD scan.
+
+    x:  (BH, S, P)  head inputs
+    dt: (BH, S)     softplus'd step sizes
+    dA: (BH, S)     dt * A (negative log-decay increments)
+    Bm, Cm: (BH, S, N) head-expanded input/output projections
+    Returns y: (BH, S, P) fp32.  (Final state is re-derivable from the
+    last chunk; the framework's prefill path uses the jnp ssd_chunked
+    when it needs the state back.)
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    C = min(chunk, S)
+    if S % C != 0:
+        C = S
+    nc = S // C
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, P), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, C), lambda b, i: (b, i)),
+            pl.BlockSpec((1, C), lambda b, i: (b, i)),
+            pl.BlockSpec((1, C, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, C, N), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, P), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, dA, Bm, Cm)

@@ -1,0 +1,38 @@
+"""Jitted wrapper: Pallas SSD scan over the framework's Mamba-2 layout.
+
+``ssd_op`` accepts the (b, s, h, p) / (b, s, g, n) layout used by
+``layers.mamba2`` and folds (batch, head) into the kernel grid axis,
+expanding the B/C groups to heads.  Drop-in replacement for the jnp
+``ssd_chunked`` forward (D-skip applied here; state handoff stays on the
+jnp path, which prefill uses).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_chunked_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_op(x, dt, A, B, C, *, chunk: int = 256, D_skip=None,
+           interpret: bool = True):
+    """x: (b,s,h,p)  dt: (b,s,h)  A: (h,)  B,C: (b,s,g,n) -> y (b,s,h,p)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    xf = x.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.astype(jnp.float32).transpose(0, 2, 1).reshape(b * h, s)
+    dA = dtf * jnp.tile(A.astype(jnp.float32), b)[:, None]   # (b*h, s)
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    Bf = Bh.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Cf = Ch.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    y = ssd_chunked_pallas(xf, dtf, dA, Bf, Cf, chunk=chunk,
+                           interpret=interpret)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    if D_skip is not None:
+        y = y + D_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y

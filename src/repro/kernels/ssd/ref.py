@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the SSD (Mamba-2) kernel: direct per-step recurrence.
+
+Deliberately the O(S) sequential state-space form — independent of the
+chunked decomposition used by both the jnp `ssd_chunked` and the Pallas
+kernel, so it is a genuine oracle for either.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_recurrent_ref(x, dt, A, B, C, D_skip=None):
+    """Sequential SSD recurrence.
+
+    x: (b, s, h, p)   dt: (b, s, h)   A: (h,) negative reals
+    B, C: (b, s, g, n) with h % g == 0.
+    Returns (y (b,s,h,p) fp32, final_state (b,h,p,n) fp32).
+
+      state_t = exp(dt_t * A) * state_{t-1} + dt_t * x_t B_t^T
+      y_t     = C_t . state_t  (+ D * x_t)
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # (b,s,h,n)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp            # (b,h,p), (b,h), (b,h,n) x2
+        decay = jnp.exp(dt_t * A[None, :])   # (b,h)
+        state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, B_t))
+        y_t = jnp.einsum("bhn,bhpn->bhp", C_t, state)
+        return state, y_t
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = lax.scan(
+        step, init,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)
+    if D_skip is not None:
+        y = y + D_skip[None, None, :, None] * xf
+    return y, final

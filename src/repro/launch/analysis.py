@@ -1,0 +1,123 @@
+"""Compiled-artifact analysis: collective-byte parsing + roofline terms.
+
+``cost_analysis`` gives per-device HLO FLOPs and bytes; collective bytes
+are not included, so we parse the post-SPMD HLO text and sum the result-
+shape bytes of every collective op.  Hardware constants are TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS_BF16 = 197e12         # FLOP/s
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9                   # B/s
+ICI_BW = 50e9                    # B/s per link
+HBM_BYTES = 16 * 2 ** 30         # 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+([a-z0-9\[\],{}()\s]*?)\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:  # async pair: count only the start
+            continue
+        kind = m.group(2).lower()
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        if not self.model_flops_per_device:
+            return None
+        return self.model_flops_per_device / max(self.flops_per_device, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the step achieves if every
+        term overlapped perfectly: compute_time / bound_time."""
+        return self.compute_s / max(self.bound_s, 1e-12)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_fraction": self.useful_flops_fraction,
+        }
+
+
+def model_flops_train(n_params_active: int, n_tokens: int) -> float:
+    """6ND — fwd (2ND) + bwd (4ND)."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def model_flops_decode(n_params_active: int, n_tokens: int) -> float:
+    """2ND per generated token (matmul params only; attention extra)."""
+    return 2.0 * n_params_active * n_tokens

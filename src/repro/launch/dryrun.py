@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: for each of the 40 assigned cells we build the jitted step
+(train / prefill / serve) with full production shardings, ``.lower()``
+against ShapeDtypeStruct inputs (no allocation), ``.compile()`` for the
+single-pod (16, 16) = 256-chip mesh and the multi-pod (2, 16, 16) =
+512-chip mesh, then extract:
+
+  * ``compiled.memory_analysis()``  — per-device bytes (does it fit HBM)
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the post-SPMD optimized HLO text
+
+and write one JSON artifact per cell under artifacts/dryrun/, which
+benchmarks/roofline.py and EXPERIMENTS.md consume.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-12b \
+        --shape train_4k --mesh single,multi
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+import argparse
+import dataclasses
+import math
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch, supports
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.ctx import use_sharding
+from repro.distributed.partition import (
+    make_ctx, match_partition_rules, named_shardings, resolve_param_spec)
+from repro.distributed.rules import CACHE_RULES, LM_RULES
+from repro.launch.analysis import (
+    HBM_BYTES, RooflineTerms, collective_bytes, model_flops_decode,
+    model_flops_train)
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import default_opt_cfg, make_train_step
+from repro.models.registry import build_model, input_specs
+from repro.optim.adamw import adamw_init
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# per-shape sharding policy
+# ---------------------------------------------------------------------------
+
+def ctx_overrides(shape: ShapeSpec, cfg: ArchConfig) -> dict:
+    """Train/prefill shard the sequence dim over the model axis (sequence
+    parallelism) — without it the 4k x 5120 residual carries of a 40-layer
+    remat'd scan exceed HBM.  Decode keeps sp off (single-token)."""
+    overrides = {}
+    if shape.kind in ("train", "prefill"):
+        overrides["sp"] = ("model",)
+    if shape.kind in ("prefill", "decode") and not cfg.zero_infer:
+        overrides["fsdp"] = None      # replicate params over the data axis
+    return overrides
+
+
+def long_ctx_variant(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """At long_500k the hybrid archs switch their global-attention slots
+    to the paper's relu_linear backend (O(1) state) per DESIGN.md §6."""
+    if shape.name == "long_500k" and cfg.family in ("zamba2", "gemma3"):
+        return cfg.scaled(attn_backend="relu_linear")
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# spec/shardings assembly
+# ---------------------------------------------------------------------------
+
+def _nsh(ctx, axes, shape):
+    """Divisibility-aware NamedSharding for an input/output tensor —
+    ``jit`` in_shardings (unlike with_sharding_constraint) hard-error on
+    non-dividing dims, e.g. the batch=1 long_500k cells."""
+    return NamedSharding(ctx.mesh, resolve_param_spec(ctx, axes, shape))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, meta)."""
+    cfg = long_ctx_variant(cfg, shape)
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, ctx_overrides(shape, cfg))
+    if cfg.w8 and shape.kind in ("prefill", "decode"):
+        from repro.core.quantization import quantize_lm_params
+        params_tmpl = jax.eval_shape(
+            lambda: quantize_lm_params(model.init(jax.random.PRNGKey(0))))
+    else:
+        params_tmpl = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = match_partition_rules(LM_RULES, params_tmpl, ctx)
+    p_sh = named_shardings(p_specs, mesh)
+    repl = NamedSharding(mesh, P())
+
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = default_opt_cfg(cfg)
+        opt_tmpl = jax.eval_shape(
+            lambda p: adamw_init(p, opt_cfg), params_tmpl)
+        o_sh = {"step": repl, "m": p_sh, "v": p_sh}
+        if "master" in opt_tmpl:
+            o_sh["master"] = p_sh
+        b_sh = {k: _nsh(ctx, ("dp",) + (None,) * (v.ndim - 1), v.shape)
+                for k, v in specs.items()}
+        fn = make_train_step(model, opt_cfg, grad_accum=cfg.grad_accum)
+        args = (params_tmpl, opt_tmpl, specs)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, repl)
+        n_params = sum(
+            math.prod(x.shape)
+            for x in jax.tree_util.tree_leaves(params_tmpl))
+        meta = {"kind": "train", "n_params": n_params}
+        return fn, args, in_sh, out_sh, ctx, meta
+
+    if shape.kind == "prefill":
+        b_sh = {k: _nsh(ctx, ("dp",) + (None,) * (v.ndim - 1), v.shape)
+                for k, v in specs.items()}
+        fn = lambda params, batch: model.prefill(params, batch)  # noqa: E731
+        out_tmpl = jax.eval_shape(
+            lambda p, b: model.prefill(p, b), params_tmpl, specs)
+        if cfg.family == "encdec":   # enc-dec prefill -> serve state only
+            c_specs = match_partition_rules(CACHE_RULES, out_tmpl, ctx)
+            out_sh = named_shardings(c_specs, mesh)
+        else:
+            c_specs = match_partition_rules(CACHE_RULES, out_tmpl[1], ctx)
+            c_sh = named_shardings(c_specs, mesh)
+            B = shape.global_batch
+            out_sh = (_nsh(ctx, ("dp", "vocab"), (B, cfg.vocab)), c_sh)
+        args = (params_tmpl, specs)
+        return fn, args, (p_sh, b_sh), out_sh, ctx, {"kind": "prefill"}
+
+    # decode
+    caches_tmpl = specs["caches"]
+    c_specs = match_partition_rules(CACHE_RULES, caches_tmpl, ctx)
+    c_sh = named_shardings(c_specs, mesh)
+    B = shape.global_batch
+    tok_sh = _nsh(ctx, ("dp", None), (B, 1))
+    logits_sh = _nsh(ctx, ("dp", "vocab"), (B, cfg.vocab))
+
+    fn = lambda params, caches, tokens, pos: model.decode(  # noqa: E731
+        params, caches, tokens, pos)
+    args = (params_tmpl, caches_tmpl, specs["tokens"], specs["pos"])
+    in_sh = (p_sh, c_sh, tok_sh, repl)
+    out_sh = (logits_sh, c_sh)
+    return fn, args, in_sh, out_sh, ctx, {"kind": "decode"}
+
+
+# ---------------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: ArchConfig, n_params: int) -> float:
+    """Active (per-token) parameter count for MODEL_FLOPS."""
+    if cfg.n_experts and cfg.top_k:
+        # replace total expert params by top_k of them
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        total_moe = cfg.n_layers * cfg.n_experts * per_expert
+        active_moe = cfg.n_layers * cfg.top_k * per_expert
+        return n_params - total_moe + active_moe
+    return float(n_params)
+
+
+def parse_variant(spec: str) -> dict:
+    """'flash_vjp=True,q_chunk=512' -> typed override dict."""
+    out = {}
+    if not spec:
+        return out
+    for kv in spec.split(","):
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             *, out_dir: str = ARTIFACT_DIR, tag: str = "",
+             variant: str = "") -> dict:
+    cfg = get_arch(arch_name)
+    if variant:
+        cfg = cfg.scaled(**parse_variant(variant))
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    ok, reason = supports(cfg, shape)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return _write(rec, out_dir)
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    try:
+        fn, args, in_sh, out_sh, ctx, meta = build_cell(cfg, shape, mesh)
+        with use_sharding(ctx), mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        hlo = compiled.as_text()
+        # trip-count-aware accounting (XLA's cost_analysis counts while
+        # bodies once — see launch/hlo_cost.py); XLA numbers kept as ref.
+        hc = analyze_hlo(hlo)
+
+        n_params = meta.get("n_params") or sum(
+            math.prod(x.shape)
+            for x in jax.tree_util.tree_leaves(args[0]))
+        n_active = active_params(cfg, n_params)
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            mflops = model_flops_train(n_active, tokens) / n_dev
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            mflops = 2.0 * n_active * tokens / n_dev
+        else:
+            mflops = model_flops_decode(n_active, shape.global_batch) / n_dev
+
+        terms = RooflineTerms(
+            flops_per_device=hc.flops,
+            bytes_per_device=hc.bytes,
+            collective_bytes_per_device=hc.collective_bytes,
+            model_flops_per_device=mflops,
+        )
+        mem_fields = {
+            k: int(getattr(mem, k))
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        peak = (mem_fields.get("temp_size_in_bytes", 0)
+                + mem_fields.get("argument_size_in_bytes", 0))
+        rec.update(
+            status="ok",
+            seconds=round(time.time() - t0, 1),
+            devices=n_dev,
+            n_params=int(n_params),
+            n_active_params=int(n_active),
+            memory=mem_fields,
+            fits_hbm=bool(peak <= HBM_BYTES),
+            peak_bytes_per_device=int(peak),
+            xla_cost={k: float(cost.get(k, 0.0))
+                      for k in ("flops", "bytes accessed", "transcendentals")},
+            collectives={k: float(v)
+                         for k, v in (hc.coll_by_kind or {}).items()},
+            hlo_cost={"flops": hc.flops, "bytes": hc.bytes,
+                      "dot_flops": hc.dot_flops,
+                      "collective_bytes": hc.collective_bytes,
+                      "n_while": hc.n_while,
+                      "unknown_loops": hc.unknown_loops},
+            roofline=terms.to_dict(),
+        )
+    except Exception as e:  # record the failure — it is a bug to fix
+        rec.update(status="error", seconds=round(time.time() - t0, 1),
+                   error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    return _write(rec, out_dir)
+
+
+def _write(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dom={r['dominant']} roofline={r['roofline_fraction']:.2f}"
+                 f" peakGB={rec['peak_bytes_per_device'] / 2**30:.1f}")
+    elif status == "error":
+        extra = " " + rec["error"][:120]
+    elif status == "skipped":
+        extra = " " + rec["reason"][:80]
+    print(f"[{status}] {rec['arch']} x {rec['shape']} x {rec['mesh']}"
+          f"{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--variant", default="",
+                    help="config overrides, e.g. flash_vjp=True,q_chunk=512")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in ARCHS:
+            for s in SHAPES:
+                ok, why = supports(get_arch(a), SHAPES[s])
+                print(f"{a:24s} {s:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = args.mesh.split(",")
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                tag = f"_{args.tag}" if args.tag else ""
+                fname = os.path.join(args.out, f"{a}__{s}__{m}{tag}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    with open(fname) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {a} x {s} x {m}", flush=True)
+                        continue
+                results.append(run_cell(a, s, m == "multi",
+                                        out_dir=args.out, tag=args.tag,
+                                        variant=args.variant))
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} cells run, {len(bad)} errors")
+    if bad:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

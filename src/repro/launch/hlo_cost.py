@@ -1,0 +1,442 @@
+"""Trip-count-aware cost analysis over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, but our
+models scan layers (and chunk attention) with ``lax.scan`` — a 40-layer
+model's FLOPs come back 40x under-counted, and per-layer collectives
+likewise.  This module re-derives the three roofline inputs by parsing
+the HLO text and multiplying loop bodies by their trip counts:
+
+  * **flops**      — 2 * prod(out) * contraction for every ``dot`` (plus
+    ``convolution``), nested-loop aware.  Elementwise FLOPs are excluded
+    deliberately: MODEL_FLOPS (6ND) is matmul-only too, so the
+    useful-compute ratio compares like with like.
+  * **bytes**      — per top-level instruction, operands + outputs
+    (the standard XLA traffic assumption: each instruction round-trips
+    HBM; fusions count at the call boundary only, so fused elementwise
+    chains are counted once — matching how a fused TPU kernel behaves).
+  * **collectives** — on-wire bytes per device with ring-collective
+    multipliers: all-reduce 2x operand, all-gather ~result,
+    reduce-scatter / all-to-all / collective-permute ~operand.
+
+Shapes in post-SPMD HLO are per-device, so every number is per-device.
+
+HLO text format notes (XLA CPU, jax 0.8): computation headers start at
+column 0 and end with ``{``; instructions reference operands by bare
+``%name`` (no inline types), so each computation builds a symbol table of
+instruction -> result shape; scan trip counts live in the loop condition
+as an s32 constant feeding a (possibly fused) ``compare direction=LT``.
+Loops whose trip count cannot be recovered default to 1 and are counted
+in ``unknown_loops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:body|calls|to_apply)=%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_ATTR = re.compile(r'known_trip_count=\{["\s]*n["\s]*[:=]["\s]*(\d+)')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"feature_group_count=(\d+)")
+_CONST_VAL = re.compile(r"constant\((-?\d+)\)")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-start", "copy-done",
+    "iota",
+}
+
+# Elementwise ops are ALWAYS fused on TPU (into their producer/consumer);
+# counting their in+out would model the unfused CPU codegen instead of
+# the target hardware.  Their traffic is already captured at the producer
+# output / consumer input boundaries.
+ELEMENTWISE_SKIP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "and",
+    "or", "xor", "not", "negate", "abs", "exponential", "exp", "log",
+    "tanh", "sqrt", "rsqrt", "power", "select", "compare", "convert",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "cosine", "sine", "logistic", "clamp", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "is-finite", "expm1",
+    "log1p", "atan2", "remainder", "broadcast", "exponential-minus-one",
+    "log-plus-one",
+}
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    out_str: str
+    op: str
+    rest: str             # everything after the opening paren
+
+    _operands: Optional[list] = None
+    _attrs: Optional[str] = None
+
+    def split_rest(self):
+        """-> (operand_str, attr_str); cut at the paren that closes the
+        operand list (depth-aware: tuple types inside are rare but legal)."""
+        if self._operands is not None:
+            return self._operands, self._attrs
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    self._operands = self.rest[:i]
+                    self._attrs = self.rest[i + 1:]
+                    return self._operands, self._attrs
+        self._operands, self._attrs = self.rest, ""
+        return self._operands, self._attrs
+
+    def operand_names(self) -> list[str]:
+        ops, _ = self.split_rest()
+        return _OPND_RE.findall(ops)
+
+    def attrs(self) -> str:
+        _, a = self.split_rest()
+        return a
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    unknown_loops: int = 0
+    n_while: int = 0
+    max_trip_product: float = 1.0
+
+    def add_scaled(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.dot_flops += other.dot_flops * mult
+        self.conv_flops += other.conv_flops * mult
+        self.unknown_loops += other.unknown_loops
+        self.n_while += other.n_while
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.insts: list[Inst] = []
+        self.shapes: dict[str, str] = {}   # inst name -> result type str
+
+    def add(self, inst: Inst):
+        self.insts.append(inst)
+        self.shapes[inst.name] = inst.out_str
+
+
+def parse_computations(hlo: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        if not raw:
+            continue
+        if raw[0] not in " }":
+            stripped = raw.rstrip()
+            if stripped.endswith("{") and ("->" in stripped
+                                           or stripped.startswith("ENTRY")):
+                is_entry = stripped.startswith("ENTRY")
+                name_tok = stripped.split()[1] if is_entry else \
+                    stripped.split()[0]
+                # name token ends at the first '('
+                name = name_tok.split("(")[0].lstrip("%")
+                cur = Computation(name)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INST_RE.match(raw)
+        if m:
+            cur.add(Inst(m.group(1), m.group(2).strip(), m.group(3),
+                         m.group(4)))
+    return comps, entry
+
+
+def _operand_bytes(inst: Inst, comp: Computation) -> int:
+    total = 0
+    for nm in inst.operand_names():
+        if nm in comp.shapes:
+            total += _shape_bytes(comp.shapes[nm])
+    return total
+
+
+def _first_operand_dims(inst: Inst, comp: Computation) -> list[int]:
+    names = inst.operand_names()
+    if names and names[0] in comp.shapes:
+        return _shape_dims(comp.shapes[names[0]])
+    return []
+
+
+def _dot_flops(inst: Inst, comp: Computation) -> float:
+    out_elems = _shape_elems(inst.out_str)
+    contraction = 1
+    m = _CONTRACT.search(inst.attrs())
+    lhs = _first_operand_dims(inst, comp)
+    if m and m.group(1) and lhs:
+        for d in m.group(1).split(","):
+            i = int(d)
+            if i < len(lhs):
+                contraction *= lhs[i]
+    return 2.0 * out_elems * contraction
+
+
+def _conv_flops(inst: Inst, comp: Computation) -> float:
+    out_elems = _shape_elems(inst.out_str)
+    names = inst.operand_names()
+    if len(names) < 2 or names[1] not in comp.shapes:
+        return 0.0
+    k = _shape_dims(comp.shapes[names[1]])
+    if len(k) < 2:
+        return 0.0
+    m = _GROUPS.search(inst.attrs())
+    groups = int(m.group(1)) if m else 1
+    red = 1
+    for d in k[:-1]:          # HWIO: spatial dims * input channels
+        red *= d
+    return 2.0 * out_elems * red / max(groups, 1)
+
+
+def _constants_in(comp: Computation, comps: dict, depth: int = 0) -> list:
+    vals = []
+    if depth > 3:
+        return vals
+    for inst in comp.insts:
+        if inst.op == "constant":
+            m = _CONST_VAL.search("constant(" + inst.rest)
+            if m and "s32" in inst.out_str:
+                vals.append(int(m.group(1)))
+        cm = _CALL_ATTR.search(inst.attrs() if "(" in inst.rest else inst.rest)
+        if cm and cm.group(1) in comps and inst.op in ("fusion", "call"):
+            vals.extend(_constants_in(comps[cm.group(1)], comps, depth + 1))
+    return vals
+
+
+def _trip_count(inst: Inst, comps: dict) -> Optional[int]:
+    m = _TRIP_ATTR.search(inst.attrs())
+    if m:
+        return int(m.group(1))
+    m = _COND_ATTR.search(inst.attrs())
+    if not m or m.group(1) not in comps:
+        return None
+    cond = comps[m.group(1)]
+    consts = [v for v in _constants_in(cond, comps) if v > 0]
+    if consts:
+        return max(consts)   # lax.scan: single bound constant, LT
+    return None
+
+
+_HEAVY_OPS = {
+    "dot", "convolution", "dynamic-update-slice", "dynamic-slice", "gather",
+    "scatter", "reduce", "reduce-window", "sort", "concatenate", "pad",
+    "while", "fusion", "call", "transpose", "reverse", "slice", "copy",
+}
+
+
+def _is_light_fusion(comp: Computation) -> bool:
+    """True if the fused computation is pure elementwise/broadcast work.
+
+    CPU XLA emits many tiny kLoop fusions (mask select, exp, convert…)
+    that TPU XLA would merge into the neighbouring dot/reduce loop; their
+    boundary traffic is captured by those neighbours, so counting them
+    separately double-charges every elementwise pass.
+    """
+    for inst in comp.insts:
+        if inst.op in _HEAVY_OPS:
+            return False
+    return True
+
+
+def _fusion_alias_correction(comp: Computation) -> tuple[int, int]:
+    """(bytes to subtract, bytes to add) at a fusion call boundary.
+
+    Two in-place patterns inflate naive operand+output counting:
+      * dynamic-update-slice: the full buffer enters AND leaves the fusion
+        but only the update slice moves (scan ``ys`` stacking, KV-cache
+        append) -> subtract 2x buffer, add 2x update.
+      * dynamic-slice of a fusion parameter: the full buffer enters but
+        only the slice is read (scan reading one layer's params) ->
+        subtract 1x buffer (once per distinct parameter), add 1x slice.
+    """
+    sub, add = 0, 0
+    param_shapes = {i.name: i.out_str for i in comp.insts
+                    if i.op == "parameter"}
+    seen: set = set()
+    for inst in comp.insts:
+        if inst.op == "dynamic-update-slice":
+            names = inst.operand_names()
+            if names and names[0] in comp.shapes:
+                sub += 2 * _shape_bytes(comp.shapes[names[0]])
+            if len(names) > 1 and names[1] in comp.shapes:
+                add += 2 * _shape_bytes(comp.shapes[names[1]])
+        elif inst.op == "dynamic-slice":
+            names = inst.operand_names()
+            if names and names[0] in param_shapes:
+                if names[0] not in seen:
+                    seen.add(names[0])
+                    sub += _shape_bytes(param_shapes[names[0]])
+                add += _shape_bytes(inst.out_str)
+    return sub, add
+
+
+def _coll_wire_bytes(inst: Inst, comp: Computation) -> float:
+    out_b = _shape_bytes(inst.out_str)
+    in_b = _operand_bytes(inst, comp)
+    op = inst.op.replace("-start", "")
+    if op == "all-reduce":
+        return 2.0 * in_b
+    if op == "all-gather":
+        return float(out_b)
+    return float(in_b)       # reduce-scatter / all-to-all / permute
+
+
+def cost_of(comp_name: str, comps: dict, memo: dict) -> HloCost:
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps[comp_name]
+    total = HloCost()
+    for inst in comp.insts:
+        op = inst.op
+        if op.endswith("-done"):
+            continue
+        base = op.replace("-start", "")
+        if base in COLLECTIVES:
+            wire = _coll_wire_bytes(inst, comp)
+            total.collective_bytes += wire
+            total.coll_by_kind[base] = total.coll_by_kind.get(base, 0) + wire
+            total.bytes += (_shape_bytes(inst.out_str)
+                            + _operand_bytes(inst, comp))
+            continue
+        if op == "while":
+            total.n_while += 1
+            trip = _trip_count(inst, comps)
+            if trip is None:
+                trip = 1
+                total.unknown_loops += 1
+            body = _CALL_ATTR.search(inst.attrs())
+            if body and body.group(1) in comps:
+                inner = cost_of(body.group(1), comps, memo)
+                total.add_scaled(inner, trip)
+                total.max_trip_product = max(
+                    total.max_trip_product, trip * inner.max_trip_product)
+            continue
+        if op in ("fusion", "call", "conditional", "async-start"):
+            m = _CALL_ATTR.search(inst.attrs())
+            boundary = (_shape_bytes(inst.out_str)
+                        + _operand_bytes(inst, comp))
+            if m and m.group(1) in comps:
+                inner_comp = comps[m.group(1)]
+                inner = cost_of(m.group(1), comps, memo)
+                # flops & collectives surface; bytes stay at the boundary
+                total.flops += inner.flops
+                total.dot_flops += inner.dot_flops
+                total.conv_flops += inner.conv_flops
+                total.collective_bytes += inner.collective_bytes
+                for k, v in inner.coll_by_kind.items():
+                    total.coll_by_kind[k] = total.coll_by_kind.get(k, 0) + v
+                if op == "fusion" and _is_light_fusion(inner_comp):
+                    continue   # pure-elementwise: fuses into neighbours
+                # in-place DUS / sliced-param aliasing corrections
+                sub, add = _fusion_alias_correction(inner_comp)
+                boundary = max(0, boundary - sub) + add
+            total.bytes += boundary
+            continue
+        if op == "dot":
+            f = _dot_flops(inst, comp)
+            total.flops += f
+            total.dot_flops += f
+        elif op == "convolution":
+            f = _conv_flops(inst, comp)
+            total.flops += f
+            total.conv_flops += f
+        if op in SKIP_BYTES_OPS or op in ELEMENTWISE_SKIP:
+            continue
+        if op == "dynamic-slice":
+            total.bytes += 2 * _shape_bytes(inst.out_str)
+            continue
+        if op == "dynamic-update-slice":
+            names = inst.operand_names()
+            upd = (_shape_bytes(comp.shapes[names[1]])
+                   if len(names) > 1 and names[1] in comp.shapes else
+                   _shape_bytes(inst.out_str))
+            total.bytes += 2 * upd
+            continue
+        if op == "slice":
+            total.bytes += 2 * _shape_bytes(inst.out_str)
+            continue
+        if op == "copy":
+            # buffer-assignment copies are mostly elided / fused on TPU;
+            # count the write only
+            total.bytes += _shape_bytes(inst.out_str)
+            continue
+        total.bytes += (_shape_bytes(inst.out_str)
+                        + _operand_bytes(inst, comp))
+    memo[comp_name] = total
+    return total
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return cost_of(entry, comps, {})

@@ -1,0 +1,128 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Per-instruction profile of one dry-run cell: top byte / collective /
+flop contributors with loop-trip multipliers — the 'profiler' of the
+perf-iteration loop (there is no wall-clock on CPU; this is the
+structural profile the §Perf methodology reads).
+
+    PYTHONPATH=src python -m repro.launch.profile_cell \
+        --arch stablelm-12b --shape train_4k [--variant k=v,...] [--top 15]
+"""
+import argparse
+
+import jax
+
+import repro.launch.hlo_cost as hc
+from repro.configs import SHAPES, get_arch
+from repro.distributed.ctx import use_sharding
+from repro.launch.dryrun import build_cell, parse_variant
+from repro.launch.mesh import make_production_mesh
+
+
+def collect(hlo_text, kind="bytes"):
+    comps, entry = hc.parse_computations(hlo_text)
+    rows = []
+
+    def walk(cname, mult):
+        comp = comps[cname]
+        for inst in comp.insts:
+            op = inst.op
+            if op.endswith("-done") or op in hc.SKIP_BYTES_OPS:
+                continue
+            if op == "while":
+                body = hc._CALL_ATTR.search(inst.attrs())
+                t = hc._trip_count(inst, comps) or 1
+                if body and body.group(1) in comps:
+                    walk(body.group(1), mult * t)
+                continue
+            base = op.replace("-start", "")
+            if kind == "coll":
+                if base in hc.COLLECTIVES:
+                    rows.append((hc._coll_wire_bytes(inst, comp) * mult,
+                                 base, inst.name, inst.out_str[:70]))
+                elif op in ("fusion", "call"):
+                    pass
+                continue
+            if kind == "flops":
+                if op == "dot":
+                    rows.append((hc._dot_flops(inst, comp) * mult, op,
+                                 inst.name, inst.out_str[:70]))
+                elif op in ("fusion", "call"):
+                    m = hc._CALL_ATTR.search(inst.attrs())
+                    if m and m.group(1) in comps:
+                        inner = hc.cost_of(m.group(1), comps, {})
+                        if inner.flops:
+                            rows.append((inner.flops * mult, "fusion(dot)",
+                                         inst.name, inst.out_str[:70]))
+                continue
+            # bytes
+            if op in hc.ELEMENTWISE_SKIP:
+                continue
+            if op in ("fusion", "call", "conditional", "async-start"):
+                m = hc._CALL_ATTR.search(inst.attrs())
+                b = hc._shape_bytes(inst.out_str) + hc._operand_bytes(inst, comp)
+                if m and m.group(1) in comps:
+                    if op == "fusion" and hc._is_light_fusion(comps[m.group(1)]):
+                        continue
+                    sub, add = hc._fusion_alias_correction(comps[m.group(1)])
+                    b = max(0, b - sub) + add
+            elif op in ("dynamic-slice", "slice"):
+                b = 2 * hc._shape_bytes(inst.out_str)
+            elif op == "dynamic-update-slice":
+                names = inst.operand_names()
+                b = 2 * (hc._shape_bytes(comp.shapes[names[1]])
+                         if len(names) > 1 and names[1] in comp.shapes
+                         else hc._shape_bytes(inst.out_str))
+            elif op == "copy":
+                b = hc._shape_bytes(inst.out_str)
+            else:
+                b = hc._shape_bytes(inst.out_str) + hc._operand_bytes(inst, comp)
+            rows.append((b * mult, op, inst.name, inst.out_str[:70]))
+
+    walk(entry, 1)
+    rows.sort(reverse=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.variant:
+        cfg = cfg.scaled(**parse_variant(args.variant))
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    fn, fargs, in_sh, out_sh, ctx, meta = build_cell(cfg, shape, mesh)
+    with use_sharding(ctx), mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*fargs).compile()
+    hlo = compiled.as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(hlo)
+    c = hc.analyze_hlo(hlo)
+    print(f"== {args.arch} x {args.shape} "
+          f"{'(variant ' + args.variant + ')' if args.variant else ''}")
+    print(f"flops={c.flops:.3e}  bytes={c.bytes:.3e}  "
+          f"coll={c.collective_bytes:.3e}")
+    print(f"compute_s={c.flops / 197e12:.3f}  memory_s={c.bytes / 819e9:.3f}"
+          f"  coll_s={c.collective_bytes / 50e9:.3f}")
+    mem = compiled.memory_analysis()
+    print(f"peak temp {mem.temp_size_in_bytes / 2**30:.1f} GB  "
+          f"args {mem.argument_size_in_bytes / 2**30:.1f} GB")
+    for kind, unit in (("bytes", 1e9), ("coll", 1e9), ("flops", 1e12)):
+        print(f"\n-- top {kind} --")
+        for val, op, nm, osh in collect(hlo, kind)[: args.top]:
+            print(f"  {val / unit:9.2f}{'GB' if unit == 1e9 else 'TF'} "
+                  f"{op:18s} {nm[:40]:40s} {osh}")
+
+
+if __name__ == "__main__":
+    main()

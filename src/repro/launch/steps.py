@@ -1,0 +1,86 @@
+"""Step builders shared by the dry-run, the trainer and the server.
+
+``make_train_step``: loss -> grads -> AdamW update, one jittable function.
+``make_serve_step``: one-token decode against a cache pytree.
+Both are pure (params/state in, params/state out) so pjit can shard them
+freely; sharding context is installed by the caller around lower()/call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model, build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def default_opt_cfg(cfg: ArchConfig) -> AdamWConfig:
+    # bf16 moments + no separate master for bf16-param archs: the ZeRO
+    # memory recipe that lets kimi-k2 fit (EXPERIMENTS.md memory table).
+    big = cfg.n_experts >= 64 or cfg.d_model * cfg.n_layers > 4096 * 64
+    return AdamWConfig(
+        state_dtype="bfloat16" if big else None,
+        master_dtype=None if big else "float32",
+    )
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    grad_accum: int = 1):
+    """grad_accum > 1: scan over microbatches, accumulating fp32 grads —
+    the memory knob that trades peak activation bytes for steps (the
+    dry-run cells that overflow HBM at 256 chips fit with accum=2-4)."""
+    if grad_accum <= 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            new_params, new_opt = adamw_update(grads, opt_state, params,
+                                               opt_cfg)
+            return new_params, new_opt, loss.astype(jnp.float32)
+
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def micro(b):
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), b)
+
+        micro_batch = micro(batch)
+
+        def body(carry, mb):
+            loss_acc, gacc = carry
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (loss_acc + loss.astype(jnp.float32), gacc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), g0), micro_batch)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: (g / grad_accum).astype(p.dtype), gsum, params)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, loss_sum / grad_accum
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, caches, tokens, pos):
+        return model.decode(params, caches, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def init_train_state(model: Model, opt_cfg: AdamWConfig, key):
+    params = model.init(key)
+    opt_state = adamw_init(params, opt_cfg)
+    return params, opt_state

@@ -1,0 +1,60 @@
+"""Training launcher (host-scale): ``python -m repro.launch.train``.
+
+Runs the fault-tolerant Trainer on whatever devices exist (real TPUs in
+production; fake CPU devices under XLA_FLAGS for local testing).  The
+same ArchConfig/partition-rule/step machinery as the multi-pod dry-run,
+so what trains here is what lowers there.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --smoke --steps 50 --batch 8 --seq 128
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-1.3b \
+        --smoke --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import smoke_variant
+from repro.data.pipeline import DataConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    arch = get_arch(args.arch)
+    if args.smoke:
+        arch = smoke_variant(arch)
+    data_cfg = DataConfig(vocab=arch.vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, seed=args.seed,
+                         log_every=args.log_every)
+    trainer = Trainer(arch, data_cfg, tcfg)
+    out = trainer.run()
+    print(f"final loss: {out['final_loss']:.4f} "
+          f"(first: {out['losses'][0]:.4f}) over {len(out['losses'])} steps "
+          f"on {len(jax.devices())} device(s)")
+
+
+if __name__ == "__main__":
+    main()

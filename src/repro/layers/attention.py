@@ -1,0 +1,509 @@
+"""Attention layer with three backends.
+
+``softmax``      — GQA full attention; training/prefill uses a chunked
+                   online-softmax ("flash"-style) lax.scan so N x N score
+                   matrices are never materialized at once.
+``sliding``      — block-local sliding-window attention (exact for
+                   window <= block), gemma3's local layers.
+``relu_linear``  — the paper's ReLU linear attention (EfficientViT MSA's
+                   global-attention core) in causal LM form: chunked
+                   prefix-state scan for training, O(1) recurrent state
+                   for decode.  This is what makes long_500k feasible.
+
+Layout note: training/prefill compute runs in flat-head (B, S, H, Dh)
+layout with K/V repeated to full heads — grouped 5-D (B, S, KV, G, Dh)
+layouts force GSPMD into involuntary resharding ("full rematerialization"
+warnings) because head tiles can't transition across the grouped reshape.
+The flat layout shards cleanly on the model axis.  Decode caches keep the
+compact GQA (B, S, KV, Dh) layout; repetition happens on the fly.
+
+All backends share one GQA projection layout and RoPE.  Decode paths take
+and return a cache pytree; softmax/sliding use a ring KV cache, relu_linear
+uses a (kv_heads, d, d) running state + (kv_heads, d) normalizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import shard
+from repro.layers.linear import init_linear, linear
+from repro.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    backend: str = "softmax"        # softmax | sliding | relu_linear
+    window: int = 1024               # sliding backend only
+    qkv_bias: bool = False           # qwen2.5
+    rope_theta: float = 10000.0
+    causal: bool = True
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    flash_vjp: bool = False          # custom-VJP flash (recompute-in-bwd)
+    fused_qkv: bool = False          # one QKV matmul (1 dx all-reduce, not 3)
+    score_dtype: str = "float32"     # bf16: halve score-chunk HBM traffic
+    pad_heads_to: int = 0            # pad flat heads to this count so the
+                                     # model axis divides them (qwen: 40->48)
+    dtype: jnp.dtype = jnp.float32   # param dtype
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv * self.head_dim
+
+
+def init_attention(key, cfg: AttnConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    if cfg.fused_qkv:
+        return {
+            "wqkv": init_linear(kq, cfg.d_model, cfg.q_dim + 2 * cfg.kv_dim,
+                                bias=cfg.qkv_bias, dtype=cfg.dtype),
+            "wo": init_linear(ko, cfg.q_dim, cfg.d_model, bias=False,
+                              dtype=cfg.dtype),
+        }
+    return {
+        "wq": init_linear(kq, cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias, dtype=cfg.dtype),
+        "wk": init_linear(kk, cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias, dtype=cfg.dtype),
+        "wv": init_linear(kv, cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias, dtype=cfg.dtype),
+        "wo": init_linear(ko, cfg.q_dim, cfg.d_model, bias=False, dtype=cfg.dtype),
+    }
+
+
+def _raw_qkv(params, x, cfg: AttnConfig):
+    """Project x -> (q, k, v) raw (pre-RoPE), fused or separate."""
+    B, S, _ = x.shape
+    if "wqkv" in params:
+        qkv = linear(params["wqkv"], x)
+        q = qkv[..., : cfg.q_dim]
+        k = qkv[..., cfg.q_dim : cfg.q_dim + cfg.kv_dim]
+        v = qkv[..., cfg.q_dim + cfg.kv_dim :]
+    else:
+        q = linear(params["wq"], x)
+        k = linear(params["wk"], x)
+        v = linear(params["wv"], x)
+    return (q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+            k.reshape(B, S, cfg.n_kv, cfg.head_dim),
+            v.reshape(B, S, cfg.n_kv, cfg.head_dim))
+
+
+# Partition rules for these params (path-regex fragments, logical axes).
+ATTN_RULES = [
+    (r"w[qkv]/w$", ("fsdp", "tp")),
+    (r"w[qkv]/b$", ("tp",)),
+    (r"wo/w$", ("tp", "fsdp")),
+]
+
+
+def _repeat_kv(k, groups: int):
+    """(B, S, KV, Dh) -> (B, S, KV*G, Dh) flat-head layout."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _project_qkv(params, x, cfg: AttnConfig, positions):
+    """x: (B, S, D) -> q (B,S,H,Dh) flat heads; k, v (B,S,KV,Dh); RoPE'd.
+
+    q (and later the repeated k/v) are constrained onto the model axis by
+    head — the Megatron attention interior; the residual stream outside
+    stays sequence-sharded.
+    """
+    q, k, v = _raw_qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "dp", None, "heads", None)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# softmax backend: chunked online-softmax attention (flash-style in XLA)
+# --------------------------------------------------------------------------
+
+def _flash_chunk_scan(q, k, v, q_pos, kv_pos, *, causal: bool,
+                      window: Optional[int], kv_chunk: int,
+                      score_dtype=jnp.float32):
+    """Online-softmax attention of one q block against all kv chunks.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, H, Dh) (flat heads)
+    q_pos: (Sq,) kv_pos: (Skv,) absolute positions.
+    Returns (B, Sq, H, Dh) in fp32.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    assert Skv % kv_chunk == 0, (Skv, kv_chunk)
+    n_chunks = Skv // kv_chunk
+    scale = Dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    kc = k.reshape(B, n_chunks, kv_chunk, H, Dh)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, Dh)
+    pc = kv_pos.reshape(n_chunks, kv_chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, p_i = inp  # (B,C,H,Dh), (B,C,H,Dh), (C,)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, k_i.astype(jnp.float32))
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask &= p_i[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= p_i[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p.astype(score_dtype),
+                        v_i.astype(score_dtype),
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3)  # (B,Sq,H,Dh)
+
+
+def softmax_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                      q_chunk=1024, kv_chunk=1024, score_dtype="float32"):
+    """Full (optionally windowed) attention, chunked over q and kv.
+
+    q, k, v: flat-head (B, S, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    score_dtype = jnp.dtype(score_dtype)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, k.shape[1])
+    if Sq % q_chunk != 0:
+        q_chunk = Sq  # fallback: single q block
+    if k.shape[1] % kv_chunk != 0:
+        kv_chunk = k.shape[1]  # fallback: single kv chunk
+    nq = Sq // q_chunk
+    if nq == 1:
+        return _flash_chunk_scan(q, k, v, q_pos, kv_pos, causal=causal,
+                                 window=window, kv_chunk=kv_chunk,
+                                 score_dtype=score_dtype)
+    qb = q.reshape(B, nq, q_chunk, H, Dh)
+    pb = q_pos.reshape(nq, q_chunk)
+
+    def per_block(args):
+        qi, pi = args
+        return _flash_chunk_scan(qi, k, v, pi, kv_pos, causal=causal,
+                                 window=window, kv_chunk=kv_chunk,
+                                 score_dtype=score_dtype)
+
+    out = lax.map(per_block, (qb.transpose(1, 0, 2, 3, 4), pb))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+    return out
+
+
+# --------------------------------------------------------------------------
+# sliding backend: block-local attention, exact for window <= block
+# --------------------------------------------------------------------------
+
+def sliding_attention(q, k, v, q_pos, kv_pos, *, window: int):
+    """Causal sliding-window attention via self+previous block.
+
+    q, k, v: flat-head (B, S, H, Dh).  Requires S % window == 0 with
+    block == window; each query attends keys in [p - window + 1, p].
+    Compute is O(S * 2W) instead of O(S^2).
+    """
+    B, S, H, Dh = q.shape
+    block = window
+    if S % block != 0 or S <= block:
+        # degenerate sizes: fall back to masked chunked attention
+        return softmax_attention(q, k, v, q_pos, kv_pos, causal=True,
+                                 window=window)
+    nb = S // block
+    scale = Dh ** -0.5
+    qb = (q.astype(jnp.float32) * scale).reshape(B, nb, block, H, Dh)
+    kb = k.astype(jnp.float32).reshape(B, nb, block, H, Dh)
+    vb = v.astype(jnp.float32).reshape(B, nb, block, H, Dh)
+    # previous block of k/v (zeros before block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kcat = jnp.concatenate([kprev, kb], axis=2)  # (B,nb,2W,H,Dh)
+    vcat = jnp.concatenate([vprev, vb], axis=2)
+
+    s = jnp.einsum("bnqhd,bnchd->bnhqc", qb, kcat)
+    qi = jnp.arange(block)
+    ci = jnp.arange(2 * block)
+    # absolute distance key -> query: diff = qi - (ci - block)
+    diff = qi[:, None] - ci[None, :] + block
+    mask = (diff >= 0) & (diff < window)  # (Q, 2W) causal + window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    # kill phantom "previous block" keys of the first block (zero padding)
+    phantom = (ci[None, :] < block) & (jnp.arange(nb)[:, None] == 0)
+    s = jnp.where(phantom[None, :, None, None, :], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqc,bnchd->bnqhd", p, vcat)
+    return out.reshape(B, S, H, Dh)
+
+
+# --------------------------------------------------------------------------
+# relu_linear backend: the paper's technique, causal LM form
+# --------------------------------------------------------------------------
+
+def relu_linear_attention_causal(q, k, v, *, chunk: int = 256,
+                                 eps: float = 1e-6):
+    """Causal ReLU linear attention (EfficientViT's global attention).
+
+    out_t = (phi(q_t) @ S_t) / (phi(q_t) . z_t)
+      S_t = sum_{s<=t} phi(k_s) v_s^T          (Dh x Dh running state)
+      z_t = sum_{s<=t} phi(k_s)                 (Dh normalizer)
+
+    Chunked scan: intra-chunk via masked phiQ phiK^T (C x C), inter-chunk
+    via carried state — the same decomposition the paper's TMP dataflow
+    pipelines on the RPE/MAT engines, and the same skeleton as Mamba-2 SSD.
+    q, k, v: flat-head (B,S,H,Dh) -> (B,S,H,Dh) fp32
+    """
+    B, S, H, Dh = q.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    n = S // chunk
+    phi_q = jax.nn.relu(q.astype(jnp.float32)).reshape(B, n, chunk, H, Dh)
+    phi_k = jax.nn.relu(k.astype(jnp.float32)).reshape(B, n, chunk, H, Dh)
+    vc = v.astype(jnp.float32).reshape(B, n, chunk, H, Dh)
+    causal_mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def body(carry, inp):
+        state, zsum = carry          # (B,H,Dh,Dh), (B,H,Dh)
+        pq, pk, vi = inp             # (B,C,H,Dh) x3
+        # intra-chunk (quadratic within the chunk, causal-masked)
+        scores = jnp.einsum("bqhd,bchd->bhqc", pq, pk) * causal_mask
+        intra = jnp.einsum("bhqc,bchd->bqhd", scores, vi)
+        intra_z = jnp.sum(scores, axis=-1)  # (B,H,Q)
+        # inter-chunk (prefix state)
+        inter = jnp.einsum("bqhd,bhde->bqhe", pq, state)
+        inter_z = jnp.einsum("bqhd,bhd->bhq", pq, zsum)
+        num = intra + inter
+        den = (intra_z + inter_z).transpose(0, 2, 1)[..., None]  # (B,C,H,1)
+        out = num / jnp.maximum(den, eps)
+        # state update
+        state = state + jnp.einsum("bchd,bche->bhde", pk, vi)
+        zsum = zsum + jnp.sum(pk, axis=1)
+        return (state, zsum), out
+
+    s0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    z0 = jnp.zeros((B, H, Dh), jnp.float32)
+    (_, _), out = lax.scan(
+        body, (s0, z0),
+        (phi_q.transpose(1, 0, 2, 3, 4), phi_k.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4)),
+    )
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+
+
+def relu_linear_state(k, v):
+    """Final (state, zsum) in compact GQA layout from UNREPEATED k, v.
+
+    k, v: (B, S, KV, Dh) -> state (B, KV, Dh, Dh) fp32, zsum (B, KV, Dh).
+    Used by prefill to emit the O(1) decode cache.
+    """
+    pk = jax.nn.relu(k.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    state = jnp.einsum("bskd,bske->bkde", pk, vf)
+    zsum = jnp.sum(pk, axis=1)
+    return state, zsum
+
+
+def relu_linear_attention_noncausal(q, k, v, eps: float = 1e-6):
+    """Bidirectional form (EfficientViT/ViT usage): two small matmuls.
+
+    q, k, v: flat-head (B, S, H, Dh)."""
+    pq = jax.nn.relu(q.astype(jnp.float32))
+    pk = jax.nn.relu(k.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    state = jnp.einsum("bshd,bshe->bhde", pk, vf)      # phi(K)^T V
+    zsum = jnp.sum(pk, axis=1)                          # rowsum(phi(K))
+    num = jnp.einsum("bqhd,bhde->bqhe", pq, state)
+    den = jnp.einsum("bqhd,bhd->bqh", pq, zsum)[..., None]
+    return num / jnp.maximum(den, eps)
+
+
+# --------------------------------------------------------------------------
+# top-level train/prefill forward + decode
+# --------------------------------------------------------------------------
+
+def attention(params, x, cfg: AttnConfig, positions=None, *,
+              return_cache: bool = False, cache_dtype=jnp.bfloat16):
+    """Training / prefill forward.  x: (B, S, D) -> (B, S, D).
+
+    With ``return_cache=True`` also returns the decode cache as of the end
+    of the sequence (ring KV for softmax/sliding; running state for
+    relu_linear), enabling prefill->decode handoff.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    g = cfg.n_heads // cfg.n_kv
+    cache = None
+    if cfg.backend == "relu_linear" and cfg.causal and return_cache:
+        cache = dict(zip(("state", "zsum"), relu_linear_state(k, v)))
+    kh, vh = _repeat_kv(k, g), _repeat_kv(v, g)
+    H = cfg.n_heads
+    if cfg.pad_heads_to > H:
+        # zero-pad heads so the model axis divides them; dummy heads
+        # produce zeros (v=0) and are sliced away after the backend
+        padn = cfg.pad_heads_to - H
+        pad = lambda t: jnp.concatenate(  # noqa: E731
+            [t, jnp.zeros(t.shape[:2] + (padn, t.shape[3]), t.dtype)], 2)
+        q, kh, vh = pad(q), pad(kh), pad(vh)
+        q = shard(q, "dp", None, "heads", None)
+    kh = shard(kh, "dp", None, "heads", None)
+    vh = shard(vh, "dp", None, "heads", None)
+    if cfg.backend == "softmax":
+        if cfg.flash_vjp:
+            from repro.layers.flash import flash_attention
+            out = flash_attention(q, kh, vh, positions, positions,
+                                  cfg.causal, None, cfg.q_chunk,
+                                  cfg.kv_chunk)
+        else:
+            out = softmax_attention(q, kh, vh, positions, positions,
+                                    causal=cfg.causal, window=None,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk,
+                                    score_dtype=cfg.score_dtype)
+        if return_cache:
+            cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+    elif cfg.backend == "sliding":
+        if cfg.flash_vjp:
+            from repro.layers.flash import flash_attention
+            out = flash_attention(q, kh, vh, positions, positions, True,
+                                  cfg.window, cfg.q_chunk, cfg.kv_chunk)
+        else:
+            out = sliding_attention(q, kh, vh, positions, positions,
+                                    window=cfg.window)
+        if return_cache:
+            w = min(cfg.window, S)
+            slot = (S - w + jnp.arange(w)) % cfg.window if S >= cfg.window \
+                else jnp.arange(S)
+            length = min(cfg.window, S) if S < cfg.window else cfg.window
+            ck = jnp.zeros((B, length, cfg.n_kv, cfg.head_dim), cache_dtype)
+            cv = jnp.zeros_like(ck)
+            ck = ck.at[:, slot].set(k[:, -w:].astype(cache_dtype))
+            cv = cv.at[:, slot].set(v[:, -w:].astype(cache_dtype))
+            cache = {"k": ck, "v": cv}
+    elif cfg.backend == "relu_linear":
+        if cfg.causal:
+            out = relu_linear_attention_causal(q, kh, vh)
+        else:
+            out = relu_linear_attention_noncausal(q, kh, vh)
+    else:
+        raise ValueError(f"unknown attention backend {cfg.backend!r}")
+    if cfg.pad_heads_to > cfg.n_heads:
+        out = out[:, :, : cfg.n_heads]
+    out = out.reshape(B, S, cfg.q_dim).astype(x.dtype)
+    out = shard(out, "dp", "sp", "tp")
+    y = linear(params["wo"], out)
+    return (y, cache) if return_cache else y
+
+
+def cross_attention(params, x, memory, cfg: AttnConfig):
+    """Encoder-decoder cross attention (no RoPE on memory keys)."""
+    B, S, _ = x.shape
+    Bm, Sm, _ = memory.shape
+    g = cfg.n_heads // cfg.n_kv
+    q, _, _ = _raw_qkv(params, x, cfg)
+    _, k, v = _raw_qkv(params, memory, cfg)
+    q = shard(q, "dp", None, "heads", None)
+    kh, vh = _repeat_kv(k, g), _repeat_kv(v, g)
+    H = cfg.n_heads
+    if cfg.pad_heads_to > H:
+        # zero-pad heads so the model axis divides them; dummy heads
+        # produce zeros (v=0) and are sliced away after the backend
+        padn = cfg.pad_heads_to - H
+        pad = lambda t: jnp.concatenate(  # noqa: E731
+            [t, jnp.zeros(t.shape[:2] + (padn, t.shape[3]), t.dtype)], 2)
+        q, kh, vh = pad(q), pad(kh), pad(vh)
+        q = shard(q, "dp", None, "heads", None)
+    kh = shard(kh, "dp", None, "heads", None)
+    vh = shard(vh, "dp", None, "heads", None)
+    out = softmax_attention(q, kh, vh, jnp.arange(S), jnp.arange(Sm),
+                            causal=False, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)
+    out = out.reshape(B, S, cfg.q_dim).astype(x.dtype)
+    return linear(params["wo"], out)
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.backend == "relu_linear":
+        return {
+            "state": jnp.zeros((batch, cfg.n_kv, cfg.head_dim, cfg.head_dim),
+                               jnp.float32),
+            "zsum": jnp.zeros((batch, cfg.n_kv, cfg.head_dim), jnp.float32),
+        }
+    length = min(max_len, cfg.window) if cfg.backend == "sliding" else max_len
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv, cfg.head_dim), dtype),
+    }
+
+
+def attention_decode(params, x, cache, pos, cfg: AttnConfig):
+    """One-token decode.  x: (B, 1, D); pos: scalar int32 (current index).
+
+    softmax/sliding: ring-buffer KV cache, attend over cached length.
+    relu_linear: O(1) recurrent update — no KV cache at all.
+    """
+    B = x.shape[0]
+    g = cfg.n_heads // cfg.n_kv
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _raw_qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cfg.backend == "relu_linear":
+        pq = jax.nn.relu(q.astype(jnp.float32)).reshape(B, cfg.n_kv, g, cfg.head_dim)
+        pk = jax.nn.relu(k.astype(jnp.float32)).reshape(B, cfg.n_kv, cfg.head_dim)
+        vf = v.astype(jnp.float32).reshape(B, cfg.n_kv, cfg.head_dim)
+        state = cache["state"] + jnp.einsum("bkd,bke->bkde", pk, vf)
+        zsum = cache["zsum"] + pk
+        num = jnp.einsum("bkgd,bkde->bkge", pq, state)
+        den = jnp.einsum("bkgd,bkd->bkg", pq, zsum)[..., None]
+        out = (num / jnp.maximum(den, 1e-6)).reshape(B, 1, cfg.q_dim)
+        out = out.astype(x.dtype)
+        return linear(params["wo"], out), {"state": state, "zsum": zsum}
+
+    length = cache["k"].shape[1]
+    slot = pos % length if cfg.backend == "sliding" else pos
+    ck = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+    kv_idx = jnp.arange(length)
+    if cfg.backend == "sliding":
+        # ring buffer: entry i holds absolute position matching slot order
+        wrap = pos - ((pos - kv_idx) % length)
+        kv_pos = wrap
+        valid = (kv_pos >= 0) & (kv_pos >= pos - cfg.window + 1)
+    else:
+        kv_pos = kv_idx
+        valid = kv_idx <= pos
+    qf = q.astype(jnp.float32).reshape(B, cfg.n_kv, g, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bkgd,bckd->bkgc", qf * scale, ck.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    return linear(params["wo"], out), {"k": ck, "v": cv}

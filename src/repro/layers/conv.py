@@ -1,0 +1,56 @@
+"""2-D convolution primitives (NHWC), the EfficientViT building blocks.
+
+Three of the paper's four operation classes live here: generic Conv,
+PWConv (1x1), DWConv (depthwise).  MatMuls — the fourth — are PWConvs
+with large batch (paper §III), which is literally how we lower them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def init_conv2d(key, k: int, c_in: int, c_out: int, *, groups: int = 1,
+                bias: bool = True, dtype=jnp.float32):
+    fan_in = k * k * c_in // groups
+    w = jax.random.normal(key, (k, k, c_in // groups, c_out), jnp.float32)
+    p = {"w": (w * fan_in ** -0.5).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d(params, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
+    """x: (B, H, W, C_in) -> (B, H', W', C_out)."""
+    y = lax.conv_general_dilated(
+        x, params["w"].astype(x.dtype),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def init_dwconv2d(key, k: int, c: int, *, bias: bool = True, dtype=jnp.float32):
+    return init_conv2d(key, k, c, c, groups=c, bias=bias, dtype=dtype)
+
+
+def dwconv2d(params, x, *, stride: int = 1, padding="SAME"):
+    return conv2d(params, x, stride=stride, groups=x.shape[-1], padding=padding)
+
+
+def init_pwconv(key, c_in: int, c_out: int, *, bias: bool = True,
+                dtype=jnp.float32):
+    return init_conv2d(key, 1, c_in, c_out, bias=bias, dtype=dtype)
+
+
+def pwconv(params, x):
+    """1x1 conv == per-pixel matmul (the MAT engine's favorite food)."""
+    w = params["w"].astype(x.dtype)  # (1,1,C_in,C_out)
+    y = jnp.einsum("bhwc,cf->bhwf", x, w[0, 0])
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

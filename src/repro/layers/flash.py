@@ -1,0 +1,196 @@
+"""Flash attention with a custom VJP (recompute-in-backward).
+
+XLA autodiff through the chunked online-softmax scan SAVES every chunk's
+probability matrix for the backward pass — the dry-run measured ~0.5 TB
+of (nq, nc, B, H, qc, kc) f32 buffers per device per step on
+stablelm-12b x train_4k (EXPERIMENTS.md §Perf).  The flash-attention
+backward never needs them: it recomputes p per chunk from (q, k, m, l)
+and accumulates dq / dk / dv chunk-locally, exactly like the forward.
+
+This module implements that backward as a ``jax.custom_vjp``:
+
+  forward:  per q block, online-softmax scan over kv chunks; saves only
+            (q, k, v, out, lse) — O(S*D) residuals, not O(S^2).
+  backward: delta = rowsum(dO * O); then
+              dq[i]  = sum_j  (p_ij * (dO_i V_j^T - delta_i)) K_j * scale
+              dK_j  += sum_i  (p_ij * (...))^T Q_i * scale
+              dV_j  += sum_i   p_ij^T dO_i
+            with p_ij = exp(Q_i K_j^T * scale - lse_i) recomputed.
+
+Layout: flat heads (B, S, H, Dh), same as layers.attention.  Enabled per
+arch with ``ArchConfig.flash_vjp`` (the §Perf hillclimb flag; default off
+so the recorded baseline stays the plain XLA-autodiff path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _fwd_block(q, kc, vc, pc, q_pos, *, causal, window):
+    """One q block (B, qc, H, D) against chunked kv (nc, B, kc, H, D).
+
+    Returns (out fp32 (B, qc, H, D), lse fp32 (B, H, qc))."""
+    B, qc, H, D = q.shape
+    scale = D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, p_i = inp
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, k_i.astype(jnp.float32))
+        s = jnp.where(_mask(q_pos, p_i, causal, window)[None, None], s,
+                      NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, qc), jnp.float32)
+    a0 = jnp.zeros((B, H, qc, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3)
+    lse = m + jnp.log(l_safe)                       # (B, H, qc)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q, k, v, q_pos, kv_pos, causal=True, window=None,
+                    q_chunk=1024, kv_chunk=1024):
+    """q, k, v: flat-head (B, S, H, Dh) -> (B, S, H, Dh) fp32."""
+    out, _ = _flash_fwd_all(q, k, v, q_pos, kv_pos, causal, window,
+                            q_chunk, kv_chunk)
+    return out
+
+
+def _chunks(x, c):
+    B, S, H, D = x.shape
+    return x.reshape(B, S // c, c, H, D).transpose(1, 0, 2, 3, 4)
+
+
+def _flash_fwd_all(q, k, v, q_pos, kv_pos, causal, window, q_chunk,
+                   kv_chunk):
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    qc = Sq if Sq % q_chunk else q_chunk
+    kc = Skv if Skv % kv_chunk else kv_chunk
+    kcs = _chunks(k, kc)
+    vcs = _chunks(v, kc)
+    pcs = kv_pos.reshape(-1, kc)
+
+    def per_block(args):
+        qi, pi = args
+        return _fwd_block(qi, kcs, vcs, pcs, pi, causal=causal,
+                          window=window)
+
+    qb = _chunks(q, qc)
+    pb = q_pos.reshape(-1, qc)
+    if qb.shape[0] == 1:
+        return per_block((qb[0], pb[0]))
+    out, lse = lax.map(per_block, (qb, pb))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    lse = lse.transpose(1, 2, 0, 3).reshape(B, H, Sq)
+    return out, lse
+
+
+def _flash_fwd_rule(q, k, v, q_pos, kv_pos, causal, window, q_chunk,
+                    kv_chunk):
+    out, lse = _flash_fwd_all(q, k, v, q_pos, kv_pos, causal, window,
+                              q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse, q_pos, kv_pos)
+
+
+def _flash_bwd_rule(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse, q_pos, kv_pos = res
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    qc = Sq if Sq % q_chunk else q_chunk
+    kc = Skv if Skv % kv_chunk else kv_chunk
+    scale = D ** -0.5
+
+    do = dout.astype(jnp.float32)
+    delta = jnp.einsum("bqhd,bqhd->bhq", do, out)      # (B, H, Sq)
+
+    kcs, vcs = _chunks(k, kc), _chunks(v, kc)
+    pcs = kv_pos.reshape(-1, kc)
+    qbs, dobs = _chunks(q, qc), _chunks(dout, qc)
+    qpb = q_pos.reshape(-1, qc)
+    lseb = lse.reshape(B, H, -1, qc).transpose(2, 0, 1, 3)   # (nq,B,H,qc)
+    deltab = delta.reshape(B, H, -1, qc).transpose(2, 0, 1, 3)
+
+    def p_of(qi, k_j, lse_i, qp, kp):
+        s = jnp.einsum("bqhd,bchd->bhqc", qi.astype(jnp.float32) * scale,
+                       k_j.astype(jnp.float32))
+        s = jnp.where(_mask(qp, kp, causal, window)[None, None], s, NEG_INF)
+        return jnp.exp(s - lse_i[..., None])
+
+    # --- dq: per q block, scan kv chunks ---
+    def dq_block(args):
+        qi, doi, lse_i, delta_i, qp = args
+        doi = doi.astype(jnp.float32)
+
+        def body(acc, inp):
+            k_j, v_j, kp = inp
+            p = p_of(qi, k_j, lse_i, qp, kp)
+            dp = jnp.einsum("bqhd,bchd->bhqc", doi, v_j.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None])
+            return acc + jnp.einsum("bhqc,bchd->bqhd", ds,
+                                    k_j.astype(jnp.float32)) * scale, None
+
+        acc0 = jnp.zeros(qi.shape, jnp.float32)
+        dq, _ = lax.scan(body, acc0, (kcs, vcs, pcs))
+        return dq
+
+    dq = lax.map(dq_block, (qbs, dobs, lseb, deltab, qpb))
+    dq = dq.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+    # --- dk, dv: per kv chunk, scan q blocks ---
+    def dkv_block(args):
+        k_j, v_j, kp = args
+
+        def body(carry, inp):
+            dk_acc, dv_acc = carry
+            qi, doi, lse_i, delta_i, qp = inp
+            doi = doi.astype(jnp.float32)
+            p = p_of(qi, k_j, lse_i, qp, kp)
+            dv_acc += jnp.einsum("bhqc,bqhd->bchd", p, doi)
+            dp = jnp.einsum("bqhd,bchd->bhqc", doi, v_j.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None])
+            dk_acc += jnp.einsum("bhqc,bqhd->bchd", ds,
+                                 qi.astype(jnp.float32)) * scale
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros(k_j.shape, jnp.float32)
+        (dk, dv), _ = lax.scan(body, (z, z), (qbs, dobs, lseb, deltab, qpb))
+        return dk, dv
+
+    dk, dv = lax.map(dkv_block, (kcs, vcs, pcs))
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, H, D)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, H, D)
+
+    zero_pos = jnp.zeros_like(q_pos)  # int cotangents are ignored
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zero_pos, jnp.zeros_like(kv_pos))
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)

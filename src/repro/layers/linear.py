@@ -1,0 +1,48 @@
+"""Dense layers (functional) with fan-in scaled init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_linear(key, in_dim: int, out_dim: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float = 1.0):
+    std = scale * in_dim ** -0.5
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear(params, x, compute_dtype=None):
+    cd = compute_dtype or x.dtype
+    if "qw" in params:   # weight-only int8 (FIX8 serving path)
+        w = params["qw"].astype(cd) * params["scale"].astype(cd)
+    else:
+        w = params["w"].astype(cd)
+    y = jnp.einsum("...d,df->...f", x.astype(cd), w)
+    if "b" in params:
+        y = y + params["b"].astype(cd)
+    return y
+
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    tbl = jax.random.normal(key, (vocab, dim), jnp.float32) * dim ** -0.5
+    return {"table": tbl.astype(dtype)}
+
+
+def embed(params, token_ids, compute_dtype=None):
+    if "qt" in params:   # int8 table: dequantize the gathered rows only
+        rows = jnp.take(params["qt"], token_ids, axis=0)
+        scale = jnp.take(params["scale"], token_ids, axis=0)
+        out = rows.astype(compute_dtype or jnp.float32) * scale.astype(
+            compute_dtype or jnp.float32)
+        return out
+    out = jnp.take(params["table"], token_ids, axis=0)
+    return out.astype(compute_dtype) if compute_dtype else out
+
+
+def unembed(params, x, compute_dtype=None):
+    """Tied-weights readout: (..., d) @ (d, vocab)."""
+    cd = compute_dtype or x.dtype
+    return jnp.einsum("...d,vd->...v", x.astype(cd), params["table"].astype(cd))

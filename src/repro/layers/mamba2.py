@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 ("ssd_minimal"):
+intra-chunk quadratic term + inter-chunk recurrent state, which is the
+same two-part decomposition as the paper's chunked ReLU linear attention
+(EfficientViT's global attention) — state-space duality makes them the
+same kernel skeleton, which is why our Pallas relu_attn and ssd kernels
+share their accumulator layout.
+
+Layer structure follows Mamba-2: in_proj -> (z | x | B | C | dt),
+short causal depthwise conv1d on (x|B|C), SSD core, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import shard
+from repro.layers.linear import init_linear, linear
+from repro.layers.norms import init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba2(key, cfg: Mamba2Config):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    H = cfg.n_heads
+    zxbcdt = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + H
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    dt = jnp.exp(
+        jax.random.uniform(k3, (H,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": init_linear(k1, cfg.d_model, zxbcdt, dtype=cfg.dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.d_conv, cfg.conv_dim), jnp.float32)
+                   * cfg.d_conv ** -0.5).astype(cfg.dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), cfg.dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(cfg.d_inner, cfg.dtype),
+        "out_proj": init_linear(k4, cfg.d_inner, cfg.d_model, dtype=cfg.dtype),
+    }
+
+
+MAMBA2_RULES = [
+    (r"in_proj/w$", ("fsdp", "tp")),
+    (r"out_proj/w$", ("tp", "fsdp")),
+    (r"conv_w$", (None, "tp")),
+]
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < s <= i} x[..., s].
+
+    Returns -inf above the diagonal (used as log-decay matrix).
+    """
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, D_skip=None):
+    """Chunked SSD scan (fp32).
+
+    x: (b, s, h, p)   dt: (b, s, h)   A: (h,) negative reals
+    B, C: (b, s, g, n) with h % g == 0
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    Q = min(chunk, s)
+    if s % Q != 0:
+        Q = s
+    nc = s // Q
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, Q, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, Q, g, n)
+    Bh = jnp.repeat(Bf, rep, axis=3)  # (b,nc,Q,h,n)
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    dA = dtf * A[None, None, None, :]          # (b,nc,Q,h) log-decay per step
+    dA_cum = jnp.cumsum(dA, axis=2)            # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic, causal) ----
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # (b,nc,h,Q,Q)
+    scores = jnp.einsum("bclhn,bcshn,bchls->bchls", Ch, Bh, L)
+    y_diag = jnp.einsum("bchls,bcshp,bcsh->bclhp", scores, xf, dtf)
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,Q,h)
+    states = jnp.einsum("bcshn,bcsh,bcsh,bcshp->bchpn",
+                        Bh, decay_states, dtf, xf)
+
+    # ---- inter-chunk recurrence over chunk boundaries ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,nc,h)
+
+    def body(carry, inp):
+        st_prev = carry                                     # (b,h,p,n)
+        st_c, dec_c = inp                                   # (b,h,p,n), (b,h)
+        new = st_c + dec_c[..., None, None] * st_prev
+        return new, st_prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (b,nc,h,p,n)
+
+    # ---- inter-chunk output ----
+    out_decay = jnp.exp(dA_cum)                             # (b,nc,Q,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    if D_skip is not None:
+        y = y + D_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y, final_state
+
+
+def _causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xpad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def _split_zxbcdt(proj, cfg: Mamba2Config):
+    di, gs = cfg.d_inner, cfg.n_groups * cfg.d_state
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * gs]
+    dt = proj[..., di + di + 2 * gs :]
+    return z, xbc, dt
+
+
+def mamba2(params, x, cfg: Mamba2Config, *, return_cache: bool = False):
+    """Training/prefill forward.  x: (B, S, D) -> (B, S, D).
+
+    With ``return_cache=True`` also returns the decode cache (final SSM
+    state + conv tail) for prefill->decode handoff.
+    """
+    Bsz, S, _ = x.shape
+    H, P, N, G = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    proj = linear(params["in_proj"], x)
+    z, xbc_raw, dt = _split_zxbcdt(proj, cfg)
+    xbc = jax.nn.silu(_causal_conv1d(xbc_raw, params["conv_w"].astype(x.dtype),
+                                     params["conv_b"].astype(x.dtype)))
+    xin = xbc[..., : cfg.d_inner].reshape(Bsz, S, H, P)
+    Bssm = xbc[..., cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, S, G, N)
+    Cssm = xbc[..., cfg.d_inner + G * N :].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    xin = shard(xin, "dp", "sp", "tp", None)
+    y, final_state = ssd_chunked(xin, dt, A, Bssm, Cssm, chunk=cfg.chunk,
+                                 D_skip=params["D"])
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = linear(params["out_proj"], y)
+    if return_cache:
+        K = cfg.d_conv - 1
+        tail = xbc_raw[:, -K:, :] if S >= K else jnp.pad(
+            xbc_raw, ((0, 0), (K - S, 0), (0, 0)))
+        return out, {"conv": tail, "ssm": final_state}
+    return out
+
+
+def init_mamba2_cache(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(params, x, cache, cfg: Mamba2Config):
+    """One-token recurrent step.  x: (B, 1, D)."""
+    Bsz = x.shape[0]
+    H, P, N, G = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    proj = linear(params["in_proj"], x)
+    z, xbc, dt = _split_zxbcdt(proj, cfg)
+    # conv ring: window = last (d_conv-1) inputs + current
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)     # (B, K, C)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", win, w) + params["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = win[:, 1:, :]
+    xin = xbc1[..., : cfg.d_inner].reshape(Bsz, H, P)
+    Bssm = xbc1[..., cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, G, N)
+    Cssm = xbc1[..., cfg.d_inner + G * N :].reshape(Bsz, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bssm, rep, axis=1)                      # (B,H,N)
+    Ch = jnp.repeat(Cssm, rep, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)[:, 0, :]
+                          + params["dt_bias"][None, :])      # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtv * A[None, :])                        # (B,H)
+    xf = xin.astype(jnp.float32)
+    new_ssm = (cache["ssm"] * decay[..., None, None]
+               + jnp.einsum("bh,bhn,bhp->bhpn", dtv, Bh.astype(jnp.float32), xf))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), new_ssm)
+    y = y + params["D"][None, :, None] * xf
+    y = y.reshape(Bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = linear(params["out_proj"], y)
+    return out, {"conv": new_conv, "ssm": new_ssm}

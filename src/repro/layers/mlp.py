@@ -1,0 +1,69 @@
+"""Feed-forward blocks: SwiGLU/GeGLU gated MLPs and plain MLPs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import shard
+from repro.layers.linear import init_linear, linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"   # silu | gelu | relu | hardswish
+    gated: bool = True
+    fused: bool = False        # one (D, 2F) matmul for in+gate: halves the
+                               # dx partial-sum all-reduces in backward
+    dtype: jnp.dtype = jnp.float32
+
+
+def _act(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "hardswish": jax.nn.hard_swish,
+    }[name]
+
+
+def init_mlp(key, cfg: MlpConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.fused and cfg.gated:
+        return {
+            "w_in_gate": init_linear(k1, cfg.d_model, 2 * cfg.d_ff,
+                                     dtype=cfg.dtype),
+            "w_out": init_linear(k2, cfg.d_ff, cfg.d_model, dtype=cfg.dtype),
+        }
+    p = {
+        "w_in": init_linear(k1, cfg.d_model, cfg.d_ff, dtype=cfg.dtype),
+        "w_out": init_linear(k2, cfg.d_ff, cfg.d_model, dtype=cfg.dtype),
+    }
+    if cfg.gated:
+        p["w_gate"] = init_linear(k3, cfg.d_model, cfg.d_ff, dtype=cfg.dtype)
+    return p
+
+
+MLP_RULES = [
+    (r"w_(in|gate)/w$", ("fsdp", "tp")),
+    (r"w_out/w$", ("tp", "fsdp")),
+]
+
+
+def mlp(params, x, cfg: MlpConfig):
+    act = _act(cfg.activation)
+    if "w_in_gate" in params:
+        hg = linear(params["w_in_gate"], x)
+        h, g = jnp.split(hg, 2, axis=-1)
+        h = act(g) * h
+    else:
+        h = linear(params["w_in"], x)
+        if cfg.gated:
+            h = act(linear(params["w_gate"], x)) * h
+        else:
+            h = act(h)
+    h = shard(h, "dp", "sp", "tp")
+    return linear(params["w_out"], h)

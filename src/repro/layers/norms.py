@@ -1,0 +1,70 @@
+"""Normalization layers (functional).
+
+RMSNorm / LayerNorm for LM archs; BatchNorm (inference form, foldable into
+the preceding convolution — the paper folds BN into convs, §II) for
+EfficientViT.  All reductions run in fp32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_batchnorm(dim: int, dtype=jnp.float32):
+    """Inference-form BN: running stats live in params (EfficientViT
+    inference folds them into the conv anyway)."""
+    return {
+        "scale": jnp.ones((dim,), dtype),
+        "bias": jnp.zeros((dim,), dtype),
+        "mean": jnp.zeros((dim,), dtype),
+        "var": jnp.ones((dim,), dtype),
+    }
+
+
+def batchnorm(params, x, eps: float = 1e-5):
+    """Channel-last BN (NHWC); broadcasting handles NC and NLC too."""
+    xf = x.astype(jnp.float32)
+    inv = lax.rsqrt(params["var"].astype(jnp.float32) + eps)
+    y = (xf - params["mean"].astype(jnp.float32)) * inv
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def bn_fold_scale_bias(bn_params, eps: float = 1e-5):
+    """Return (gamma', beta') such that BN(x) == x * gamma' + beta'.
+
+    Folding these into the preceding conv's weights/bias is exactly the
+    paper's "BN can be implemented via 1x1 convolutions ... integrated into
+    preceding convolutions" (§II).
+    """
+    inv = lax.rsqrt(bn_params["var"].astype(jnp.float32) + eps)
+    gamma = bn_params["scale"].astype(jnp.float32) * inv
+    beta = (
+        bn_params["bias"].astype(jnp.float32)
+        - bn_params["mean"].astype(jnp.float32) * gamma
+    )
+    return gamma, beta

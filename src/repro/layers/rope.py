@@ -1,0 +1,31 @@
+"""Rotary position embeddings (RoPE), half-rotation convention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for the even head dims.  head_dim may be odd-
+    unfriendly (e.g. 240 for gemma3-12b): we rotate the largest even half."""
+    rot = head_dim - head_dim % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """Apply RoPE.
+
+    x:         (..., seq, heads, head_dim)
+    positions: (..., seq) int32 absolute positions (supports KV-cache decode)
+    """
+    head_dim = x.shape[-1]
+    rot = head_dim - head_dim % 2
+    inv = rope_freqs(head_dim, theta)  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., : rot // 2].astype(jnp.float32)
+    x2 = x[..., rot // 2 : rot].astype(jnp.float32)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if rot != head_dim:  # pass-through tail for odd-sized rotations
+        rotated = jnp.concatenate([rotated, x[..., rot:].astype(jnp.float32)], axis=-1)
+    return rotated.astype(x.dtype)

@@ -1,0 +1,179 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder consumes precomputed frame embeddings (the modality frontend is a
+stub per the assignment spec); decoder is a causal LM with cross-attention
+into the encoder memory.  Both stacks are scanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.ctx import shard
+from repro.layers.attention import (
+    attention, attention_decode, cross_attention, init_attention,
+    init_kv_cache)
+from repro.layers.linear import embed, init_embedding, init_linear, linear
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.lm import (
+    attn_cfg, chunked_ce_loss, lm_logits_head, mlp_cfg, _maybe_remat)
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": init_attention(k1, attn_cfg(cfg, "softmax")),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(k2, mlp_cfg(cfg))}
+
+
+def init_dec_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "self_attn": init_attention(k1, attn_cfg(cfg, "softmax")),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "cross_attn": init_attention(k2, attn_cfg(cfg, "softmax")),
+            "ln3": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(k3, mlp_cfg(cfg))}
+
+
+def init_encdec(key, cfg: ArchConfig):
+    ke, kb, kd, kh, kn = jax.random.split(key, 5)
+    enc_keys = jax.random.split(kb, cfg.n_layers)
+    dec_keys = jax.random.split(kd, cfg.dec_layers)
+    return {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdtype),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "lm_head": init_linear(kh, cfg.d_model, cfg.vocab, dtype=cfg.pdtype),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, S_enc, D) stub embeddings -> encoder memory."""
+    x = frames.astype(cfg.cdtype)
+    x = shard(x, "dp", "sp", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    acfg = dataclasses.replace(attn_cfg(cfg, "softmax"), causal=False)
+
+    def body_fn(p, h):
+        h = h + attention(p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps),
+                          acfg, positions)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps),
+                    mlp_cfg(cfg))
+        return h
+
+    body_fn = _maybe_remat(body_fn, cfg)
+
+    def body(h, p):
+        return body_fn(p, h), None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params, dec_tokens, memory, cfg: ArchConfig):
+    x = embed(params["embed"], dec_tokens, cfg.cdtype)
+    x = shard(x, "dp", "sp", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    acfg = attn_cfg(cfg, "softmax")
+
+    def body_fn(p, h):
+        h = h + attention(p["self_attn"],
+                          rmsnorm(p["ln1"], h, cfg.norm_eps), acfg, positions)
+        h = h + cross_attention(p["cross_attn"],
+                                rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                memory, acfg)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln3"], h, cfg.norm_eps),
+                    mlp_cfg(cfg))
+        return h
+
+    body_fn = _maybe_remat(body_fn, cfg)
+
+    def body(h, p):
+        return body_fn(p, h), None
+
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def encdec_loss(params, batch, cfg: ArchConfig):
+    """batch: {"frames": (B,S_enc,D), "tokens": (B,S_dec), "targets": ...}."""
+    memory = encode(params, batch["frames"], cfg)
+    h = decode_train(params, batch["tokens"], memory, cfg)
+    return chunked_ce_loss(params, h, batch["targets"], cfg,
+                           batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# decode (serving): cross-KV precomputed once per request batch
+# ---------------------------------------------------------------------------
+
+def init_encdec_state(params, frames, cfg: ArchConfig, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Run the encoder; precompute per-layer cross K/V; allocate self caches."""
+    memory = encode(params, frames, cfg)
+    acfg = attn_cfg(cfg, "softmax")
+    B, Sm, _ = memory.shape
+
+    def cross_kv(p):
+        from repro.layers.attention import _raw_qkv
+        _, k, v = _raw_qkv(p["cross_attn"], memory, acfg)
+        return {"ck": k.astype(dtype), "cv": v.astype(dtype)}
+
+    cross = jax.vmap(cross_kv)(params["dec_blocks"])
+    self_shapes = jax.eval_shape(
+        lambda: init_kv_cache(acfg, B, max_len, dtype))
+    self_caches = jax.tree_util.tree_map(
+        lambda s: jnp.zeros((cfg.dec_layers,) + s.shape, s.dtype),
+        self_shapes)
+    return {"cross": cross, "self": self_caches}
+
+
+def _cross_decode(p, x, ck, cv, acfg):
+    """Single-token cross attention against cached memory K/V."""
+    from repro.layers.attention import _raw_qkv
+    B = x.shape[0]
+    g = acfg.n_heads // acfg.n_kv
+    q, _, _ = _raw_qkv(p, x, acfg)
+    q = q.reshape(B, acfg.n_kv, g, acfg.head_dim)
+    qf = q.astype(jnp.float32) * acfg.head_dim ** -0.5
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, ck.astype(jnp.float32))
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", pr, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, acfg.q_dim).astype(x.dtype)
+    return linear(p["wo"], o)
+
+
+def encdec_decode_step(params, state, tokens, pos, cfg: ArchConfig):
+    """tokens: (B, 1) -> (logits (B, V), new state)."""
+    x = embed(params["embed"], tokens, cfg.cdtype)
+    acfg = attn_cfg(cfg, "softmax")
+
+    def body(h, inp):
+        p, (sc, ck, cv) = inp
+        y, sc = attention_decode(p["self_attn"],
+                                 rmsnorm(p["ln1"], h, cfg.norm_eps),
+                                 sc, pos, acfg)
+        h = h + y
+        h = h + _cross_decode(p["cross_attn"],
+                              rmsnorm(p["ln2"], h, cfg.norm_eps), ck, cv,
+                              acfg)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln3"], h, cfg.norm_eps),
+                    mlp_cfg(cfg))
+        return h, sc
+
+    x, new_self = lax.scan(
+        body, x, (params["dec_blocks"],
+                  (state["self"], state["cross"]["ck"],
+                   state["cross"]["cv"])))
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits_head(params, h, cfg)
+    return logits[:, 0, :], {"cross": state["cross"], "self": new_self}

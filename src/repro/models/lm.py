@@ -1,0 +1,498 @@
+"""Decoder-only LM supporting every assigned block pattern.
+
+Families:
+  dense   — uniform [attn + MLP] stack (stablelm, granite, qwen2.5,
+            internvl2 backbone)
+  moe     — uniform [attn + MoE] stack (grok-1, kimi-k2)
+  mamba2  — uniform [Mamba-2] stack (attention-free)
+  zamba2  — Mamba-2 backbone with a SHARED transformer block invoked every
+            k layers (weights reused; Zamba-style, LoRA deltas omitted —
+            noted in DESIGN.md)
+  gemma3  — repeating groups of (global_every-1) sliding-window layers +
+            1 global layer
+  vlm     — dense backbone consuming [patch embeddings | text embeddings]
+
+Layers are stacked and scanned (``lax.scan`` over a (L, ...) param pytree)
+so a 61-layer 1T-param model lowers to the same HLO size as one layer —
+essential for multi-pod dry-run compile times.  ``remat`` wraps the block
+body in ``jax.checkpoint``.
+
+The paper's technique appears as ``attn_backend="relu_linear"`` — the
+EfficientViT global-attention core in causal form — selectable on any
+attention-bearing arch, and as the O(1)-state decode path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.ctx import shard
+from repro.layers.attention import (
+    AttnConfig, attention, attention_decode, init_attention, init_kv_cache)
+from repro.layers.linear import embed, init_embedding, init_linear, linear
+from repro.layers.mamba2 import (
+    Mamba2Config, init_mamba2, init_mamba2_cache, mamba2, mamba2_decode)
+from repro.layers.mlp import MlpConfig, init_mlp, mlp
+from repro.layers.moe import MoeConfig, init_moe, moe
+from repro.layers.norms import init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# sub-config builders
+# ---------------------------------------------------------------------------
+
+def attn_cfg(cfg: ArchConfig, backend: Optional[str] = None) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, backend=backend or cfg.attn_backend,
+        window=cfg.window, qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        flash_vjp=cfg.flash_vjp, fused_qkv=cfg.fused_qkv,
+        score_dtype=cfg.score_dtype, pad_heads_to=cfg.pad_heads_to,
+        dtype=cfg.pdtype)
+
+
+def mlp_cfg(cfg: ArchConfig) -> MlpConfig:
+    return MlpConfig(cfg.d_model, cfg.d_ff, "silu", True, cfg.fused_mlp,
+                     cfg.pdtype)
+
+
+def moe_cfg(cfg: ArchConfig) -> MoeConfig:
+    return MoeConfig(cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k,
+                     cfg.capacity_factor, dtype=cfg.pdtype)
+
+
+def mamba_cfg(cfg: ArchConfig) -> Mamba2Config:
+    return Mamba2Config(cfg.d_model, cfg.ssm_state, cfg.ssm_conv,
+                        cfg.ssm_expand, cfg.ssm_head_dim,
+                        chunk=cfg.ssm_chunk, dtype=cfg.pdtype)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    if kind == "mamba":
+        return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+                "mixer": init_mamba2(k1, mamba_cfg(cfg))}
+    backend = "sliding" if kind == "local" else (
+        "softmax" if kind == "global" else None)
+    p = {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+         "attn": init_attention(k1, attn_cfg(cfg, backend)),
+         "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype)}
+    if kind == "attn_moe":
+        p["moe"] = init_moe(k2, moe_cfg(cfg))
+    else:
+        p["mlp"] = init_mlp(k2, mlp_cfg(cfg))
+    return p
+
+
+def _block_backend(cfg: ArchConfig, kind: str) -> Optional[str]:
+    if kind == "local":
+        return "sliding"
+    if kind == "global":
+        # gemma3 global layers switch to the paper's linear attention at
+        # long-context shapes (DESIGN.md §6)
+        return "relu_linear" if cfg.attn_backend == "relu_linear" else "softmax"
+    return None
+
+
+def block_apply(p, x, cfg: ArchConfig, kind: str, positions):
+    """x: (B, S, D) -> (x', aux)."""
+    if kind == "mamba":
+        return x + mamba2(p["mixer"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          mamba_cfg(cfg)), 0.0
+    acfg = attn_cfg(cfg, _block_backend(cfg, kind))
+    x = x + attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), acfg,
+                      positions)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        y, aux = moe(p["moe"], h, moe_cfg(cfg))
+        return x + y, aux
+    return x + mlp(p["mlp"], h, mlp_cfg(cfg)), 0.0
+
+
+def block_decode(p, x, cache, pos, cfg: ArchConfig, kind: str):
+    if kind == "mamba":
+        y, cache = mamba2_decode(p["mixer"],
+                                 rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                 cache, mamba_cfg(cfg))
+        return x + y, cache
+    acfg = attn_cfg(cfg, _block_backend(cfg, kind))
+    y, cache = attention_decode(p["attn"],
+                                rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                cache, pos, acfg)
+    x = x + y
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        y, _ = moe(p["moe"], h, moe_cfg(cfg))
+        return x + y, cache
+    return x + mlp(p["mlp"], h, mlp_cfg(cfg)), cache
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if kind == "mamba":
+        return init_mamba2_cache(mamba_cfg(cfg), batch)
+    return init_kv_cache(attn_cfg(cfg, _block_backend(cfg, kind)), batch,
+                         max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer-stack layout per family
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, cfg: ArchConfig, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+
+
+def _uniform_kind(cfg: ArchConfig) -> str:
+    return {"dense": "attn_mlp", "vlm": "attn_mlp", "moe": "attn_moe",
+            "mamba2": "mamba"}[cfg.family]
+
+
+def init_lm(key, cfg: ArchConfig):
+    ke, kb, kh, ks = jax.random.split(key, 4)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(kh, cfg.d_model, cfg.vocab,
+                                        dtype=cfg.pdtype)
+    if cfg.family in ("dense", "moe", "mamba2", "vlm"):
+        params["blocks"] = _stacked_init(kb, cfg, _uniform_kind(cfg),
+                                         cfg.n_layers)
+    elif cfg.family == "gemma3":
+        assert cfg.n_layers % cfg.global_every == 0
+        g = cfg.n_layers // cfg.global_every
+        nl = cfg.global_every - 1
+        kl, kg = jax.random.split(kb)
+        keys = jax.random.split(kl, g)
+        params["local"] = jax.vmap(
+            lambda k: _stacked_init(k, cfg, "local", nl))(keys)
+        params["global"] = _stacked_init(kg, cfg, "global", g)
+    elif cfg.family == "zamba2":
+        g, rem = divmod(cfg.n_layers, cfg.shared_attn_every)
+        km, kt, ka = jax.random.split(kb, 3)
+        keys = jax.random.split(km, g)
+        params["mamba_groups"] = jax.vmap(
+            lambda k: _stacked_init(k, cfg, "mamba", cfg.shared_attn_every)
+        )(keys)
+        if rem:
+            params["mamba_tail"] = _stacked_init(kt, cfg, "mamba", rem)
+        params["shared_attn"] = init_block(ka, cfg, "attn_mlp")
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan_stack(stacked, x, cfg: ArchConfig, kind: str, positions):
+    body_fn = _maybe_remat(
+        lambda p, h: block_apply(p, h, cfg, kind, positions), cfg)
+
+    def body(carry, p):
+        h, aux = carry
+        h, a = body_fn(p, h)
+        return (h, aux + a), None
+
+    (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def forward_hidden(params, x, cfg: ArchConfig, positions):
+    """Embedded input (B, S, D) -> final hidden states (B, S, D)."""
+    x = shard(x, "dp", "sp", None)
+    aux = jnp.float32(0.0)
+    if cfg.family in ("dense", "moe", "mamba2", "vlm"):
+        x, aux = _scan_stack(params["blocks"], x, cfg, _uniform_kind(cfg),
+                             positions)
+    elif cfg.family == "gemma3":
+        glob_fn = _maybe_remat(
+            lambda p, h: block_apply(p, h, cfg, "global", positions), cfg)
+
+        def group(carry, ps):
+            h, a = carry
+            local_p, global_p = ps
+            h, a1 = _scan_stack(local_p, h, cfg, "local", positions)
+            h, a2 = glob_fn(global_p, h)
+            return (h, a + a1 + a2), None
+
+        (x, aux), _ = lax.scan(group, (x, aux),
+                               (params["local"], params["global"]))
+    elif cfg.family == "zamba2":
+        shared = params["shared_attn"]
+        shared_fn = _maybe_remat(
+            lambda p, h: block_apply(p, h, cfg, "attn_mlp", positions), cfg)
+
+        def group(carry, ps):
+            h, a = carry
+            h, a1 = _scan_stack(ps, h, cfg, "mamba", positions)
+            h, a2 = shared_fn(shared, h)
+            return (h, a + a1 + a2), None
+
+        (x, aux), _ = lax.scan(group, (x, aux), params["mamba_groups"])
+        if "mamba_tail" in params:
+            x, a = _scan_stack(params["mamba_tail"], x, cfg, "mamba",
+                               positions)
+            aux = aux + a
+    else:
+        raise ValueError(cfg.family)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def lm_logits_head(params, h, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        e = params["embed"]
+        if "qt" in e:
+            w = e["qt"].astype(h.dtype) * e["scale"].astype(h.dtype)
+        else:
+            w = e["table"].astype(h.dtype)  # (V, D)
+        return jnp.einsum("...d,vd->...v", h, w)
+    return linear(params["lm_head"], h)
+
+
+def chunked_ce_loss(params, hidden, targets, cfg: ArchConfig,
+                    mask=None):
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    hidden: (B, S, D); targets: (B, S) int32.  Scans vocab projection +
+    logsumexp over sequence chunks of cfg.loss_chunk tokens.
+    """
+    B, S, D = hidden.shape
+    C = min(cfg.loss_chunk, S)
+    if S % C != 0:
+        C = S
+    n = S // C
+    h = hidden.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    t = targets.reshape(B, n, C).transpose(1, 0, 2)
+    m = (jnp.ones_like(t, jnp.float32) if mask is None
+         else mask.reshape(B, n, C).transpose(1, 0, 2).astype(jnp.float32))
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, tc, mc = inp
+        logits = lm_logits_head(params, hc, cfg).astype(jnp.float32)
+        logits = shard(logits, "dp", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                             (h, t, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg: ArchConfig):
+    """batch: {"tokens": (B,S), "targets": (B,S)} [+ "patches" for vlm]."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg.cdtype)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.cdtype)  # (B, P, D)
+        x = jnp.concatenate([patches, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h, aux = forward_hidden(params, x, cfg, positions)
+    if cfg.family == "vlm":
+        P = batch["patches"].shape[1]
+        h = h[:, P - 1 : P - 1 + batch["targets"].shape[1]]
+    ce = chunked_ce_loss(params, h, batch["targets"], cfg,
+                         batch.get("mask"))
+    return ce + aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# prefill (cache-populating forward)
+# ---------------------------------------------------------------------------
+
+def block_prefill(p, x, cfg: ArchConfig, kind: str, positions,
+                  cache_dtype=jnp.bfloat16):
+    """Like block_apply but also emits the decode cache."""
+    if kind == "mamba":
+        y, cache = mamba2(p["mixer"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          mamba_cfg(cfg), return_cache=True)
+        return x + y, cache
+    acfg = attn_cfg(cfg, _block_backend(cfg, kind))
+    y, cache = attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                         acfg, positions, return_cache=True,
+                         cache_dtype=cache_dtype)
+    x = x + y
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        y, _ = moe(p["moe"], h, moe_cfg(cfg))
+        return x + y, cache
+    return x + mlp(p["mlp"], h, mlp_cfg(cfg)), cache
+
+
+def lm_prefill(params, tokens, cfg: ArchConfig, *, patches=None,
+               cache_dtype=jnp.bfloat16):
+    """Prefill: (B, S) tokens -> (last-token logits (B, V), caches).
+
+    Caches come back stacked in the same layout init_lm_caches uses, so
+    decode can continue at pos = S.
+    """
+    x = embed(params["embed"], tokens, cfg.cdtype)
+    if cfg.family == "vlm" and patches is not None:
+        x = jnp.concatenate([patches.astype(cfg.cdtype), x], axis=1)
+    x = shard(x, "dp", "sp", None)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def scan_prefill(stacked, h, kind):
+        fn = _maybe_remat(
+            lambda p, hh: block_prefill(p, hh, cfg, kind, positions,
+                                        cache_dtype), cfg)
+
+        def body(hh, p):
+            hh, cache = fn(p, hh)
+            return hh, cache
+
+        return lax.scan(body, h, stacked)
+
+    if cfg.family in ("dense", "moe", "mamba2", "vlm"):
+        x, caches = scan_prefill(params["blocks"], x, _uniform_kind(cfg))
+        new_caches = {"blocks": caches}
+    elif cfg.family == "gemma3":
+        def group(h, ps):
+            lp, gp = ps
+            h, lc = scan_prefill(lp, h, "local")
+            h, gc = block_prefill(gp, h, cfg, "global", positions,
+                                  cache_dtype)
+            return h, (lc, gc)
+
+        x, (lc, gc) = lax.scan(group, x,
+                               (params["local"], params["global"]))
+        new_caches = {"local": lc, "global": gc}
+    elif cfg.family == "zamba2":
+        shared = params["shared_attn"]
+
+        def group(h, mp):
+            h, mc = scan_prefill(mp, h, "mamba")
+            h, sc = block_prefill(shared, h, cfg, "attn_mlp", positions,
+                                  cache_dtype)
+            return h, (mc, sc)
+
+        x, (mc, sc) = lax.scan(group, x, params["mamba_groups"])
+        new_caches = {"mamba_groups": mc, "shared_attn": sc}
+        if "mamba_tail" in params:
+            x, tc = scan_prefill(params["mamba_tail"], x, "mamba")
+            new_caches["mamba_tail"] = tc
+    else:
+        raise ValueError(cfg.family)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits_head(params, h[:, -1:, :], cfg)
+    return logits[:, 0, :], new_caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _stacked_cache(cfg: ArchConfig, kind: str, n: int, batch: int,
+                   max_len: int, dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        lambda: init_block_cache(cfg, kind, batch, max_len, dtype))
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros((n,) + s.shape, s.dtype), shapes)
+
+
+def init_lm_caches(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe", "mamba2", "vlm"):
+        return {"blocks": _stacked_cache(cfg, _uniform_kind(cfg),
+                                         cfg.n_layers, batch, max_len, dtype)}
+    if cfg.family == "gemma3":
+        g = cfg.n_layers // cfg.global_every
+        nl = cfg.global_every - 1
+        loc = _stacked_cache(cfg, "local", nl, batch, max_len, dtype)
+        loc = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((g,) + a.shape, a.dtype), loc)
+        return {"local": loc,
+                "global": _stacked_cache(cfg, "global", g, batch, max_len,
+                                         dtype)}
+    if cfg.family == "zamba2":
+        g, rem = divmod(cfg.n_layers, cfg.shared_attn_every)
+        grp = _stacked_cache(cfg, "mamba", cfg.shared_attn_every, batch,
+                             max_len, dtype)
+        grp = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((g,) + a.shape, a.dtype), grp)
+        out = {"mamba_groups": grp,
+               "shared_attn": _stacked_cache(cfg, "attn_mlp", g, batch,
+                                             max_len, dtype)}
+        if rem:
+            out["mamba_tail"] = _stacked_cache(cfg, "mamba", rem, batch,
+                                               max_len, dtype)
+        return out
+    raise ValueError(cfg.family)
+
+
+def _scan_decode(stacked_p, caches, x, pos, cfg: ArchConfig, kind: str):
+    def body(h, inp):
+        p, c = inp
+        h, c = block_decode(p, h, c, pos, cfg, kind)
+        return h, c
+
+    return lax.scan(body, x, (stacked_p, caches))
+
+
+def lm_decode_step(params, caches, tokens, pos, cfg: ArchConfig):
+    """One decode step.  tokens: (B, 1); pos: int32 scalar (0-based).
+
+    Returns (logits (B, V), new caches).
+    """
+    x = embed(params["embed"], tokens, cfg.cdtype)
+    x = shard(x, "dp", None, None)
+    if cfg.family in ("dense", "moe", "mamba2", "vlm"):
+        x, new = _scan_decode(params["blocks"], caches["blocks"], x, pos,
+                              cfg, _uniform_kind(cfg))
+        new_caches = {"blocks": new}
+    elif cfg.family == "gemma3":
+        def group(h, inp):
+            (lp, gp), (lc, gc) = inp
+            h, lc = _scan_decode(lp, lc, h, pos, cfg, "local")
+            h, gc = block_decode(gp, h, gc, pos, cfg, "global")
+            return h, (lc, gc)
+
+        x, (lc, gc) = lax.scan(
+            group, x, ((params["local"], params["global"]),
+                       (caches["local"], caches["global"])))
+        new_caches = {"local": lc, "global": gc}
+    elif cfg.family == "zamba2":
+        shared = params["shared_attn"]
+
+        def group(h, inp):
+            mp, (mc, sc) = inp
+            h, mc = _scan_decode(mp, mc, h, pos, cfg, "mamba")
+            h, sc = block_decode(shared, h, sc, pos, cfg, "attn_mlp")
+            return h, (mc, sc)
+
+        x, (mc, sc) = lax.scan(
+            group, x, (params["mamba_groups"],
+                       (caches["mamba_groups"], caches["shared_attn"])))
+        new_caches = {"mamba_groups": mc, "shared_attn": sc}
+        if "mamba_tail" in params:
+            x, tc = _scan_decode(params["mamba_tail"], caches["mamba_tail"],
+                                 x, pos, cfg, "mamba")
+            new_caches["mamba_tail"] = tc
+    else:
+        raise ValueError(cfg.family)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits_head(params, h, cfg)
+    return logits[:, 0, :], new_caches

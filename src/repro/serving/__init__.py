@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeConfig, ServingEngine, Request  # noqa: F401
+from repro.serving.sampler import SamplerConfig, sample  # noqa: F401

@@ -1,0 +1,35 @@
+"""Token samplers (greedy / temperature / top-k / top-p), batch-jittable."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> off
+    top_p: float = 1.0           # 1 -> off
+
+
+def sample(logits, key, cfg: SamplerConfig):
+    """logits: (B, V) -> (B,) int32 tokens."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(lf, cfg.top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, NEG_INF, lf)
+    if cfg.top_p < 1.0:
+        sorted_lf = jnp.sort(lf, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_lf, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest prefix with cumulative mass >= top_p; keep its threshold
+        cutoff_idx = jnp.argmax(cum >= cfg.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_lf, cutoff_idx[..., None], -1)
+        lf = jnp.where(lf < cutoff, NEG_INF, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

@@ -1,0 +1,11 @@
+"""Shared pytest fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see the real
+single CPU device.  Distributed tests that need fake devices run
+themselves in a subprocess (tests/test_distributed.py).
+"""
+import os
+import sys
+
+# make tests/proptest.py importable regardless of invocation directory
+sys.path.insert(0, os.path.dirname(__file__))

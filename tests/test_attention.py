@@ -1,0 +1,201 @@
+"""Attention backends: exactness vs naive oracles + decode consistency.
+
+The central behavioural contracts:
+  * chunked flash == naive softmax attention (any chunking)
+  * sliding == naive with a window mask
+  * relu_linear causal chunked scan == naive O(N^2) masked form
+  * prefill-then-decode == one long prefill (cache handoff correctness)
+    for ALL THREE backends (ring buffer, window ring, O(1) state)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from proptest import sweep
+
+from repro.layers.attention import (
+    AttnConfig, attention, attention_decode, init_attention, init_kv_cache,
+    relu_linear_attention_causal, sliding_attention, softmax_attention)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None):
+    """(B,S,H,D) reference with explicit S x S masking."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D ** -0.5
+    qi = jnp.arange(S)[:, None]
+    ci = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ci <= qi
+    if window is not None:
+        mask &= ci > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqc,bchd->bqhd", p, v.astype(jnp.float32))
+
+
+def _rand_qkv(key, B, S, H, D):
+    return (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+            for i in range(3))
+
+
+@sweep(n_cases=6, seed=11)
+def test_flash_equals_naive(rng):
+    B = int(rng.integers(1, 3))
+    S = int(rng.integers(1, 5)) * 32
+    H, D = 2, 16
+    qc = int(rng.choice([16, 32, S]))
+    kc = int(rng.choice([16, 32, S]))
+    key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+    q, k, v = _rand_qkv(key, B, S, H, D)
+    pos = jnp.arange(S)
+    out = softmax_attention(q, k, v, pos, pos, causal=True, q_chunk=qc,
+                            kv_chunk=kc)
+    ref = naive_attention(q, k, v, causal=True)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@sweep(n_cases=4, seed=12)
+def test_sliding_equals_naive(rng):
+    B, H, D = 1, 2, 16
+    W = int(rng.choice([16, 32]))
+    S = W * int(rng.integers(2, 5))
+    key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+    q, k, v = _rand_qkv(key, B, S, H, D)
+    pos = jnp.arange(S)
+    out = sliding_attention(q, k, v, pos, pos, window=W)
+    ref = naive_attention(q, k, v, causal=True, window=W)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_relu_linear_causal_equals_naive():
+    key = jax.random.PRNGKey(5)
+    B, S, H, D = 2, 96, 2, 16
+    q, k, v = _rand_qkv(key, B, S, H, D)
+    out = relu_linear_attention_causal(q, k, v, chunk=32)
+    pq = jax.nn.relu(q.astype(jnp.float32))
+    pk = jax.nn.relu(k.astype(jnp.float32))
+    s = jnp.einsum("bqhd,bchd->bhqc", pq, pk)
+    s = s * jnp.tril(jnp.ones((S, S)))[None, None]
+    num = jnp.einsum("bhqc,bchd->bqhd", s, v.astype(jnp.float32))
+    den = s.sum(-1).transpose(0, 2, 1)[..., None]
+    ref = num / jnp.maximum(den, 1e-6)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode handoff per backend
+# ---------------------------------------------------------------------------
+
+def _handoff(backend, window=32):
+    cfg = AttnConfig(d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                     backend=backend, window=window, q_chunk=16, kv_chunk=16)
+    key = jax.random.PRNGKey(9)
+    params = init_attention(key, cfg)
+    B, S = 2, 48
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S + 1, 64))
+
+    # full forward over S+1 tokens: last-token output is the reference
+    full = attention(params, x, cfg, jnp.arange(S + 1))
+    ref_last = full[:, -1]
+
+    # prefill S tokens, then decode token S
+    _, cache = attention(params, x[:, :S], cfg, jnp.arange(S),
+                         return_cache=True, cache_dtype=jnp.float32)
+    if backend in ("softmax",):
+        # grow ring to hold position S
+        cache = {
+            "k": jnp.concatenate(
+                [cache["k"], jnp.zeros((B, 1, 2, 16), cache["k"].dtype)], 1),
+            "v": jnp.concatenate(
+                [cache["v"], jnp.zeros((B, 1, 2, 16), cache["v"].dtype)], 1),
+        }
+    out, _ = attention_decode(params, x[:, S:S + 1], cache, jnp.int32(S),
+                              cfg)
+    return np.asarray(ref_last), np.asarray(out[:, 0])
+
+
+def test_handoff_softmax():
+    ref, out = _handoff("softmax")
+    assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_handoff_sliding():
+    ref, out = _handoff("sliding", window=16)
+    assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_handoff_relu_linear():
+    ref, out = _handoff("relu_linear")
+    assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_chain_matches_prefill():
+    """Decoding tokens one-by-one must equal prefill of the same prefix."""
+    cfg = AttnConfig(d_model=32, n_heads=2, n_kv=1, head_dim=16,
+                     backend="softmax", q_chunk=8, kv_chunk=8)
+    key = jax.random.PRNGKey(3)
+    params = init_attention(key, cfg)
+    B, S = 1, 12
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 32))
+    full = attention(params, x, cfg, jnp.arange(S))
+    cache = init_kv_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = attention_decode(params, x[:, t:t + 1], cache,
+                                    jnp.int32(t), cfg)
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP flash (the §Perf memory-term fix)
+# ---------------------------------------------------------------------------
+
+def test_flash_vjp_matches_autodiff():
+    """Values AND grads of the custom-VJP flash == XLA autodiff oracle."""
+    from repro.layers.flash import flash_attention
+    key = jax.random.PRNGKey(21)
+    B, S, H, D = 2, 96, 2, 16
+    q, k, v = _rand_qkv(key, B, S, H, D)
+    pos = jnp.arange(S)
+    for causal, window in ((True, None), (False, None), (True, 32)):
+        out = flash_attention(q, k, v, pos, pos, causal, window, 32, 32)
+        ref = naive_attention(q, k, v, causal=causal, window=window)
+        assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5,
+                        atol=3e-5)
+        g1 = jax.grad(lambda *a: jnp.sum(
+            flash_attention(*a, pos, pos, causal, window, 32, 32) ** 2),
+            argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(lambda *a: jnp.sum(
+            naive_attention(*a, causal=causal, window=window) ** 2),
+            argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4,
+                            atol=3e-4)
+
+
+def test_flash_vjp_arch_flag():
+    """flash_vjp=True must not change a model's loss or gradients."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.models.registry import build_model
+    base = smoke_variant(get_arch("granite-3-2b"))
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+             "targets": jnp.ones((2, 32), jnp.int32)}
+    vals = {}
+    for flag in (False, True):
+        cfg = base.scaled(flash_vjp=flag)
+        model = build_model(cfg)
+        params = model.init(key)
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        vals[flag] = (float(loss), grads)
+    assert abs(vals[False][0] - vals[True][0]) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(vals[False][1]),
+                    jax.tree_util.tree_leaves(vals[True][1])):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)

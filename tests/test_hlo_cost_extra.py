@@ -1,0 +1,111 @@
+"""Additional hlo_cost unit tests: fusion aliasing, light-fusion skip,
+collective wire models, synthetic HLO corner cases."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import (
+    Computation, Inst, _fusion_alias_correction, _is_light_fusion,
+    analyze_hlo, parse_computations)
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_light_fusion_classification():
+    light = Computation("f")
+    light.add(Inst("p0", "f32[8]{0}", "parameter", "0)"))
+    light.add(Inst("e", "f32[8]{0}", "exponential", "%p0)"))
+    assert _is_light_fusion(light)
+    heavy = Computation("g")
+    heavy.add(Inst("p0", "f32[8,8]{1,0}", "parameter", "0)"))
+    heavy.add(Inst("d", "f32[8,8]{1,0}", "dot",
+                   "%p0, %p0), lhs_contracting_dims={1}, "
+                   "rhs_contracting_dims={0}"))
+    assert not _is_light_fusion(heavy)
+
+
+def test_fusion_alias_correction_dus():
+    comp = Computation("f")
+    comp.add(Inst("p0", "f32[10,64]{1,0}", "parameter", "0)"))
+    comp.add(Inst("p1", "f32[1,64]{1,0}", "parameter", "1)"))
+    comp.add(Inst("p2", "s32[]", "parameter", "2)"))
+    comp.add(Inst("dus", "f32[10,64]{1,0}", "dynamic-update-slice",
+                  "%p0, %p1, %p2, %p2)"))
+    sub, add = _fusion_alias_correction(comp)
+    assert sub == 2 * 10 * 64 * 4          # buffer in + aliased out
+    assert add == 2 * 1 * 64 * 4           # update read+write
+
+
+def test_collectives_inside_scan_multiply():
+    """A psum inside a scan body must be counted x trip count."""
+    import os
+    # single device: psum over a trivial axis won't emit a collective;
+    # construct synthetic HLO instead
+    hlo = """
+HloModule t
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128]{0} get-tuple-element(%p), index=1
+  %c1 = s32[] constant(1)
+  %ni = s32[] add(%i, %c1)
+  %ar = f32[128]{0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[128]{0}) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(9)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128]) -> f32[128] {
+  %x = f32[128]{0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[128]{0}) tuple(%c0, %x)
+  %w = (s32[], f32[128]{0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+    c = analyze_hlo(hlo)
+    # ring all-reduce: 2x operand bytes x 9 trips
+    assert c.coll_by_kind["all-reduce"] == 9 * 2 * 128 * 4
+    assert c.n_while == 1 and c.unknown_loops == 0
+
+
+def test_bytes_scale_with_tensor_size():
+    big = analyze_hlo(_hlo(lambda a, b: a @ b,
+                           jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                           jax.ShapeDtypeStruct((256, 256), jnp.float32)))
+    small = analyze_hlo(_hlo(lambda a, b: a @ b,
+                             jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                             jax.ShapeDtypeStruct((64, 64), jnp.float32)))
+    assert big.bytes > 10 * small.bytes
+    assert big.flops == 64 * small.flops
+
+
+def test_elementwise_is_free_between_dots():
+    """tanh between two dots must not add traffic (fused on TPU)."""
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    plain = analyze_hlo(_hlo(lambda w, x: (x @ w) @ w, w, x))
+    with_ew = analyze_hlo(_hlo(lambda w, x: jnp.tanh(x @ w) @ w, w, x))
+    assert with_ew.bytes <= plain.bytes * 1.2, (with_ew.bytes, plain.bytes)
+
+
+def test_parse_variant():
+    from repro.launch.dryrun import parse_variant
+    v = parse_variant("flash_vjp=True,q_chunk=512,score_dtype=bfloat16,"
+                      "capacity_factor=1.5")
+    assert v == {"flash_vjp": True, "q_chunk": 512,
+                 "score_dtype": "bfloat16", "capacity_factor": 1.5}
+    assert parse_variant("") == {}

@@ -1,0 +1,187 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle.
+
+Every kernel is validated against its pure-jnp oracle across randomized
+shapes and dtypes via the seeded sweep harness (tests/proptest.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from proptest import sweep
+
+from repro.kernels.dsconv.kernel import dsconv_fused
+from repro.kernels.dsconv.ref import dsconv_ref
+from repro.kernels.int8_matmul.kernel import int8_matmul
+from repro.kernels.relu_attn.kernel import relu_attn_causal, relu_attn_noncausal
+from repro.kernels.relu_attn.ops import relu_linear_attention
+from repro.kernels.relu_attn.ref import relu_attn_causal_ref, relu_attn_noncausal_ref
+from repro.kernels.ssd.ops import ssd_op
+from repro.kernels.ssd.ref import ssd_recurrent_ref
+
+TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+        jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _qkv(rng, b, n, d, dtype):
+    def one(seed):
+        return jnp.asarray(rng.standard_normal((b, n, d)), dtype)
+
+    return one(0), one(1), one(2)
+
+
+# ---------------------------------------------------------------------------
+# relu_attn
+# ---------------------------------------------------------------------------
+
+@sweep(n_cases=8, seed=1)
+def test_relu_attn_noncausal_sweep(rng):
+    dtype = [jnp.float32, jnp.bfloat16][int(rng.integers(2))]
+    b = int(rng.integers(1, 5))
+    n = int(rng.integers(1, 9)) * 16
+    d = int(rng.choice([16, 32, 64]))
+    block = int(rng.choice([16, 32, n]))
+    q, k, v = _qkv(rng, b, n, d, dtype)
+    out = relu_attn_noncausal(q, k, v, block_n=block)
+    ref = relu_attn_noncausal_ref(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(ref), **TOLS[dtype])
+
+
+@sweep(n_cases=8, seed=2)
+def test_relu_attn_causal_sweep(rng):
+    dtype = [jnp.float32, jnp.bfloat16][int(rng.integers(2))]
+    b = int(rng.integers(1, 4))
+    n = int(rng.integers(1, 9)) * 16
+    d = int(rng.choice([16, 32]))
+    chunk = int(rng.choice([16, 32, n]))
+    q, k, v = _qkv(rng, b, n, d, dtype)
+    out = relu_attn_causal(q, k, v, chunk=chunk)
+    ref = relu_attn_causal_ref(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(ref), **TOLS[dtype])
+
+
+def test_relu_attn_ops_multihead():
+    key = jax.random.PRNGKey(0)
+    B, N, H, D = 2, 64, 4, 32
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, N, H, D))
+               for i in range(3))
+    out = relu_linear_attention(q, k, v, causal=False)
+    # oracle per head
+    for h in range(H):
+        ref = relu_attn_noncausal_ref(q[:, :, h], k[:, :, h], v[:, :, h])
+        assert_allclose(np.asarray(out[:, :, h]), np.asarray(ref),
+                        rtol=2e-5, atol=2e-5)
+
+
+def test_relu_attn_linearity_in_v():
+    """Linear attention must be exactly linear in V (paper's associativity)."""
+    key = jax.random.PRNGKey(3)
+    q, k, v1, v2 = (jax.random.normal(jax.random.fold_in(key, i), (2, 32, 16))
+                    for i in range(4))
+    a = relu_attn_noncausal(q, k, v1 + 2.0 * v2)
+    b = relu_attn_noncausal(q, k, v1) + 2.0 * relu_attn_noncausal(q, k, v2)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dsconv (TMP inter-layer fusion)
+# ---------------------------------------------------------------------------
+
+@sweep(n_cases=8, seed=3)
+def test_dsconv_sweep(rng):
+    b = int(rng.integers(1, 3))
+    hw = int(rng.choice([8, 12, 16]))
+    c = int(rng.choice([8, 16, 32]))
+    f = int(rng.choice([16, 32, 64]))
+    stride = int(rng.choice([1, 2]))
+    act = bool(rng.integers(2))
+    x = jnp.asarray(rng.standard_normal((b, hw, hw, c)), jnp.float32)
+    dw_w = jnp.asarray(rng.standard_normal((3, 3, c)), jnp.float32)
+    dw_b = jnp.asarray(rng.standard_normal((c,)), jnp.float32)
+    pw_w = jnp.asarray(rng.standard_normal((c, f)), jnp.float32)
+    pw_b = jnp.asarray(rng.standard_normal((f,)), jnp.float32)
+    out = dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act)
+    ref = dsconv_ref(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_dsconv_matches_lax_conv():
+    """Cross-check the oracle itself against lax.conv depthwise+pointwise."""
+    from repro.layers.conv import conv2d
+    key = jax.random.PRNGKey(1)
+    b, hw, c, f = 2, 8, 8, 16
+    x = jax.random.normal(key, (b, hw, hw, c))
+    dw_w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, c))
+    pw_w = jax.random.normal(jax.random.fold_in(key, 2), (c, f))
+    out = dsconv_ref(x, dw_w, jnp.zeros((c,)), pw_w, jnp.zeros((f,)),
+                     act=False)
+    dw = conv2d({"w": dw_w[:, :, None, :]}, x, groups=c)
+    ref = jnp.einsum("bhwc,cf->bhwf", dw, pw_w)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul (FIX8 datapath)
+# ---------------------------------------------------------------------------
+
+@sweep(n_cases=8, seed=4)
+def test_int8_matmul_sweep(rng):
+    m = int(rng.choice([16, 32, 64]))
+    k = int(rng.choice([32, 64, 128]))
+    n = int(rng.choice([16, 48, 96]))
+    bm = int(rng.choice([16, m]))
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    xs = float(rng.uniform(0.01, 0.2))
+    ws = jnp.asarray(rng.uniform(0.01, 0.2, (n,)), jnp.float32)
+    out = int8_matmul(xq, wq, xs, ws, block_m=bm, block_n=16, block_k=32)
+    ref = (xq.astype(jnp.int32) @ wq.astype(jnp.int32)).astype(jnp.float32) \
+        * xs * ws[None, :]
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+    # int32 accumulation exact up to the fp32 rescale rounding
+    out_i = np.asarray(out / (xs * ws[None, :]))
+    int_ref = np.asarray(xq.astype(jnp.int32) @ wq.astype(jnp.int32))
+    assert np.allclose(out_i, int_ref, rtol=1e-5, atol=0.5)
+
+
+# ---------------------------------------------------------------------------
+# ssd (Mamba-2 chunked scan)
+# ---------------------------------------------------------------------------
+
+@sweep(n_cases=6, seed=5)
+def test_ssd_pallas_sweep(rng):
+    b = int(rng.integers(1, 3))
+    s = int(rng.integers(1, 5)) * 32
+    h = int(rng.choice([2, 4]))
+    p = int(rng.choice([16, 32]))
+    g = int(rng.choice([1, 2]))
+    n = int(rng.choice([8, 16]))
+    chunk = int(rng.choice([16, 32, s]))
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, h)),
+                                     jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.standard_normal((h,)) * 0.5, jnp.float32))
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((h,)), jnp.float32)
+    out = ssd_op(x, dt, A, B, C, chunk=chunk, D_skip=D)
+    ref, _ = ssd_recurrent_ref(x, dt, A, B, C, D_skip=D)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_jnp_chunk_invariance():
+    """Chunk size must not change the result (scan-vs-parallel duality)."""
+    from repro.layers.mamba2 import ssd_chunked
+    key = jax.random.PRNGKey(7)
+    b, s, h, p, g, n = 2, 96, 2, 16, 1, 8
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, g, n))
+    y32, st32 = ssd_chunked(x, dt, A, B, C, chunk=32)
+    y96, st96 = ssd_chunked(x, dt, A, B, C, chunk=96)
+    assert_allclose(np.asarray(y32), np.asarray(y96), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(st32), np.asarray(st96), rtol=1e-4, atol=1e-4)

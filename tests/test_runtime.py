@@ -1,0 +1,237 @@
+"""Runtime behaviour: checkpoint atomicity/resume, fault-tolerant trainer,
+straggler detection, data-pipeline determinism + elastic resharding,
+serving engine, schedules, gradient compression.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.checkpoint.checkpoint import (
+    CheckpointManager, latest_step, restore, save)
+from repro.configs import get_arch, smoke_variant
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, host_shard
+from repro.models.registry import build_model
+from repro.optim.compression import (
+    compress_grads_with_feedback, decompress_grads, init_error_feedback)
+from repro.optim.schedule import ScheduleConfig, lr_scale
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.trainer import Trainer, TrainerConfig, make_failure_hook
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.sampler import SamplerConfig
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(key):
+    return {"a": jax.random.normal(key, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    save(str(tmp_path), 7, t, extra={"loss": 1.5})
+    out, step, extra = restore(str(tmp_path), t)
+    assert step == 7 and extra["loss"] == 1.5
+    assert_allclose(np.asarray(out["a"]), np.asarray(t["a"]))
+    assert_allclose(np.asarray(out["nested"]["b"]),
+                    np.asarray(t["nested"]["b"]))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A .tmp dir (simulated crash mid-write) must be invisible."""
+    t = _tree(jax.random.PRNGKey(1))
+    save(str(tmp_path), 5, t)
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree(jax.random.PRNGKey(2))
+    for s in (10, 20, 30):
+        mgr.save_async(s, t)
+    mgr.close()
+    kept = sorted(int(n[5:]) for n in os.listdir(tmp_path)
+                  if n.startswith("step_"))
+    assert kept == [20, 30]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    t = _tree(jax.random.PRNGKey(3))
+    save(str(tmp_path), 1, t)
+    bad = {"a": jnp.zeros((5, 8)), "nested": {"b": t["nested"]["b"]}}
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), bad)
+
+
+# ---------------------------------------------------------------------------
+# trainer: loss goes down; failure -> auto-resume continues
+# ---------------------------------------------------------------------------
+
+def _trainer(tmp_path, *, steps=30, hook=None, arch="granite-3-2b"):
+    cfg = smoke_variant(get_arch(arch))
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8,
+                      sharpness=4.0)
+    tcfg = TrainerConfig(total_steps=steps, ckpt_every=10,
+                         ckpt_dir=str(tmp_path / "ckpt"), log_every=100)
+    return Trainer(cfg, data, tcfg, failure_hook=hook)
+
+
+def test_train_loss_decreases(tmp_path):
+    tr = _trainer(tmp_path, steps=40)
+    out = tr.run()
+    first5 = np.mean(out["losses"][:5])
+    last5 = np.mean(out["losses"][-5:])
+    assert last5 < first5 - 0.1, (first5, last5)
+
+
+def test_failure_recovery_resumes_from_checkpoint(tmp_path):
+    hook = make_failure_hook([25])       # die once at step 25
+    tr = _trainer(tmp_path, steps=30, hook=hook)
+    out = tr.run()
+    # completed despite the failure; ran 30 + (30-20) steps of losses
+    assert len(out["losses"]) >= 30
+    assert latest_step(str(tmp_path / "ckpt")) == 30
+
+
+def test_restart_budget_exhausted(tmp_path):
+    hook = make_failure_hook([0, 1, 2, 3, 4, 5, 6, 7])
+    tr = _trainer(tmp_path, steps=10, hook=hook)
+    tr.cfg.max_restarts = 2
+    with pytest.raises(RuntimeError, match="restart budget"):
+        tr.run()
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_flagging():
+    mon = StragglerMonitor(min_samples=8, k_mad=4.0)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        times = {f"h{i}": 1.0 + rng.normal(0, 0.01) for i in range(8)}
+        times["h3"] = 1.8 + rng.normal(0, 0.01)   # consistent straggler
+        mon.record_step(times)
+    rep = mon.report()
+    assert rep.flagged == ["h3"]
+    assert rep.slowest[0][0] == "h3"
+    assert mon.should_evict() == ["h3"]
+
+
+def test_straggler_no_false_positives():
+    mon = StragglerMonitor(min_samples=8)
+    rng = np.random.default_rng(1)
+    for _ in range(16):
+        mon.record_step({f"h{i}": 1.0 + rng.normal(0, 0.02)
+                         for i in range(8)})
+    assert mon.report().flagged == []
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: determinism + elastic resharding
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_step_keyed():
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=8)
+    d1, d2 = SyntheticLMDataset(cfg), SyntheticLMDataset(cfg)
+    b1, b2 = d1.global_batch(3), d2.global_batch(3)
+    assert_allclose(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(d1.global_batch(4)["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_elastic_reshard_preserves_global_batch():
+    """4 hosts' shards and 2 hosts' shards tile the same global batch."""
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=8)
+    ds = SyntheticLMDataset(cfg)
+    g = ds.global_batch(11)
+    four = np.concatenate([np.asarray(ds.host_batch(11, i, 4)["tokens"])
+                           for i in range(4)])
+    two = np.concatenate([np.asarray(ds.host_batch(11, i, 2)["tokens"])
+                          for i in range(2)])
+    assert_allclose(four, np.asarray(g["tokens"]))
+    assert_allclose(two, np.asarray(g["tokens"]))
+
+
+def test_targets_shift_by_one():
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=2)
+    b = SyntheticLMDataset(cfg).global_batch(0)
+    assert_allclose(np.asarray(b["tokens"][:, 1:]),
+                    np.asarray(b["targets"][:, :-1]))
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-1.3b",
+                                  "zamba2-1.2b"])
+def test_serving_continuous_batching(arch):
+    cfg = smoke_variant(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_slots=2, max_len=64, sampler=SamplerConfig(temperature=0.0)))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=5 + i),
+                    max_tokens=4) for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_serving_greedy_is_deterministic():
+    cfg = smoke_variant(get_arch("granite-3-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            max_slots=1, max_len=64, sampler=SamplerConfig(temperature=0.0)))
+        done = eng.run([Request(rid=0, prompt=np.arange(8) % cfg.vocab,
+                                max_tokens=6)])
+        outs.append(done[0].out_tokens)
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# schedules + compression
+# ---------------------------------------------------------------------------
+
+def test_schedule_shapes():
+    cfg = ScheduleConfig(kind="cosine", warmup_steps=10, total_steps=100,
+                         min_ratio=0.1)
+    assert float(lr_scale(cfg, 0)) == 0.0
+    assert abs(float(lr_scale(cfg, 10)) - 1.0) < 1e-6
+    assert abs(float(lr_scale(cfg, 100)) - 0.1) < 1e-6
+    mid = float(lr_scale(cfg, 55))
+    assert 0.1 < mid < 1.0
+
+
+def test_grad_compression_error_feedback_converges():
+    """Sum of compressed grads over steps -> true sum (error feedback)."""
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (32, 32))}
+    ef = init_error_feedback(grads)
+    acc = jnp.zeros((32, 32))
+    for i in range(50):
+        q, ef = compress_grads_with_feedback(grads, ef)
+        acc = acc + decompress_grads(q, grads)["w"]
+    true = grads["w"] * 50
+    rel = float(jnp.linalg.norm(acc - true) / jnp.linalg.norm(true))
+    assert rel < 0.01, rel
+
+
+def test_compression_is_4x_smaller():
+    g = jnp.ones((1024,), jnp.float32)
+    from repro.optim.compression import quantize_leaf
+    q, scale = quantize_leaf(g)
+    assert q.dtype == jnp.int8
+    assert q.nbytes * 4 == g.nbytes

@@ -1,0 +1,123 @@
+"""Serving edge cases + sampler behaviour + straggler->elastic handshake."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.models.registry import build_model
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.sampler import SamplerConfig, sample
+
+
+# ---------------------------------------------------------------------------
+# samplers
+# ---------------------------------------------------------------------------
+
+def test_greedy_sampler_is_argmax():
+    logits = jnp.asarray([[1.0, 5.0, 2.0], [0.1, 0.0, 3.0]])
+    out = sample(logits, jax.random.PRNGKey(0), SamplerConfig())
+    assert out.tolist() == [1, 2]
+
+
+def test_top_k_restricts_support():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0, 10.0]] * 64)
+    cfg = SamplerConfig(temperature=1.0, top_k=2)
+    toks = np.asarray(sample(logits, key, cfg))
+    assert set(toks.tolist()) <= {3, 4}
+
+
+def test_top_p_restricts_support():
+    key = jax.random.PRNGKey(1)
+    # one dominant token (p ~ 0.94) -> top_p=0.9 keeps only it
+    logits = jnp.asarray([[0.0, 0.0, 0.0, 6.0]] * 32)
+    cfg = SamplerConfig(temperature=1.0, top_p=0.9)
+    toks = np.asarray(sample(logits, key, cfg))
+    assert set(toks.tolist()) == {3}
+
+
+def test_temperature_zero_deterministic():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 100))
+    a = sample(logits, jax.random.PRNGKey(3), SamplerConfig())
+    b = sample(logits, jax.random.PRNGKey(4), SamplerConfig())
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# engine edge cases
+# ---------------------------------------------------------------------------
+
+def _engine(slots=2, max_len=64, eos=-1):
+    cfg = smoke_variant(get_arch("granite-3-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(cfg, params, ServeConfig(
+        max_slots=slots, max_len=max_len, eos_token=eos,
+        sampler=SamplerConfig(temperature=0.0)))
+
+
+def test_engine_rejects_when_full():
+    cfg, eng = _engine(slots=1)
+    assert eng.admit(Request(rid=0, prompt=np.arange(4), max_tokens=8))
+    assert not eng.admit(Request(rid=1, prompt=np.arange(4), max_tokens=8))
+
+
+def test_engine_slot_reuse_after_finish():
+    cfg, eng = _engine(slots=1)
+    done = eng.run([Request(rid=i, prompt=np.arange(3 + i), max_tokens=3)
+                    for i in range(3)])
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.out_tokens) == 3 for r in done)
+
+
+def test_engine_eos_stops_early():
+    cfg, eng = _engine(slots=1, eos=0)
+    done = eng.run([Request(rid=0, prompt=np.arange(4), max_tokens=32)])
+    r = done[0]
+    # either hit eos (last token 0) or exhausted the budget
+    assert r.out_tokens[-1] == 0 or len(r.out_tokens) == 32
+
+
+def test_ragged_prompts_match_solo_decode():
+    """Two ragged requests batched == each served alone (greedy)."""
+    cfg, eng = _engine(slots=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 5), rng.integers(0, cfg.vocab, 13)]
+    batched = eng.run([Request(rid=i, prompt=p, max_tokens=5)
+                       for i, p in enumerate(prompts)])
+    batched = {r.rid: r.out_tokens for r in batched}
+    for i, p in enumerate(prompts):
+        cfg2, solo_eng = _engine(slots=1)
+        solo = solo_eng.run([Request(rid=0, prompt=p, max_tokens=5)])
+        assert solo[0].out_tokens == batched[i], i
+
+
+# ---------------------------------------------------------------------------
+# straggler -> elastic handshake
+# ---------------------------------------------------------------------------
+
+def test_straggler_triggers_elastic_remesh():
+    """Flagged host -> drop it -> reshard state onto survivors -> state
+    values preserved bit-exactly."""
+    from repro.runtime.straggler import StragglerMonitor
+    from repro.runtime.elastic import replicate_tree
+
+    mon = StragglerMonitor(min_samples=8)
+    rng = np.random.default_rng(0)
+    hosts = [f"h{i}" for i in range(4)]
+    for _ in range(12):
+        times = {h: 1.0 + rng.normal(0, 0.01) for h in hosts}
+        times["h2"] = 2.5
+        mon.record_step(times)
+    evict = mon.should_evict()
+    assert evict == ["h2"]
+
+    # single-device container: model the re-mesh as replicate-on-survivors
+    survivors = [h for h in hosts if h not in evict]
+    assert len(survivors) == 3
+    state = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 8))}
+    mesh = jax.make_mesh((1,), ("data",))
+    out = replicate_tree(state, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
