@@ -1,8 +1,8 @@
 """Quickstart: the paper's model + technique in five minutes on CPU.
 
 1. Build EfficientViT-B1 (smoke size) and run an image through it.
-2. Run the same multi-scale ReLU linear attention through the fused
-   Pallas kernel and check they agree.
+2. Build a fusion plan and run the whole network through the fused
+   Pallas megakernels (MBConv + single-pass MSA) — check they agree.
 3. Quantize the network to FIX8 (the paper's datapath) and compare.
 4. Ask the cycle-level accelerator model for the paper's Table II row.
 5. Use the paper's attention as an LM backend and decode with O(1) state.
@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from repro.configs import get_arch, smoke_variant
 from repro.core.accelerator_model import analyze
 from repro.core.efficientvit import B1, B1_SMOKE, efficientvit, init_efficientvit
+from repro.core.fusion import build_plan, launch_counts
 from repro.core.quantization import quantization_error, quantize_efficientvit
-from repro.kernels.relu_attn.ops import msa_attention_fn
 from repro.models.registry import build_model
 
 key = jax.random.PRNGKey(0)
@@ -28,12 +28,15 @@ logits = jax.jit(lambda p, x: efficientvit(p, x, B1_SMOKE))(params, img)
 print(f"[1] EfficientViT-B1(smoke) logits: {logits.shape}, "
       f"top-1 class {int(jnp.argmax(logits))}")
 
-# -- 2. fused Pallas ReLU-attention drop-in ----------------------------------
+# -- 2. fused inference path (TMP dataflow on TPU) ---------------------------
+plan = build_plan(params, B1_SMOKE, batch=1, autotune=False)
 logits_kernel = jax.jit(
-    lambda p, x: efficientvit(p, x, B1_SMOKE,
-                              attention_fn=msa_attention_fn))(params, img)
+    lambda p, x: efficientvit(p, x, B1_SMOKE, plan=plan))(params, img)
 err = float(jnp.max(jnp.abs(logits - logits_kernel)))
-print(f"[2] Pallas fused MSA kernel max|Δ| vs jnp: {err:.2e}")
+lc = launch_counts(plan)
+print(f"[2] fused plan: {plan.n_fused()}/{len(plan.decisions)} sites fused, "
+      f"{lc['reference']} -> {lc['fused']} kernel launches, "
+      f"max|Δ| vs reference: {err:.2e}")
 
 # -- 3. FIX8 quantization (paper §IV-A) --------------------------------------
 qparams = quantize_efficientvit(params)

@@ -110,9 +110,14 @@ def init_evit_module(key, c, head_dim, scales, expand, dtype):
     }
 
 
-def evit_module(p, x, cfg: EfficientViTConfig, c, *, attention_fn=None):
+def evit_module(p, x, cfg: EfficientViTConfig, c, *, attention_fn=None,
+                plan=None, site=None):
     mcfg = MSAConfig(c, cfg.head_dim, tuple(cfg.msa_scales), cfg.dtype)
     kw = {} if attention_fn is None else {"attention_fn": attention_fn}
+    if plan is not None:
+        from repro.core.fusion import dispatch_mbconv
+        x = x + msa(p["msa"], x, mcfg, plan=plan, site=f"{site}.msa", **kw)
+        return x + dispatch_mbconv(plan, f"{site}.mb", p["mbconv"], x)
     x = x + msa(p["msa"], x, mcfg, **kw)
     x = x + mbconv(p["mbconv"], x)
     return x
@@ -157,21 +162,33 @@ def init_efficientvit(key, cfg: EfficientViTConfig = B1):
 
 
 def efficientvit(params, x, cfg: EfficientViTConfig = B1, *,
-                 attention_fn=None):
-    """x: (B, H, W, 3) image -> (B, num_classes) logits."""
+                 attention_fn=None, plan=None):
+    """x: (B, H, W, 3) image -> (B, num_classes) logits.
+
+    ``plan`` is an optional ``core.fusion.FusionPlan`` (built ahead of
+    time by ``core.fusion.build_plan``) routing stem DSConvs, MBConv
+    blocks and MSA cores through the fused Pallas megakernels.  With
+    ``plan=None`` the reference path below runs unchanged.
+    """
+    if plan is not None:
+        from repro.core.fusion import dispatch_dsconv, dispatch_mbconv
     y = conv_bn_act(params["stem_conv"], x, stride=2)
-    for p in params["stem_ds"]:
-        y = y + dsconv(p, y)
+    for i, p in enumerate(params["stem_ds"]):
+        y = y + (dispatch_dsconv(plan, f"stem.ds{i}", p, y)
+                 if plan is not None else dsconv(p, y))
     for si in (1, 2):
         for bi, p in enumerate(params[f"stage{si}"]):
             stride = 2 if bi == 0 else 1
-            out = mbconv(p, y, stride=stride)
+            out = (dispatch_mbconv(plan, f"S{si}.mb{bi}", p, y, stride=stride)
+                   if plan is not None else mbconv(p, y, stride=stride))
             y = out if bi == 0 else y + out
     for si in (3, 4):
         stage = params[f"stage{si}"]
-        y = mbconv(stage["down"], y, stride=2)
-        for p in stage["blocks"]:
-            y = evit_module(p, y, cfg, y.shape[-1], attention_fn=attention_fn)
+        y = (dispatch_mbconv(plan, f"S{si}.down", stage["down"], y, stride=2)
+             if plan is not None else mbconv(stage["down"], y, stride=2))
+        for bi, p in enumerate(stage["blocks"]):
+            y = evit_module(p, y, cfg, y.shape[-1], attention_fn=attention_fn,
+                            plan=plan, site=f"S{si}.evit{bi}")
     y = conv_bn_act(params["head"]["conv"], y)
     y = jnp.mean(y, axis=(1, 2))
 

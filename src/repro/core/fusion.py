@@ -1,0 +1,278 @@
+"""Fusion-plan dispatch: route EfficientViT inference through the fused
+Pallas kernels.
+
+This is the software analogue of the paper's TMP dataflow compiler pass
+(and of CHOSEN's compile-time optimization stack, arXiv 2407.12736):
+``build_plan`` walks the param tree alongside the layer manifest ONCE,
+ahead of time and outside ``jax.jit``, deciding per fusible site whether
+the shapes qualify for the fused kernel (VMEM budget, fp32 weights) and
+which autotuned block sizes to use.  The jitted forward then consults the
+frozen plan — dispatch is pure table lookup, no tracing-time tuning.
+
+Fusible sites:
+  * ``stem.ds{i}``            DSConv        -> kernels/dsconv  (DW+PW)
+  * ``S{1,2}.mb{i}``          MBConv        -> kernels/mbconv  (PW+DW+PW)
+  * ``S{3,4}.down``           MBConv        -> kernels/mbconv
+  * ``S{3,4}.evit{i}.mb``     MBConv        -> kernels/mbconv
+  * ``S{3,4}.evit{i}.msa``    MSA core      -> kernels/relu_attn, all
+                              multi-scale branches + heads folded into
+                              one single-pass launch
+
+Anything that fails a check runs the reference path — ``plan=None``
+leaves the reference forward byte-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax.numpy as jnp
+
+__all__ = ["SiteDecision", "FusionPlan", "build_plan", "plan_report",
+           "launch_counts"]
+
+MSA_DEFAULT_BLOCK_N = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteDecision:
+    name: str              # e.g. "S3.evit0.msa"
+    kind: str              # dsconv | mbconv | msa
+    fused: bool
+    reason: str            # "ok" | "vmem" | "quantized" | "disabled"
+    blocks: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    decisions: Mapping[str, SiteDecision]
+    interpret: bool = True
+    default_fuse: bool = True   # sites not in the table (standalone msa())
+
+    def get(self, name):
+        return self.decisions.get(name)
+
+    def is_fused(self, name) -> bool:
+        d = self.decisions.get(name)
+        if d is None:
+            return self.default_fuse
+        return d.fused
+
+    def blocks(self, name) -> dict:
+        d = self.decisions.get(name)
+        return dict(d.blocks) if d is not None else {}
+
+    def n_fused(self) -> int:
+        return sum(d.fused for d in self.decisions.values())
+
+    def table(self) -> str:
+        """Markdown routing table (EXPERIMENTS.md / benchmark output)."""
+        rows = ["| site | kind | route | blocks | reason |",
+                "|------|------|-------|--------|--------|"]
+        for d in self.decisions.values():
+            route = "fused" if d.fused else "reference"
+            blocks = ",".join(f"{k}={v}" for k, v in d.blocks.items()) or "-"
+            rows.append(f"| {d.name} | {d.kind} | {route} | {blocks} "
+                        f"| {d.reason} |")
+        return "\n".join(rows)
+
+
+def _quantized(block) -> bool:
+    return any(isinstance(v, dict) and "qconv" in v for v in block.values())
+
+
+def _decide_mbconv(name, p, B, H, W, C, F, stride, *, enabled, autotune,
+                   interpret):
+    from repro.kernels.mbconv.ops import (
+        VMEM_BUDGET_BYTES, mbconv_vmem_bytes, tune_block_f)
+    mid = p["pw1"]["conv"]["w"].shape[-1] if "conv" in p["pw1"] else \
+        p["pw1"]["qconv"]["q"].shape[-1]
+    shape = (B, H, W, C, mid, F, stride)
+    if not enabled:
+        return SiteDecision(name, "mbconv", False, "disabled", shape=shape)
+    if _quantized(p):
+        return SiteDecision(name, "mbconv", False, "quantized", shape=shape)
+    if mbconv_vmem_bytes(H, W, C, mid, stride) > VMEM_BUDGET_BYTES:
+        return SiteDecision(name, "mbconv", False, "vmem", shape=shape)
+    bf = tune_block_f((B, H, W, C), mid, F, stride=stride,
+                      allow_sweep=autotune, interpret=interpret)
+    return SiteDecision(name, "mbconv", True, "ok", {"block_f": bf}, shape)
+
+
+def _decide_dsconv(name, p, B, H, W, C, *, enabled, autotune):
+    from repro.kernels.dsconv.ops import VMEM_BUDGET_BYTES, dsconv_vmem_bytes
+    shape = (B, H, W, C, C, C, 1)
+    if not enabled:
+        return SiteDecision(name, "dsconv", False, "disabled", shape=shape)
+    if _quantized(p):
+        return SiteDecision(name, "dsconv", False, "quantized", shape=shape)
+    if dsconv_vmem_bytes(H, W, C) > VMEM_BUDGET_BYTES:
+        return SiteDecision(name, "dsconv", False, "vmem", shape=shape)
+    return SiteDecision(name, "dsconv", True, "ok", {"block_f": 128}, shape)
+
+
+def _decide_msa(name, B, n_tok, heads, head_dim, n_branches, *, enabled,
+                autotune, interpret):
+    from repro.kernels.relu_attn.ops import tune_block_n
+    BH = n_branches * B * heads
+    shape = (BH, n_tok, head_dim, n_branches)
+    if not enabled:
+        return SiteDecision(name, "msa", False, "disabled", shape=shape)
+    bn = tune_block_n(BH, n_tok, head_dim, allow_sweep=autotune,
+                      interpret=interpret)
+    return SiteDecision(name, "msa", True, "ok", {"block_n": bn}, shape)
+
+
+def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
+               fuse_dsconv: bool = True, fuse_mbconv: bool = True,
+               fuse_msa: bool = True, autotune: bool = True,
+               interpret: bool = True) -> FusionPlan:
+    """Walk the param tree + architecture and freeze per-site routing.
+
+    Runs outside jit: autotune sweeps (when ``autotune=True`` and the
+    cache is cold) time the real kernels on synthetic inputs here, never
+    at trace time.
+    """
+    w, d = cfg.widths, cfg.depths
+    size = image_size or cfg.image_size
+    B = batch
+    decisions: dict[str, SiteDecision] = {}
+
+    def put(dec):
+        decisions[dec.name] = dec
+
+    r = size // 2                                   # after the stem conv
+    for i, p in enumerate(params["stem_ds"]):
+        put(_decide_dsconv(f"stem.ds{i}", p, B, r, r, w[0],
+                           enabled=fuse_dsconv, autotune=autotune))
+    for si in (1, 2):
+        c_in = w[si - 1]
+        for bi, p in enumerate(params[f"stage{si}"]):
+            stride = 2 if bi == 0 else 1
+            put(_decide_mbconv(f"S{si}.mb{bi}", p, B, r, r, c_in, w[si],
+                               stride, enabled=fuse_mbconv,
+                               autotune=autotune, interpret=interpret))
+            r //= stride
+            c_in = w[si]
+    for si in (3, 4):
+        stage = params[f"stage{si}"]
+        c = w[si]
+        put(_decide_mbconv(f"S{si}.down", stage["down"], B, r, r, w[si - 1],
+                           c, 2, enabled=fuse_mbconv, autotune=autotune,
+                           interpret=interpret))
+        r //= 2
+        heads = c // cfg.head_dim
+        for bi, p in enumerate(stage["blocks"]):
+            put(_decide_msa(f"S{si}.evit{bi}.msa", B, r * r, heads,
+                            cfg.head_dim, 1 + len(cfg.msa_scales),
+                            enabled=fuse_msa, autotune=autotune,
+                            interpret=interpret))
+            put(_decide_mbconv(f"S{si}.evit{bi}.mb", p["mbconv"], B, r, r,
+                               c, c, 1, enabled=fuse_mbconv,
+                               autotune=autotune, interpret=interpret))
+    return FusionPlan(decisions=decisions, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# dispatch (called from core.efficientvit / core.relu_attention)
+# ---------------------------------------------------------------------------
+
+def dispatch_dsconv(plan, name, p, x):
+    from repro.core.efficientvit import dsconv
+    d = plan.get(name)
+    if d is None or not d.fused:
+        return dsconv(p, x)
+    from repro.kernels.dsconv.ops import dsconv_apply
+    return dsconv_apply(p, x, stride=1, block_f=d.blocks.get("block_f", 128),
+                        interpret=plan.interpret)
+
+
+def dispatch_mbconv(plan, name, p, x, *, stride=1):
+    from repro.core.efficientvit import mbconv
+    d = plan.get(name)
+    if d is None or not d.fused:
+        return mbconv(p, x, stride=stride)
+    from repro.kernels.mbconv.ops import mbconv_apply
+    return mbconv_apply(p, x, stride=stride,
+                        block_f=d.blocks.get("block_f"),
+                        interpret=plan.interpret)
+
+
+# ---------------------------------------------------------------------------
+# analytic accounting (feeds benchmarks/e2e_latency.py + EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+def _mbconv_bytes(B, H, W, C, mid, F, stride):
+    """Activation HBM bytes: unfused = every op round-trips HBM (read
+    inputs, write output); fused = x in once, out once.  fp32."""
+    Ho, Wo = H // stride, W // stride
+    x_b = B * H * W * C * 4
+    mid_b = B * H * W * mid * 4
+    dw_b = B * Ho * Wo * mid * 4
+    out_b = B * Ho * Wo * F * 4
+    unfused = x_b + 2 * mid_b + 2 * dw_b + out_b   # both intermediates r/w
+    fused = x_b + out_b
+    return unfused, fused
+
+
+def _dsconv_bytes(B, H, W, C, F):
+    x_b = B * H * W * C * 4
+    mid_b = B * H * W * C * 4
+    out_b = B * H * W * F * 4
+    return x_b + 2 * mid_b + out_b, x_b + out_b
+
+
+def _msa_bytes(BH, N, D):
+    """Per-module attention-core traffic (all branches/heads folded).
+
+    Unfused reference dataflow materializes ReLU(Q)/ReLU(K), the KV
+    state, the numerator and the divisor in HBM between ops; the fused
+    single-pass kernel reads Q/K/V once and writes the output once.
+    """
+    u = BH * N * D * 4                 # one (N, D) activation per head-fold
+    state = BH * (D * D + D) * 4
+    den = BH * N * 4
+    unfused = (3 * u            # q, k, v in
+               + 4 * u          # relu(Q), relu(K) write + read back
+               + 2 * state      # KV state + ksum write + read
+               + 2 * u          # numerator write + read
+               + 2 * den        # divisor write + read
+               + u)             # out
+    fused = 3 * u + u
+    return unfused, fused
+
+
+def plan_report(plan: FusionPlan) -> list[dict]:
+    """Per-site analytic HBM bytes (unfused vs fused) + launch counts."""
+    rows = []
+    for d in plan.decisions.values():
+        if d.kind == "mbconv":
+            B, H, W, C, mid, F, stride = d.shape
+            unf, fus = _mbconv_bytes(B, H, W, C, mid, F, stride)
+            launches = (3, 1)
+        elif d.kind == "dsconv":
+            B, H, W, C, _, F, _ = d.shape
+            unf, fus = _dsconv_bytes(B, H, W, C, F)
+            launches = (2, 1)
+        else:                                      # msa
+            BH, N, D, n_branches = d.shape
+            unf, fus = _msa_bytes(BH, N, D)
+            launches = (2 * n_branches, 1)         # old per-branch 2-pass
+        rows.append({
+            "site": d.name, "kind": d.kind, "fused": d.fused,
+            "reason": d.reason,
+            "hbm_unfused": unf, "hbm_fused": fus if d.fused else unf,
+            "saving_x": unf / fus if d.fused else 1.0,
+            "launches_ref": launches[0],
+            "launches_fused": launches[1] if d.fused else launches[0],
+        })
+    return rows
+
+
+def launch_counts(plan: FusionPlan) -> dict:
+    rep = plan_report(plan)
+    return {
+        "reference": sum(r["launches_ref"] for r in rep),
+        "fused": sum(r["launches_fused"] for r in rep),
+    }

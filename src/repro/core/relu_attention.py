@@ -92,8 +92,19 @@ def _conv_any(p, x, *, groups=1):
     return conv2d(p, x, groups=groups)
 
 
-def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention):
-    """x: (B, H, W, C) -> (B, H, W, C)."""
+def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention,
+        plan=None, site=None):
+    """x: (B, H, W, C) -> (B, H, W, C).
+
+    ``plan=None`` (default) is the reference path: a Python loop over the
+    ``1 + len(scales)`` branches, each through ``attention_fn``.  With a
+    ``core.fusion.FusionPlan`` (``site`` names this module's entry, e.g.
+    "S3.evit0.msa"; omit it for a standalone module), all branches and
+    heads fold into one grid axis of the single-pass Pallas kernel — the
+    whole module issues ONE attention launch (§III-D intra-layer fusion).
+    An explicitly overridden ``attention_fn`` always wins over the plan:
+    the fused route only replaces the default reference core.
+    """
     B, H, W, C = x.shape
     qkv = _conv_any(params["qkv"], x)                 # (B,H,W,3*total)
     multi = [qkv]
@@ -102,13 +113,28 @@ def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention):
         agg = _conv_any(params["aggreg"][i]["pw"], agg, groups=3 * cfg.n_heads)
         multi.append(agg)
 
-    outs = []
-    for branch in multi:
-        t = branch.reshape(B, H * W, 3, cfg.n_heads, cfg.head_dim)
-        q, k, v = t[:, :, 0], t[:, :, 1], t[:, :, 2]
-        o = attention_fn(q, k, v)
-        outs.append(o.reshape(B, H, W, cfg.total_dim))
-    out = jnp.concatenate(outs, axis=-1)
+    if (plan is not None and attention_fn is relu_global_attention
+            and (site is None or plan.is_fused(site))):
+        from repro.kernels.relu_attn.ops import msa_batched_attention
+        blocks = plan.blocks(site) if site is not None else {}
+        stack = jnp.stack(multi)                      # (S,B,H,W,3*total)
+        S = stack.shape[0]
+        o = msa_batched_attention(
+            stack.reshape(S, B, H * W, 3 * cfg.total_dim),
+            cfg.n_heads, cfg.head_dim,
+            block_n=blocks.get("block_n", 256),
+            interpret=plan.interpret)                 # one launch
+        o = o.reshape(S, B, H, W, cfg.total_dim)
+        out = jnp.moveaxis(o, 0, -2).reshape(B, H, W, S * cfg.total_dim)
+        out = out.astype(x.dtype)
+    else:
+        outs = []
+        for branch in multi:
+            t = branch.reshape(B, H * W, 3, cfg.n_heads, cfg.head_dim)
+            q, k, v = t[:, :, 0], t[:, :, 1], t[:, :, 2]
+            o = attention_fn(q, k, v)
+            outs.append(o.reshape(B, H, W, cfg.total_dim))
+        out = jnp.concatenate(outs, axis=-1)
     if "qconv" in params["proj"]:
         return _conv_any(params["proj"], out)  # BN folded by quantization
     out = pwconv(params["proj"], out)

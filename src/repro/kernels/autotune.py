@@ -1,0 +1,161 @@
+"""Block-size autotuner for the Pallas kernels, with a persistent cache.
+
+The fused kernels tile their grids by ``block_n`` / ``block_f`` /
+``block_{m,k}``; the best tile depends on (shape, dtype, backend) — the
+same compile-time search CHOSEN (arXiv 2407.12736) runs over its FPGA
+design points.  ``autotune()`` sweeps a candidate list by timing the real
+kernel and remembers the winner in an on-disk JSON cache, so the sweep
+runs once per (kind, key) per machine and every later process — including
+a fresh interpreter — reuses the choice without re-timing.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.
+
+Inside a ``jax.jit`` trace there is nothing to time, so callers that may
+be under tracing pass ``bench=None`` and get the cached choice or the
+first (heuristic-default) candidate.  ``repro.core.fusion.build_plan``
+tunes ahead of time, outside jit, which is where the sweeps actually run.
+
+The module also owns ``pad_to_multiple`` — the supported way to handle
+ragged shapes.  Kernels used to silently fall back to one full-tensor
+block whenever ``N % block != 0``; now the wrapper pads the ragged axis
+up to the tile boundary (zeros are exact for matmul accumulation and for
+ReLU-gated attention state) and slices the output back.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["autotune", "pad_to_multiple", "cache_path", "clear_memory_cache",
+           "SWEEP_COUNT"]
+
+# in-memory cache: {cache_key: choice-dict}; mirrors the on-disk file
+_MEM: dict[str, dict] = {}
+_DISK_LOADED: set[str] = set()
+
+# number of timed sweeps this process has run (tests assert cache hits
+# by checking this does not grow on a reload)
+SWEEP_COUNT = 0
+
+
+def cache_path() -> str:
+    p = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if p:
+        return p
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process cache (tests use this to force a disk reload)."""
+    _MEM.clear()
+    _DISK_LOADED.clear()
+
+
+def _load_disk(path: str) -> None:
+    if path in _DISK_LOADED:
+        return
+    _DISK_LOADED.add(path)
+    try:
+        with open(path) as f:
+            _MEM.update(json.load(f))
+    except (OSError, ValueError):
+        pass
+
+
+def _save_disk(path: str) -> None:
+    try:
+        # merge under the current disk state so concurrent processes
+        # tuning different shapes don't drop each other's entries
+        merged: dict[str, dict] = {}
+        try:
+            with open(path) as f:
+                merged.update(json.load(f))
+        except (OSError, ValueError):
+            pass
+        merged.update(_MEM)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: keep the in-memory cache only
+
+
+def _key(kind: str, key: Sequence) -> str:
+    return f"{kind}|" + ",".join(str(k) for k in key)
+
+
+def _time_once(fn: Callable[[], object], reps: int = 3) -> float:
+    jax.block_until_ready(fn())          # warm-up / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(kind: str, key: Sequence, candidates: Sequence[dict],
+             bench: Callable[[dict], object] | None = None) -> dict:
+    """Pick the fastest candidate block config for (kind, key).
+
+    kind:       kernel family, e.g. "relu_attn" / "mbconv" / "int8_matmul"
+    key:        hashable shape/dtype/backend tuple identifying the case
+    candidates: list of kwargs dicts (e.g. [{"block_n": 128}, ...])
+    bench:      callable(candidate) -> result; timed via block_until_ready.
+                None (e.g. under jit tracing) -> cached choice or
+                candidates[0] without sweeping.
+
+    A candidate whose bench raises is disqualified, so candidate lists can
+    include tiles that exceed VMEM for some shapes.
+    """
+    global SWEEP_COUNT
+    assert candidates, "autotune needs at least one candidate"
+    path = cache_path()
+    _load_disk(path)
+    ck = _key(kind, key)
+    hit = _MEM.get(ck)
+    if hit is not None:
+        return dict(hit)
+    if bench is None:
+        return dict(candidates[0])
+
+    SWEEP_COUNT += 1
+    best_t, best_c = float("inf"), None
+    for cand in candidates:
+        try:
+            t = _time_once(lambda: bench(cand))
+        except Exception:
+            continue
+        if t < best_t:
+            best_t, best_c = t, dict(cand)
+    if best_c is None:       # every candidate failed: fall back, don't cache
+        return dict(candidates[0])
+    _MEM[ck] = best_c
+    _save_disk(path)
+    return dict(best_c)
+
+
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int):
+    """Zero-pad ``x`` along ``axis`` up to a multiple; returns (padded, n).
+
+    ``n`` is the original length, for slicing the kernel output back.
+    Zero padding is exact for every tiled kernel here: int8/fp32 matmul
+    accumulation ignores zero rows, and ReLU-gated attention maps zero
+    tokens to zero KV-state and zero divisor contributions.
+    """
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths), n

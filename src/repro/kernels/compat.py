@@ -1,0 +1,18 @@
+"""Version-compat shims shared by all Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` (and
+back, across 0.4.x point releases).  Every kernel goes through
+``tpu_compiler_params`` so a jax upgrade is a one-line fix here instead
+of a sweep over every ``pallas_call`` site.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+    pltpu, "CompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either jax naming."""
+    return _PARAMS_CLS(**kwargs)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _dsconv_kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, o_ref,
                    dw_scratch, *, stride: int, act: bool):
@@ -55,17 +57,20 @@ def dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
                  act: bool = True, block_f: int = 128,
                  interpret: bool = True):
     """x: (B, H, W, C); dw_w: (3, 3, C); pw_w: (C, F) -> (B, Ho, Wo, F)."""
+    from repro.kernels.autotune import pad_to_multiple
+
     B, H, W, C = x.shape
     F = pw_w.shape[1]
     assert H % stride == 0 and W % stride == 0
     Ho, Wo = H // stride, W // stride
     bf = min(block_f, F)
-    if F % bf != 0:
-        bf = F
-    nf = F // bf
+    pw_w, _ = pad_to_multiple(pw_w, 1, bf)
+    pw_b, _ = pad_to_multiple(pw_b, 0, bf)
+    Fp = pw_w.shape[1]
+    nf = Fp // bf
     xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_dsconv_kernel, stride=stride, act=act),
         grid=(B, nf),
         in_specs=[
@@ -76,9 +81,10 @@ def dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
             pl.BlockSpec((1, bf), lambda b, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((1, Ho, Wo, bf), lambda b, j: (b, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, F), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Fp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((Ho * Wo, C), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(xp, dw_w, dw_b.reshape(1, C), pw_w, pw_b.reshape(1, F))
+    )(xp, dw_w, dw_b.reshape(1, C), pw_w, pw_b.reshape(1, Fp))
+    return out[..., :F]

@@ -18,18 +18,24 @@ from repro.kernels.dsconv.ref import dsconv_ref
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "act", "interpret"))
+def dsconv_vmem_bytes(h: int, w: int, c: int, stride: int = 1) -> int:
+    """Analytic per-grid-step VMEM: padded input block + DW scratch."""
+    return (h + 2) * (w + 2) * c * 4 + (h * w // stride ** 2) * c * 4
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "act", "block_f", "interpret"))
 def dsconv_op(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1, act: bool = True,
-              interpret: bool = True):
+              block_f: int = 128, interpret: bool = True):
     B, H, W, C = x.shape
-    tile_bytes = (H + 2) * (W + 2) * C * 4 + (H * W // stride ** 2) * C * 4
-    if tile_bytes > VMEM_BUDGET_BYTES:
+    if dsconv_vmem_bytes(H, W, C, stride) > VMEM_BUDGET_BYTES:
         return dsconv_ref(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act)
     return dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act,
-                        interpret=interpret)
+                        block_f=block_f, interpret=interpret)
 
 
-def dsconv_apply(params, x, *, stride: int = 1):
+def dsconv_apply(params, x, *, stride: int = 1, block_f: int = 128,
+                 interpret: bool = True):
     """EfficientViT {'dw': conv+bn, 'pw': conv+bn} block -> fused kernel.
 
     Matches core.efficientvit.dsconv / the mbconv dw->pw2 tail: BN is
@@ -40,5 +46,6 @@ def dsconv_apply(params, x, *, stride: int = 1):
     pw_w4, pw_b = fold_bn_into_conv(params["pw"]["conv"], params["pw"]["bn"])
     dw_w = dw_w4[:, :, 0, :]          # (3,3,1,C) -> (3,3,C)
     pw_w = pw_w4[0, 0]                # (1,1,C,F) -> (C,F)
-    out = dsconv_op(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=True)
+    out = dsconv_op(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=True,
+                    block_f=block_f, interpret=interpret)
     return out.astype(x.dtype)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _int8_mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
     k = pl.program_id(2)
@@ -38,19 +40,30 @@ def _int8_mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
 def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
                 block_n: int = 256, block_k: int = 256,
                 interpret: bool = True):
-    """x_q: (M, K) int8; w_q: (K, N) int8 -> (M, N) fp32."""
+    """x_q: (M, K) int8; w_q: (K, N) int8 -> (M, N) fp32.
+
+    Ragged M/N/K are zero-padded to the block boundary (exact for int32
+    accumulation) instead of collapsing to one full-tensor block.
+    """
+    from repro.kernels.autotune import pad_to_multiple
+
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2
-    bm = min(block_m, M) if M % min(block_m, M) == 0 else M
-    bn = min(block_n, N) if N % min(block_n, N) == 0 else N
-    bk = min(block_k, K) if K % min(block_k, K) == 0 else K
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    x_q, _ = pad_to_multiple(x_q, 0, bm)
+    x_q, _ = pad_to_multiple(x_q, 1, bk)
+    w_q, _ = pad_to_multiple(w_q, 0, bk)
+    w_q, _ = pad_to_multiple(w_q, 1, bn)
+    Mp, Kp = x_q.shape
+    Np = w_q.shape[1]
     xs = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
-    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, N)
+    ws, _ = pad_to_multiple(
+        jnp.asarray(w_scale, jnp.float32).reshape(1, N), 1, bn)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _int8_mm_kernel,
-        grid=(M // bm, N // bn, K // bk),
+        grid=(Mp // bm, Np // bn, Kp // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
@@ -58,9 +71,10 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, xs, ws)
+    return out[:M, :N]

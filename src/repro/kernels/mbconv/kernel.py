@@ -1,0 +1,110 @@
+"""Pallas TPU megakernel: fused MBConv (PWConv -> DWConv -> PWConv).
+
+TPU translation of the paper's TMP *inter-layer* fusion (Fig. 5) applied
+to the whole MBConv block.  The expanded ``mid = c_in * expand_ratio``
+tensor is the largest intermediate in the network (~75% of MBConv
+activation traffic); on the FPGA it streams RPE -> aux buffer -> MAT
+engine and never reaches DRAM.  Here both intermediates (the PW1
+expansion and the DW output) live only in VMEM scratch:
+
+  MXU stage 1: mid = Hardswish(x @ w1 + b1)          (1x1 expansion)
+  VPU stage  : dw  = Hardswish(DW3x3(mid) + b_dw)    (9 shifted MACs)
+  MXU stage 2: out = dw @ w2 + b2                    (1x1 projection)
+
+Grid: (batch, c_out tiles).  Stages 1-2 run once per batch element
+(c_out tile 0) into scratch; the remaining c_out tiles reuse the scratch
+— the paper's time-multiplexing become scratch reuse, exactly as in
+kernels/dsconv.  x is read from HBM once per batch element and only the
+final projection is written back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.autotune import pad_to_multiple
+from repro.kernels.compat import tpu_compiler_params
+
+
+def _mbconv_kernel(x_ref, w1_ref, b1_ref, dww_ref, dwb_ref, w2_ref, b2_ref,
+                   o_ref, mid_scratch, dw_scratch, *, stride: int):
+    j = pl.program_id(1)
+    H, W, C = x_ref.shape[1], x_ref.shape[2], x_ref.shape[3]
+    M = mid_scratch.shape[2]
+    Ho, Wo = H // stride, W // stride
+
+    @pl.when(j == 0)
+    def _expand_and_dw():
+        # MXU stage 1: 1x1 expansion into the padded VMEM scratch
+        x = x_ref[0].astype(jnp.float32).reshape(H * W, C)
+        mid = jnp.dot(x, w1_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        mid = jax.nn.hard_swish(mid + b1_ref[0][None, :])
+        mid_scratch[...] = jnp.zeros((H + 2, W + 2, M), jnp.float32)
+        mid_scratch[1:H + 1, 1:W + 1, :] = mid.reshape(H, W, M)
+
+        # VPU stage: depthwise 3x3 over the scratch (SAME semantics)
+        mp = mid_scratch[...]
+        acc = jnp.zeros((H, W, M), jnp.float32)
+        for dy in range(3):
+            for dx in range(3):
+                acc += mp[dy:dy + H, dx:dx + W, :] * dww_ref[dy, dx][None, None, :]
+        acc += dwb_ref[0][None, None, :]
+        if stride > 1:
+            acc = acc[stride - 1::stride, stride - 1::stride, :]
+        dw_scratch[...] = jax.nn.hard_swish(acc).reshape(Ho * Wo, M)
+
+    # MXU stage 2: 1x1 projection of the VMEM-resident DW output
+    out = jnp.dot(dw_scratch[...], w2_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    out += b2_ref[0][None, :]
+    o_ref[0] = out.reshape(Ho, Wo, -1)
+
+
+def mbconv_fused(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1,
+                 block_f: int = 128, interpret: bool = True):
+    """x: (B, H, W, C); w1: (C, M); dw_w: (3, 3, M); w2: (M, F).
+
+    Returns (B, Ho, Wo, F) fp32, Ho = H // stride.  The c_out axis is
+    tiled by ``block_f`` with zero-padded ragged tails (no full-tensor
+    fallback); both intermediates stay in VMEM scratch.
+    """
+    B, H, W, C = x.shape
+    M = w1.shape[1]
+    F = w2.shape[1]
+    assert H % stride == 0 and W % stride == 0
+    Ho, Wo = H // stride, W // stride
+    bf = min(block_f, F)
+    w2p, _ = pad_to_multiple(w2, 1, bf)
+    b2p, _ = pad_to_multiple(b2, 0, bf)
+    Fp = w2p.shape[1]
+    nf = Fp // bf
+
+    out = pl.pallas_call(
+        functools.partial(_mbconv_kernel, stride=stride),
+        grid=(B, nf),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((C, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((3, 3, M), lambda b, j: (0, 0, 0)),
+            pl.BlockSpec((1, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((M, bf), lambda b, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, bf), lambda b, j: (b, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Fp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((H + 2, W + 2, M), jnp.float32),
+            pltpu.VMEM((Ho * Wo, M), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w1, b1.reshape(1, M), dw_w, dw_b.reshape(1, M), w2p,
+      b2p.reshape(1, Fp))
+    return out[..., :F]

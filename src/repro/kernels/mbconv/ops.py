@@ -1,0 +1,87 @@
+"""Jitted wrapper: fused MBConv megakernel for framework param trees.
+
+``mbconv_apply(params, x)`` consumes the EfficientViT
+{'pw1','dw','pw2'} conv+BN triple (folding BN on the fly, paper §II) and
+runs the megakernel; shapes whose VMEM tiles would blow the budget fall
+back to the jnp oracle, which has identical folded-weight numerics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fold_bn_into_conv
+from repro.kernels.autotune import autotune
+from repro.kernels.mbconv.kernel import mbconv_fused
+from repro.kernels.mbconv.ref import mbconv_ref
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+BLOCK_F_CANDIDATES = ({"block_f": 64}, {"block_f": 128}, {"block_f": 256})
+
+
+def mbconv_vmem_bytes(h: int, w: int, c_in: int, mid: int,
+                      stride: int = 1) -> int:
+    """Analytic per-grid-step VMEM: input block + both fused scratches."""
+    return 4 * (h * w * c_in + (h + 2) * (w + 2) * mid
+                + (h * w // stride ** 2) * mid)
+
+
+def tune_block_f(x_shape, mid: int, f: int, *, stride: int = 1,
+                 allow_sweep: bool = True, interpret: bool = True) -> int:
+    """Autotuned c_out tile for an MBConv shape (cached on disk).
+
+    The cache key carries the backend (interpret vs compiled) so tiles
+    timed under the CPU interpreter are never reused for compiled runs.
+    """
+    B, H, W, C = x_shape
+    backend = "interp" if interpret else "compiled"
+    key = (B, H, W, C, mid, f, stride, "f32", backend)
+
+    def bench(cand):
+        kx = jnp.zeros((B, H, W, C), jnp.float32)
+        return mbconv_fused(
+            kx, jnp.zeros((C, mid), jnp.float32), jnp.zeros((mid,)),
+            jnp.zeros((3, 3, mid)), jnp.zeros((mid,)),
+            jnp.zeros((mid, f), jnp.float32), jnp.zeros((f,)),
+            stride=stride, block_f=cand["block_f"], interpret=interpret)
+
+    choice = autotune("mbconv", key, BLOCK_F_CANDIDATES,
+                      bench if allow_sweep else None)
+    return choice["block_f"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "block_f", "interpret"))
+def mbconv_op(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1,
+              block_f: int = 128, interpret: bool = True):
+    B, H, W, C = x.shape
+    M = w1.shape[1]
+    if mbconv_vmem_bytes(H, W, C, M, stride) > VMEM_BUDGET_BYTES:
+        return mbconv_ref(x, w1, b1, dw_w, dw_b, w2, b2, stride=stride)
+    return mbconv_fused(x, w1, b1, dw_w, dw_b, w2, b2, stride=stride,
+                        block_f=block_f, interpret=interpret)
+
+
+def mbconv_apply(params, x, *, stride: int = 1, block_f: int | None = None,
+                 interpret: bool = True):
+    """EfficientViT {'pw1','dw','pw2'} conv+BN block -> fused megakernel.
+
+    Matches core.efficientvit.mbconv: BN folded into all three convs,
+    Hardswish after pw1 and dw, bare projection after pw2.
+    """
+    w1_4, b1 = fold_bn_into_conv(params["pw1"]["conv"], params["pw1"]["bn"])
+    dw_4, dw_b = fold_bn_into_conv(params["dw"]["conv"], params["dw"]["bn"])
+    w2_4, b2 = fold_bn_into_conv(params["pw2"]["conv"], params["pw2"]["bn"])
+    w1 = w1_4[0, 0]                    # (1,1,C,M) -> (C,M)
+    dw_w = dw_4[:, :, 0, :]            # (3,3,1,M) -> (3,3,M)
+    w2 = w2_4[0, 0]                    # (1,1,M,F) -> (M,F)
+    if block_f is None:
+        block_f = tune_block_f(x.shape, w1.shape[1], w2.shape[1],
+                               stride=stride, allow_sweep=False,
+                               interpret=interpret)
+    out = mbconv_op(x, w1, b1, dw_w, dw_b, w2, b2, stride=stride,
+                    block_f=block_f, interpret=interpret)
+    return out.astype(x.dtype)

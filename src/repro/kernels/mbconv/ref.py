@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused MBConv megakernel.
+
+Semantics match ``core.efficientvit.mbconv`` with BN already folded into
+each conv: PWConv(c_in->mid) + bias + Hardswish, depthwise 3x3 (SAME
+padding, stride 1 or 2) + bias + Hardswish, PWConv(mid->c_out) + bias,
+no activation after the projection (paper §II).
+
+SAME for a 3x3 stride-s conv equals the stride-1 conv over a (1,1)-padded
+input sampled at offset s-1 with step s (for even H, W) — the form both
+this oracle and the Pallas kernel use so they agree with
+``lax.conv_general_dilated(padding="SAME")`` bit-for-bit in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mbconv_ref(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1):
+    """x: (B, H, W, C); w1: (C, M); dw_w: (3, 3, M); w2: (M, F).
+
+    Returns (B, Ho, Wo, F) fp32 with Ho = H // stride.
+    """
+    B, H, W, C = x.shape
+    xf = x.astype(jnp.float32)
+    mid = jnp.einsum("bhwc,cm->bhwm", xf, w1.astype(jnp.float32))
+    mid = jax.nn.hard_swish(mid + b1[None, None, None, :])
+    mp = jnp.pad(mid, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    acc = jnp.zeros_like(mid)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + mp[:, dy:dy + H, dx:dx + W, :] \
+                * dw_w[dy, dx][None, None, None, :]
+    acc = acc + dw_b[None, None, None, :]
+    if stride > 1:
+        acc = acc[:, stride - 1::stride, stride - 1::stride, :]
+    acc = jax.nn.hard_swish(acc)
+    out = jnp.einsum("bhwm,mf->bhwf", acc, w2.astype(jnp.float32))
+    return out + b2[None, None, None, :]

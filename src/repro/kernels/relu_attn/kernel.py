@@ -2,20 +2,23 @@
 
 TPU translation of the paper's intra-layer MSA fusion (§III-D):
 
-* ``kv_reduce``  — one pass over K/V tiles accumulating BOTH the d x d
-  state ReLU(K)^T V (MXU) and the d-vector rowsum(ReLU(K)) (VPU) in VMEM
-  scratch.  The rowsum is the K-adder-tree running concurrently with the
-  RPE's MatMul in Fig. 5; here the two accumulate in the same kernel pass
-  so K is read from HBM exactly once.
-* ``apply``      — streams Q tiles, multiplies by the cached state to get
-  dividend and divisor in one pass (the MAT engine's role), divides, and
-  writes the output.  Z never round-trips HBM.
-* ``causal``     — chunked prefix-state variant for LM decode/training:
+* ``noncausal`` — ONE kernel, two grid phases over the token tiles.
+  Phase 0 streams K/V tiles, accumulating BOTH the d x d state
+  ReLU(K)^T V (MXU) and the d-vector rowsum(ReLU(K)) (VPU) in VMEM
+  scratch — the rowsum is the K-adder-tree running concurrently with the
+  RPE's MatMul in Fig. 5.  Phase 1 streams Q tiles against the scratch
+  state to produce dividend and divisor in one pass (the MAT engine's
+  role), divides, and writes the output.  The state never round-trips
+  HBM between the phases and Q/K/V are each read from HBM exactly once:
+  the former two-launch kv_reduce + apply split is now a single launch.
+* ``causal``    — chunked prefix-state variant for LM decode/training:
   grid is sequential over chunks; the (d x d) state and normalizer live in
   VMEM scratch across grid steps — the auxiliary-buffer pattern of Fig. 5.
 
 Block shapes keep the last dim = head_dim (pad to 128 upstream for MXU
-alignment when d < 128) and tile the token dim.
+alignment when d < 128) and tile the token dim; ragged token counts are
+zero-padded to the tile boundary (exact: ReLU(0) contributes nothing to
+state or divisor) instead of falling back to one full-tensor block.
 """
 from __future__ import annotations
 
@@ -26,86 +29,80 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 EPS = 1e-6
 
 
 # ---------------------------------------------------------------------------
-# non-causal: kv_reduce + apply
+# non-causal: single pass (reduce phase + apply phase in one launch)
 # ---------------------------------------------------------------------------
 
-def _kv_reduce_kernel(k_ref, v_ref, kv_ref, ksum_ref, kv_acc, ksum_acc):
-    i = pl.program_id(1)
+def _noncausal_kernel(q_ref, k_ref, v_ref, o_ref, kv_acc, ksum_acc, *, eps):
+    p = pl.program_id(1)          # 0: K/V reduce phase, 1: Q apply phase
+    i = pl.program_id(2)
 
-    @pl.when(i == 0)
+    @pl.when((p == 0) & (i == 0))
     def _init():
         kv_acc[...] = jnp.zeros_like(kv_acc)
         ksum_acc[...] = jnp.zeros_like(ksum_acc)
 
-    pk = jax.nn.relu(k_ref[0].astype(jnp.float32))          # (bn, d)
-    vf = v_ref[0].astype(jnp.float32)
-    # MXU: state accumulation; VPU: K-adder-tree rowsum — same pass.
-    kv_acc[...] += jax.lax.dot_general(
-        pk, vf, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    ksum_acc[...] += jnp.sum(pk, axis=0, keepdims=True)
+    @pl.when(p == 0)
+    def _reduce():
+        pk = jax.nn.relu(k_ref[0].astype(jnp.float32))      # (bn, d)
+        vf = v_ref[0].astype(jnp.float32)
+        # MXU: state accumulation; VPU: K-adder-tree rowsum — same pass.
+        kv_acc[...] += jax.lax.dot_general(
+            pk, vf, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ksum_acc[...] += jnp.sum(pk, axis=0, keepdims=True)
 
-    @pl.when(i == pl.num_programs(1) - 1)
-    def _flush():
-        kv_ref[0] = kv_acc[...]
-        ksum_ref[0] = ksum_acc[...]
-
-
-def _apply_kernel(q_ref, kv_ref, ksum_ref, o_ref, *, eps):
-    pq = jax.nn.relu(q_ref[0].astype(jnp.float32))          # (bn, d)
-    num = jnp.dot(pq, kv_ref[0], preferred_element_type=jnp.float32)
-    den = jnp.dot(pq, ksum_ref[0].T, preferred_element_type=jnp.float32)
-    o_ref[0] = num / jnp.maximum(den, eps)
+    @pl.when(p == 1)
+    def _apply():
+        pq = jax.nn.relu(q_ref[0].astype(jnp.float32))      # (bn, d)
+        num = jnp.dot(pq, kv_acc[...], preferred_element_type=jnp.float32)
+        den = jnp.dot(pq, ksum_acc[...].T, preferred_element_type=jnp.float32)
+        o_ref[0] = num / jnp.maximum(den, eps)
 
 
 def relu_attn_noncausal(q, k, v, *, block_n: int = 256, eps: float = EPS,
                         interpret: bool = True):
-    """q, k, v: (BH, N, D) -> (BH, N, D) fp32."""
+    """q, k, v: (BH, N, D) -> (BH, N, D) fp32.  One launch per call.
+
+    Grid (BH, phase, token tile): phase 0 consumes K/V tiles into VMEM
+    scratch state, phase 1 consumes Q tiles against it.  The index maps
+    pin the inactive operand of each phase to tile 0 so Q/K/V are each
+    streamed from HBM exactly once (plus one resident tile).
+    """
+    from repro.kernels.autotune import pad_to_multiple
+
     BH, N, D = q.shape
     bn = min(block_n, N)
-    if N % bn != 0:
-        bn = N
-    nb = N // bn
+    qp, _ = pad_to_multiple(q, 1, bn)
+    kp, _ = pad_to_multiple(k, 1, bn)
+    vp, _ = pad_to_multiple(v, 1, bn)
+    Np = qp.shape[1]
+    nb = Np // bn
 
-    kv, ksum = pl.pallas_call(
-        _kv_reduce_kernel,
-        grid=(BH, nb),
+    out = pl.pallas_call(
+        functools.partial(_noncausal_kernel, eps=eps),
+        grid=(BH, 2, nb),
         in_specs=[
-            pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bn, D), lambda b, p, i: (b, i * p, 0)),
+            pl.BlockSpec((1, bn, D), lambda b, p, i: (b, i * (1 - p), 0)),
+            pl.BlockSpec((1, bn, D), lambda b, p, i: (b, i * (1 - p), 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, D, D), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, 1, D), lambda b, i: (b, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
-            jax.ShapeDtypeStruct((BH, 1, D), jnp.float32),
-        ],
+        out_specs=pl.BlockSpec((1, bn, D), lambda b, p, i: (b, i * p, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Np, D), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((D, D), jnp.float32),
             pltpu.VMEM((1, D), jnp.float32),
         ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(k, v)
-
-    out = pl.pallas_call(
-        functools.partial(_apply_kernel, eps=eps),
-        grid=(BH, nb),
-        in_specs=[
-            pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, D, D), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, 1, D), lambda b, i: (b, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bn, D), lambda b, i: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, N, D), jnp.float32),
-        interpret=interpret,
-    )(q, kv, ksum)
-    return out
+    )(qp, kp, vp)
+    return out[:, :N]
 
 
 # ---------------------------------------------------------------------------
@@ -147,13 +144,21 @@ def _causal_kernel(q_ref, k_ref, v_ref, o_ref, state_acc, zsum_acc, *, eps):
 
 def relu_attn_causal(q, k, v, *, chunk: int = 256, eps: float = EPS,
                      interpret: bool = True):
-    """q, k, v: (BH, N, D) -> (BH, N, D) fp32, causal."""
+    """q, k, v: (BH, N, D) -> (BH, N, D) fp32, causal.
+
+    Ragged N is zero-padded to the chunk boundary (padded tokens sit
+    after every real token, so the causal mask hides them exactly).
+    """
+    from repro.kernels.autotune import pad_to_multiple
+
     BH, N, D = q.shape
     C = min(chunk, N)
-    if N % C != 0:
-        C = N
-    nc = N // C
-    return pl.pallas_call(
+    q, _ = pad_to_multiple(q, 1, C)
+    k, _ = pad_to_multiple(k, 1, C)
+    v, _ = pad_to_multiple(v, 1, C)
+    Np = q.shape[1]
+    nc = Np // C
+    out = pl.pallas_call(
         functools.partial(_causal_kernel, eps=eps),
         grid=(BH, nc),
         in_specs=[
@@ -162,12 +167,13 @@ def relu_attn_causal(q, k, v, *, chunk: int = 256, eps: float = EPS,
             pl.BlockSpec((1, C, D), lambda b, i: (b, i, 0)),
         ],
         out_specs=pl.BlockSpec((1, C, D), lambda b, i: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, N, D), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((BH, Np, D), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((D, D), jnp.float32),
             pltpu.VMEM((1, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :N]

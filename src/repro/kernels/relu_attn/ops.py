@@ -1,8 +1,13 @@
 """Jitted public wrappers for the fused ReLU linear attention kernels.
 
 Accepts the framework's multi-head layouts, folds (batch, heads) into one
-grid axis, pads head_dim to the MXU lane width when requested, and
-dispatches to the Pallas kernels (interpret=True on CPU; compiled on TPU).
+grid axis, pads ragged token counts to the tile boundary, and dispatches
+to the Pallas kernels (interpret=True on CPU; compiled on TPU).
+
+``msa_batched_attention`` additionally folds the MSA module's multi-scale
+*branches* into the same grid axis, so one EfficientViT module issues ONE
+attention launch instead of a Python loop of ``1 + len(scales)`` calls
+(each of which used to be two launches before the single-pass rewrite).
 """
 from __future__ import annotations
 
@@ -11,7 +16,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import autotune
 from repro.kernels.relu_attn.kernel import relu_attn_causal, relu_attn_noncausal
+
+BLOCK_N_CANDIDATES = ({"block_n": 256}, {"block_n": 128}, {"block_n": 64},
+                      {"block_n": 512})
 
 
 def _fold_heads(x):
@@ -23,6 +32,26 @@ def _fold_heads(x):
 def _unfold_heads(x, B, H):
     BH, N, D = x.shape
     return x.reshape(B, H, N, D).transpose(0, 2, 1, 3)
+
+
+def tune_block_n(bh: int, n: int, d: int, *, allow_sweep: bool = True,
+                 interpret: bool = True) -> int:
+    """Autotuned token tile for a (BH, N, D) attention shape (disk-cached).
+
+    The cache key carries the backend (interpret vs compiled) so tiles
+    timed under the CPU interpreter are never reused for compiled runs.
+    """
+    backend = "interp" if interpret else "compiled"
+    key = (bh, n, d, "f32", backend)
+
+    def bench(cand):
+        z = jnp.zeros((bh, n, d), jnp.float32)
+        return relu_attn_noncausal(z, z, z, block_n=cand["block_n"],
+                                   interpret=interpret)
+
+    choice = autotune("relu_attn", key, BLOCK_N_CANDIDATES,
+                      bench if allow_sweep else None)
+    return choice["block_n"]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_n", "interpret"))
@@ -46,3 +75,20 @@ def relu_linear_attention(q, k, v, *, causal: bool = False,
 def msa_attention_fn(q, k, v):
     """Drop-in ``attention_fn`` for core.relu_attention.msa (B, N, h, d)."""
     return relu_linear_attention(q, k, v, causal=False).astype(q.dtype)
+
+
+def msa_batched_attention(qkv, n_heads: int, head_dim: int, *,
+                          block_n: int = 256, interpret: bool = True):
+    """All MSA branches + heads in one launch.
+
+    qkv: (S, B, N, 3 * n_heads * head_dim) — the S multi-scale aggregation
+    branches stacked.  Returns (S, B, N, n_heads * head_dim) fp32.  The
+    (scale, batch, head) axes fold into the kernel's single parallel grid
+    axis, so the whole module is one ``pallas_call``.
+    """
+    S, B, N, _ = qkv.shape
+    t = qkv.reshape(S * B, N, 3, n_heads, head_dim)
+    q, k, v = t[:, :, 0], t[:, :, 1], t[:, :, 2]
+    out = relu_linear_attention(q, k, v, causal=False, block_n=block_n,
+                                interpret=interpret)
+    return out.reshape(S, B, N, n_heads * head_dim)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, o_ref, state_acc):
     i = pl.program_id(1)
@@ -94,7 +96,7 @@ def ssd_chunked_pallas(x, dt, dA, Bm, Cm, *, chunk: int = 256,
         out_specs=pl.BlockSpec((1, C, P), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, dA, Bm, Cm)

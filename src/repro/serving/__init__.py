@@ -1,2 +1,3 @@
 from repro.serving.engine import ServeConfig, ServingEngine, Request  # noqa: F401
 from repro.serving.sampler import SamplerConfig, sample  # noqa: F401
+from repro.serving.vision import VisionEngine, VisionServeConfig  # noqa: F401

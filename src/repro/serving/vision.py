@@ -1,0 +1,61 @@
+"""Vision serving: batched EfficientViT classification over the fused path.
+
+The LM side serves through ``serving.engine``; this is the ViT
+counterpart.  At construction the engine builds a ``core.fusion``
+FusionPlan for its fixed microbatch shape (autotune sweeps run here, once,
+outside the request loop) and jits one fused forward.  Requests are
+padded up to the microbatch size so every call hits the same compiled
+executable and the same autotuned block choices.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.efficientvit import EfficientViTConfig, efficientvit
+from repro.core.fusion import build_plan
+
+__all__ = ["VisionServeConfig", "VisionEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionServeConfig:
+    microbatch: int = 8
+    use_plan: bool = True     # False -> reference path (A/B and debugging)
+    autotune: bool = True
+
+
+class VisionEngine:
+    def __init__(self, params, cfg: EfficientViTConfig,
+                 serve_cfg: VisionServeConfig = VisionServeConfig()):
+        self.params = params
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.plan = (build_plan(params, cfg, batch=serve_cfg.microbatch,
+                                autotune=serve_cfg.autotune)
+                     if serve_cfg.use_plan else None)
+        self._fwd = jax.jit(
+            lambda p, x: efficientvit(p, x, cfg, plan=self.plan))
+
+    def logits(self, images) -> jax.Array:
+        """images: (n, H, W, 3), any n -> (n, num_classes)."""
+        images = jnp.asarray(images)
+        n = images.shape[0]
+        mb = self.serve_cfg.microbatch
+        outs = []
+        for i in range(0, n, mb):
+            chunk = images[i:i + mb]
+            pad = mb - chunk.shape[0]
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad,) + chunk.shape[1:],
+                                      chunk.dtype)])
+            outs.append(self._fwd(self.params, chunk)[:mb - pad if pad else mb])
+        return jnp.concatenate(outs)[:n]
+
+    def classify(self, images) -> np.ndarray:
+        """images: (n, H, W, 3) -> (n,) int top-1 labels."""
+        return np.asarray(jnp.argmax(self.logits(images), axis=-1))
