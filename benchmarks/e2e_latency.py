@@ -1,20 +1,27 @@
-"""End-to-end inference: reference vs fused execution path on B1_SMOKE.
+"""End-to-end inference: reference vs fused execution path on B1_SMOKE,
+at both precisions (fp32 and FIX8 int8).
 
-Reports, per the EXPERIMENTS.md fusion table:
+Reports, per the EXPERIMENTS.md fusion tables:
   * wall clock for the reference and the fused (plan-routed) forward —
     CPU interpret-mode numbers, meaningful as a consistency check, not
-    as TPU latency;
+    as TPU latency — for the fp32 model AND its FIX8-quantized twin;
   * kernel-launch counts (the paper's launch-overhead story: one MSA
     module used to be ``(1 + len(scales)) x 2`` attention launches, the
     fused plan issues exactly 1);
-  * analytic HBM activation bytes per fused site from the fusion plan —
-    the TMP dataflow's single-load discipline, where both MBConv
-    intermediates and the whole MSA attention pipeline stay in VMEM.
+  * analytic HBM bytes per fused site from the fusion plan: activation
+    traffic (the TMP dataflow's single-load discipline) plus per-launch
+    weight reads, where FIX8 cuts weights 4x and the fused-site input
+    activations another 4x.
 
 Asserts (CI smoke gate):
-  * fused forward matches reference within 1e-3;
+  * fused forward matches reference within 1e-3 (fp) / 1e-2 + argmax
+    bit-exact (int8 vs the int8 reference path);
   * >= 2x analytic HBM-byte reduction on every fused MBConv/MSA site;
-  * msa() launch count drops to 1 per module.
+  * msa() launch count drops to 1 per module;
+  * the int8 plan fuses every site the fp plan fuses (zero
+    ``"quantized"`` fallbacks) on B1_SMOKE and full B1;
+  * int8-fused analytic HBM bytes (act + weights) <= 0.6x fp-fused at
+    B1 @224.
 
     PYTHONPATH=src python -m benchmarks.e2e_latency
 """
@@ -26,8 +33,25 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.kernel_bench import _time
-from repro.core.efficientvit import B1_SMOKE, efficientvit, init_efficientvit
+from repro.core.efficientvit import (
+    B1, B1_SMOKE, efficientvit, init_efficientvit)
 from repro.core.fusion import build_plan, launch_counts, plan_report
+from repro.core.quantization import quantize_efficientvit
+
+
+def _print_rows(rows):
+    print(f"{'site':<16} {'kind':<7} {'route':<9} {'prec':<5} "
+          f"{'HBM unfused':>12} {'HBM fused':>10} {'saved':>6} "
+          f"{'weights':>9} {'launches':>9}")
+    for r in rows:
+        route = "fused" if r["fused"] else f"ref({r['reason']})"
+        print(f"{r['site']:<16} {r['kind']:<7} {route:<9} "
+              f"{r['precision']:<5} "
+              f"{r['hbm_unfused'] / 1e6:>10.2f}MB "
+              f"{r['hbm_fused'] / 1e6:>8.2f}MB "
+              f"{r['saving_x']:>5.1f}x "
+              f"{r['hbm_w'] / 1e6:>7.2f}MB "
+              f"{r['launches_ref']:>4} ->{r['launches_fused']:>3}")
 
 
 def run(batch: int = 2, autotune: bool = True):
@@ -63,16 +87,7 @@ def run(batch: int = 2, autotune: bool = True):
     print(f"kernel launches on fusible sites: {lc['reference']} -> "
           f"{lc['fused']}")
     print()
-    print(f"{'site':<16} {'kind':<7} {'route':<9} "
-          f"{'HBM unfused':>12} {'HBM fused':>10} {'saved':>6} "
-          f"{'launches':>9}")
-    for r in rows:
-        route = "fused" if r["fused"] else f"ref({r['reason']})"
-        print(f"{r['site']:<16} {r['kind']:<7} {route:<9} "
-              f"{r['hbm_unfused'] / 1e6:>10.2f}MB "
-              f"{r['hbm_fused'] / 1e6:>8.2f}MB "
-              f"{r['saving_x']:>5.1f}x "
-              f"{r['launches_ref']:>4} ->{r['launches_fused']:>3}")
+    _print_rows(rows)
 
     for r in rows:
         if r["fused"] and r["kind"] in ("mbconv", "msa"):
@@ -84,8 +99,69 @@ def run(batch: int = 2, autotune: bool = True):
     print(f"\ntotal analytic HBM activation bytes on fusible sites: "
           f"{total_u / 1e6:.1f} MB -> {total_f / 1e6:.1f} MB "
           f"({total_u / total_f:.1f}x)")
+
+    # ---------------------------------------------------------------
+    # FIX8: quantized model through the int8 fused path
+    # ---------------------------------------------------------------
+    qparams = quantize_efficientvit(params)
+    qplan = build_plan(qparams, cfg, batch=batch, autotune=autotune)
+    assert not any(d.reason == "quantized" for d in qplan.decisions.values())
+    # >= because int8 may fuse MORE sites than fp (4x smaller VMEM tiles)
+    assert qplan.n_fused() >= plan.n_fused(), \
+        "int8 plan fuses fewer sites than fp"
+
+    qref_fwd = jax.jit(lambda p, x: efficientvit(p, x, cfg))
+    qfus_fwd = jax.jit(lambda p, x: efficientvit(p, x, cfg, plan=qplan))
+    x1 = x[:1]                      # batch 1: in-kernel requant scales are
+    qref = qref_fwd(qparams, x1)    # bit-identical to the reference chain
+    qfus = qfus_fwd(qparams, x1)
+    qerr = float(jnp.max(jnp.abs(qref - qfus)))
+    argmax_ok = bool((jnp.argmax(qref, -1) == jnp.argmax(qfus, -1)).all())
+    assert qerr < 1e-2, f"int8 fused diverged: max|Δ| = {qerr:.2e}"
+    assert argmax_ok, "int8 fused changed the top-1 label"
+
+    t_qref = _time(qref_fwd, qparams, x1)
+    t_qfus = _time(qfus_fwd, qparams, x1)
+    qrows = plan_report(qplan)
+
+    print(f"\n# FIX8 — {cfg.name}, int8 megakernels (batch=1 parity)")
+    print(f"plan: {qplan.n_fused()}/{len(qrows)} sites fused int8 "
+          f"(zero 'quantized' fallbacks)")
+    print(f"numerics: max|Δ| int8-fused vs int8-reference = {qerr:.2e}, "
+          f"argmax bit-exact = {argmax_ok}")
+    print(f"wall clock (CPU interpret): int8 reference {t_qref * 1e3:.0f} ms, "
+          f"int8 fused {t_qfus * 1e3:.0f} ms")
+    print()
+    _print_rows(qrows)
+
+    # ---------------------------------------------------------------
+    # analytic fp-fused vs int8-fused at full B1 @224 (act + weights)
+    # ---------------------------------------------------------------
+    b1_params = init_efficientvit(key, B1)
+    b1_fp = plan_report(build_plan(b1_params, B1, batch=1, autotune=False))
+    b1_q = plan_report(build_plan(quantize_efficientvit(b1_params), B1,
+                                  batch=1, autotune=False))
+    assert all(r["fused"] for r in b1_q), \
+        {r["site"]: r["reason"] for r in b1_q if not r["fused"]}
+    fp_tot = sum(r["hbm_total"] for r in b1_fp)
+    q_tot = sum(r["hbm_total"] for r in b1_q)
+    ratio = q_tot / fp_tot
+    print(f"\nB1 @224 batch 1, analytic fused-site HBM (activations + "
+          f"weights per launch):")
+    print(f"  fp-fused   {fp_tot / 1e6:6.1f} MB "
+          f"(act {sum(r['hbm_fused'] for r in b1_fp) / 1e6:.1f} + "
+          f"w {sum(r['hbm_w'] for r in b1_fp) / 1e6:.1f})")
+    print(f"  int8-fused {q_tot / 1e6:6.1f} MB "
+          f"(act {sum(r['hbm_fused'] for r in b1_q) / 1e6:.1f} + "
+          f"w {sum(r['hbm_w'] for r in b1_q) / 1e6:.1f})  "
+          f"= {ratio:.2f}x of fp-fused")
+    assert ratio <= 0.6, f"int8-fused HBM ratio {ratio:.3f} > 0.6"
+
     return {"max_err": err, "t_ref": t_ref, "t_fused": t_fus,
-            "launches": lc, "hbm_saving_x": total_u / total_f}
+            "launches": lc, "hbm_saving_x": total_u / total_f,
+            "int8_max_err": qerr, "int8_argmax_exact": argmax_ok,
+            "t_int8_ref": t_qref, "t_int8_fused": t_qfus,
+            "int8_vs_fp_hbm_ratio": ratio}
 
 
 def main():

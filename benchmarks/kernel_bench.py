@@ -84,6 +84,30 @@ def bench_mbconv():
     return err
 
 
+def bench_mbconv_int8():
+    from repro.kernels.mbconv.kernel import mbconv_fused_int8
+    from repro.kernels.mbconv.ref import mbconv_int8_ref
+    B, HW, C, M, F = 2, 16, 32, 128, 32
+    rng = np.random.default_rng(5)
+    xq = jnp.asarray(rng.integers(-127, 128, (B, HW, HW, C)), jnp.int8)
+    w1 = jnp.asarray(rng.integers(-127, 128, (C, M)), jnp.int8)
+    dw = jnp.asarray(rng.integers(-127, 128, (3, 3, M)), jnp.int8)
+    w2 = jnp.asarray(rng.integers(-127, 128, (M, F)), jnp.int8)
+    s1 = jnp.full((M,), 0.01, jnp.float32)
+    sd = jnp.full((M,), 0.01, jnp.float32)
+    s2 = jnp.full((F,), 0.01, jnp.float32)
+    zm, zf = jnp.zeros((M,)), jnp.zeros((F,))
+    args = (xq, jnp.float32(0.02), w1, s1, zm, dw, sd, zm, w2, s2, zf)
+    out = mbconv_fused_int8(*args)
+    ref = mbconv_int8_ref(*args)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    inter = 2 * HW * HW * M          # int8 scratches, per batch element
+    print(f"mbconv_int8(B={B},{HW}x{HW},C={C}->M={M}->F={F}): "
+          f"max|err|={err:.2e}  int8 VMEM scratch: {inter / 1e3:.0f} KB "
+          f"(4x less than fp32; mid requantized in-kernel)")
+    return err
+
+
 def bench_int8():
     from repro.kernels.int8_matmul.kernel import int8_matmul
     M, K, N = 512, 512, 512
@@ -124,8 +148,8 @@ def bench_ssd():
 
 def run():
     print("# Kernel microbench — Pallas interpret-mode vs jnp oracle")
-    errs = [bench_relu_attn(), bench_dsconv(), bench_mbconv(), bench_int8(),
-            bench_ssd()]
+    errs = [bench_relu_attn(), bench_dsconv(), bench_mbconv(),
+            bench_mbconv_int8(), bench_int8(), bench_ssd()]
     assert all(e < 1e-2 for e in errs), errs
     return {"max_err": max(errs)}
 

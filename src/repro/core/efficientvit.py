@@ -167,8 +167,10 @@ def efficientvit(params, x, cfg: EfficientViTConfig = B1, *,
 
     ``plan`` is an optional ``core.fusion.FusionPlan`` (built ahead of
     time by ``core.fusion.build_plan``) routing stem DSConvs, MBConv
-    blocks and MSA cores through the fused Pallas megakernels.  With
-    ``plan=None`` the reference path below runs unchanged.
+    blocks and MSA cores through the fused Pallas megakernels — at the
+    precision each site's params carry, so a ``quantize_efficientvit``
+    tree runs the FIX8 int8 megakernels.  With ``plan=None`` the
+    reference path below runs unchanged.
     """
     if plan is not None:
         from repro.core.fusion import dispatch_dsconv, dispatch_mbconv

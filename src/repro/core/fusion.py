@@ -5,9 +5,18 @@ This is the software analogue of the paper's TMP dataflow compiler pass
 (and of CHOSEN's compile-time optimization stack, arXiv 2407.12736):
 ``build_plan`` walks the param tree alongside the layer manifest ONCE,
 ahead of time and outside ``jax.jit``, deciding per fusible site whether
-the shapes qualify for the fused kernel (VMEM budget, fp32 weights) and
-which autotuned block sizes to use.  The jitted forward then consults the
-frozen plan — dispatch is pure table lookup, no tracing-time tuning.
+the shapes qualify for the fused kernel (VMEM budget), **which precision
+it runs at**, and which autotuned block sizes to use.  The jitted forward
+then consults the frozen plan — dispatch is pure table lookup, no
+tracing-time tuning.
+
+Precision is a first-class dispatch axis, not a bail-out: a FIX8 tree
+(``core.quantization.quantize_efficientvit``) routes to the int8
+megakernels — int8 weights resident in VMEM, int32 MXU accumulation,
+in-kernel requantization between stages — exactly the paper's 8x8-bit PE
+array fed by the TMP dataflow (§III/§IV-A; ME-ViT arXiv 2402.09709 shows
+the same single-load + low-precision pairing is where the memory win
+lives).
 
 Fusible sites:
   * ``stem.ds{i}``            DSConv        -> kernels/dsconv  (DW+PW)
@@ -16,7 +25,9 @@ Fusible sites:
   * ``S{3,4}.evit{i}.mb``     MBConv        -> kernels/mbconv
   * ``S{3,4}.evit{i}.msa``    MSA core      -> kernels/relu_attn, all
                               multi-scale branches + heads folded into
-                              one single-pass launch
+                              one single-pass launch; for FIX8 trees the
+                              QKV/output projections additionally route
+                              through kernels/int8_matmul
 
 Anything that fails a check runs the reference path — ``plan=None``
 leaves the reference forward byte-identical.
@@ -39,15 +50,17 @@ class SiteDecision:
     name: str              # e.g. "S3.evit0.msa"
     kind: str              # dsconv | mbconv | msa
     fused: bool
-    reason: str            # "ok" | "vmem" | "quantized" | "disabled"
+    reason: str            # "ok" | "vmem" | "quantized" | "not-quantized"
+    #                        | "mixed" | "disabled"
     blocks: Mapping[str, int] = dataclasses.field(default_factory=dict)
-    shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D)
+    shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D, S, C)
+    precision: str = "fp"  # "fp" | "int8" — which kernel family runs
 
 
 @dataclasses.dataclass(frozen=True)
 class FusionPlan:
     decisions: Mapping[str, SiteDecision]
-    interpret: bool = True
+    interpret: bool | None = None   # None -> backend auto-detect
     default_fuse: bool = True   # sites not in the table (standalone msa())
 
     def get(self, name):
@@ -68,22 +81,44 @@ class FusionPlan:
 
     def table(self) -> str:
         """Markdown routing table (EXPERIMENTS.md / benchmark output)."""
-        rows = ["| site | kind | route | blocks | reason |",
-                "|------|------|-------|--------|--------|"]
+        rows = ["| site | kind | route | precision | blocks | reason |",
+                "|------|------|-------|-----------|--------|--------|"]
         for d in self.decisions.values():
             route = "fused" if d.fused else "reference"
             blocks = ",".join(f"{k}={v}" for k, v in d.blocks.items()) or "-"
-            rows.append(f"| {d.name} | {d.kind} | {route} | {blocks} "
-                        f"| {d.reason} |")
+            rows.append(f"| {d.name} | {d.kind} | {route} | {d.precision} "
+                        f"| {blocks} | {d.reason} |")
         return "\n".join(rows)
 
 
-def _quantized(block) -> bool:
-    return any(isinstance(v, dict) and "qconv" in v for v in block.values())
+def _block_precision(block) -> str:
+    """Precision of one conv+BN (or qconv) subblock dict."""
+    kinds = {"int8" if (isinstance(v, dict) and "qconv" in v) else "fp"
+             for v in block.values() if isinstance(v, dict)}
+    if kinds == {"int8"}:
+        return "int8"
+    if kinds == {"fp"}:
+        return "fp"
+    return "mixed"
+
+
+def _resolve_precision(site_prec: str, requested: str):
+    """(site precision, requested precision) -> (run precision, reason).
+
+    reason None means proceed; otherwise it's the fallback reason."""
+    if site_prec == "mixed":
+        return "fp", "mixed"
+    if requested == "auto":
+        return site_prec, None
+    if requested == site_prec:
+        return site_prec, None
+    # forcing fp on int8 weights (or int8 on fp weights) cannot run the
+    # matching kernel family -> reference path
+    return "fp", "quantized" if site_prec == "int8" else "not-quantized"
 
 
 def _decide_mbconv(name, p, B, H, W, C, F, stride, *, enabled, autotune,
-                   interpret):
+                   interpret, precision):
     from repro.kernels.mbconv.ops import (
         VMEM_BUDGET_BYTES, mbconv_vmem_bytes, tune_block_f)
     mid = p["pw1"]["conv"]["w"].shape[-1] if "conv" in p["pw1"] else \
@@ -91,49 +126,77 @@ def _decide_mbconv(name, p, B, H, W, C, F, stride, *, enabled, autotune,
     shape = (B, H, W, C, mid, F, stride)
     if not enabled:
         return SiteDecision(name, "mbconv", False, "disabled", shape=shape)
-    if _quantized(p):
-        return SiteDecision(name, "mbconv", False, "quantized", shape=shape)
-    if mbconv_vmem_bytes(H, W, C, mid, stride) > VMEM_BUDGET_BYTES:
-        return SiteDecision(name, "mbconv", False, "vmem", shape=shape)
+    prec, fail = _resolve_precision(_block_precision(p), precision)
+    if fail is not None:
+        return SiteDecision(name, "mbconv", False, fail, shape=shape)
+    dtype = "i8" if prec == "int8" else "f32"
+    if mbconv_vmem_bytes(H, W, C, mid, stride,
+                         dtype=dtype) > VMEM_BUDGET_BYTES:
+        return SiteDecision(name, "mbconv", False, "vmem", shape=shape,
+                            precision=prec)
     bf = tune_block_f((B, H, W, C), mid, F, stride=stride,
-                      allow_sweep=autotune, interpret=interpret)
-    return SiteDecision(name, "mbconv", True, "ok", {"block_f": bf}, shape)
+                      allow_sweep=autotune, interpret=interpret, dtype=dtype)
+    return SiteDecision(name, "mbconv", True, "ok", {"block_f": bf}, shape,
+                        precision=prec)
 
 
-def _decide_dsconv(name, p, B, H, W, C, *, enabled, autotune):
+def _decide_dsconv(name, p, B, H, W, C, *, enabled, autotune, precision):
     from repro.kernels.dsconv.ops import VMEM_BUDGET_BYTES, dsconv_vmem_bytes
     shape = (B, H, W, C, C, C, 1)
     if not enabled:
         return SiteDecision(name, "dsconv", False, "disabled", shape=shape)
-    if _quantized(p):
-        return SiteDecision(name, "dsconv", False, "quantized", shape=shape)
-    if dsconv_vmem_bytes(H, W, C) > VMEM_BUDGET_BYTES:
-        return SiteDecision(name, "dsconv", False, "vmem", shape=shape)
-    return SiteDecision(name, "dsconv", True, "ok", {"block_f": 128}, shape)
+    prec, fail = _resolve_precision(_block_precision(p), precision)
+    if fail is not None:
+        return SiteDecision(name, "dsconv", False, fail, shape=shape)
+    dtype = "i8" if prec == "int8" else "f32"
+    if dsconv_vmem_bytes(H, W, C, dtype=dtype) > VMEM_BUDGET_BYTES:
+        return SiteDecision(name, "dsconv", False, "vmem", shape=shape,
+                            precision=prec)
+    return SiteDecision(name, "dsconv", True, "ok", {"block_f": 128}, shape,
+                        precision=prec)
 
 
-def _decide_msa(name, B, n_tok, heads, head_dim, n_branches, *, enabled,
-                autotune, interpret):
+def _decide_msa(name, p, B, n_tok, heads, head_dim, n_branches, channels, *,
+                enabled, autotune, interpret, precision):
     from repro.kernels.relu_attn.ops import tune_block_n
     BH = n_branches * B * heads
-    shape = (BH, n_tok, head_dim, n_branches)
+    shape = (BH, n_tok, head_dim, n_branches, channels)
     if not enabled:
         return SiteDecision(name, "msa", False, "disabled", shape=shape)
+    # The attention core is precision-agnostic (fp accumulation either
+    # way); `precision` here records whether the QKV/output projections
+    # route through the int8 GEMM kernel.  Both projections must be
+    # quantized — a mixed tree keeps them on the reference path ("fp").
+    site_prec = ("int8" if "qconv" in p["qkv"] and "qconv" in p["proj"]
+                 else "fp")
+    prec = site_prec if precision in ("auto", site_prec) else "fp"
     bn = tune_block_n(BH, n_tok, head_dim, allow_sweep=autotune,
                       interpret=interpret)
-    return SiteDecision(name, "msa", True, "ok", {"block_n": bn}, shape)
+    return SiteDecision(name, "msa", True, "ok", {"block_n": bn}, shape,
+                        precision=prec)
 
 
 def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
                fuse_dsconv: bool = True, fuse_mbconv: bool = True,
                fuse_msa: bool = True, autotune: bool = True,
-               interpret: bool = True) -> FusionPlan:
+               interpret: bool | None = None,
+               precision: str = "auto") -> FusionPlan:
     """Walk the param tree + architecture and freeze per-site routing.
+
+    ``precision``: "auto" (default) matches each site's params — fp32
+    trees run the fp megakernels, ``quantize_efficientvit`` trees run
+    the FIX8 ones; "fp"/"int8" force one family and demote mismatched
+    sites to the reference path.  ``interpret=None`` auto-detects the
+    backend (compile on TPU, interpret elsewhere).
 
     Runs outside jit: autotune sweeps (when ``autotune=True`` and the
     cache is cold) time the real kernels on synthetic inputs here, never
     at trace time.
     """
+    from repro.kernels.compat import default_interpret
+
+    assert precision in ("auto", "fp", "int8"), precision
+    interpret = default_interpret(interpret)
     w, d = cfg.widths, cfg.depths
     size = image_size or cfg.image_size
     B = batch
@@ -145,14 +208,16 @@ def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
     r = size // 2                                   # after the stem conv
     for i, p in enumerate(params["stem_ds"]):
         put(_decide_dsconv(f"stem.ds{i}", p, B, r, r, w[0],
-                           enabled=fuse_dsconv, autotune=autotune))
+                           enabled=fuse_dsconv, autotune=autotune,
+                           precision=precision))
     for si in (1, 2):
         c_in = w[si - 1]
         for bi, p in enumerate(params[f"stage{si}"]):
             stride = 2 if bi == 0 else 1
             put(_decide_mbconv(f"S{si}.mb{bi}", p, B, r, r, c_in, w[si],
                                stride, enabled=fuse_mbconv,
-                               autotune=autotune, interpret=interpret))
+                               autotune=autotune, interpret=interpret,
+                               precision=precision))
             r //= stride
             c_in = w[si]
     for si in (3, 4):
@@ -160,17 +225,18 @@ def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
         c = w[si]
         put(_decide_mbconv(f"S{si}.down", stage["down"], B, r, r, w[si - 1],
                            c, 2, enabled=fuse_mbconv, autotune=autotune,
-                           interpret=interpret))
+                           interpret=interpret, precision=precision))
         r //= 2
         heads = c // cfg.head_dim
         for bi, p in enumerate(stage["blocks"]):
-            put(_decide_msa(f"S{si}.evit{bi}.msa", B, r * r, heads,
-                            cfg.head_dim, 1 + len(cfg.msa_scales),
+            put(_decide_msa(f"S{si}.evit{bi}.msa", p["msa"], B, r * r, heads,
+                            cfg.head_dim, 1 + len(cfg.msa_scales), c,
                             enabled=fuse_msa, autotune=autotune,
-                            interpret=interpret))
+                            interpret=interpret, precision=precision))
             put(_decide_mbconv(f"S{si}.evit{bi}.mb", p["mbconv"], B, r, r,
                                c, c, 1, enabled=fuse_mbconv,
-                               autotune=autotune, interpret=interpret))
+                               autotune=autotune, interpret=interpret,
+                               precision=precision))
     return FusionPlan(decisions=decisions, interpret=interpret)
 
 
@@ -183,6 +249,11 @@ def dispatch_dsconv(plan, name, p, x):
     d = plan.get(name)
     if d is None or not d.fused:
         return dsconv(p, x)
+    if d.precision == "int8":
+        from repro.kernels.dsconv.ops import dsconv_apply_int8
+        return dsconv_apply_int8(p, x, stride=1,
+                                 block_f=d.blocks.get("block_f", 128),
+                                 interpret=plan.interpret)
     from repro.kernels.dsconv.ops import dsconv_apply
     return dsconv_apply(p, x, stride=1, block_f=d.blocks.get("block_f", 128),
                         interpret=plan.interpret)
@@ -193,6 +264,11 @@ def dispatch_mbconv(plan, name, p, x, *, stride=1):
     d = plan.get(name)
     if d is None or not d.fused:
         return mbconv(p, x, stride=stride)
+    if d.precision == "int8":
+        from repro.kernels.mbconv.ops import mbconv_apply_int8
+        return mbconv_apply_int8(p, x, stride=stride,
+                                 block_f=d.blocks.get("block_f"),
+                                 interpret=plan.interpret)
     from repro.kernels.mbconv.ops import mbconv_apply
     return mbconv_apply(p, x, stride=stride,
                         block_f=d.blocks.get("block_f"),
@@ -203,24 +279,34 @@ def dispatch_mbconv(plan, name, p, x, *, stride=1):
 # analytic accounting (feeds benchmarks/e2e_latency.py + EXPERIMENTS.md)
 # ---------------------------------------------------------------------------
 
-def _mbconv_bytes(B, H, W, C, mid, F, stride):
+def _mbconv_bytes(B, H, W, C, mid, F, stride, precision="fp"):
     """Activation HBM bytes: unfused = every op round-trips HBM (read
-    inputs, write output); fused = x in once, out once.  fp32."""
+    inputs, write output; the reference FIX8 chain dequantizes to fp32
+    between ops, so unfused bytes are fp32 either way); fused = x in
+    once (int8 for the FIX8 kernel), out once (fp32).
+
+    The 1-byte int8 input is the steady-state FIX8 pipeline number: it
+    assumes the producer emits (or its epilogue fuses) the int8
+    activation, as on the paper's accelerator.  Today's implementation
+    quantizes x in XLA just before the kernel, so measured traffic
+    carries an extra fp32 read until producer-side int8 emission lands
+    (ROADMAP open item)."""
     Ho, Wo = H // stride, W // stride
-    x_b = B * H * W * C * 4
-    mid_b = B * H * W * mid * 4
-    dw_b = B * Ho * Wo * mid * 4
-    out_b = B * Ho * Wo * F * 4
-    unfused = x_b + 2 * mid_b + 2 * dw_b + out_b   # both intermediates r/w
-    fused = x_b + out_b
+    xn = B * H * W * C
+    midn = B * H * W * mid
+    dwn = B * Ho * Wo * mid
+    outn = B * Ho * Wo * F
+    unfused = (xn + 2 * midn + 2 * dwn + outn) * 4   # both intermediates r/w
+    fused = xn * (1 if precision == "int8" else 4) + outn * 4
     return unfused, fused
 
 
-def _dsconv_bytes(B, H, W, C, F):
-    x_b = B * H * W * C * 4
-    mid_b = B * H * W * C * 4
-    out_b = B * H * W * F * 4
-    return x_b + 2 * mid_b + out_b, x_b + out_b
+def _dsconv_bytes(B, H, W, C, F, precision="fp"):
+    xn = B * H * W * C
+    outn = B * H * W * F
+    unfused = (2 * xn + xn + outn) * 4
+    fused = xn * (1 if precision == "int8" else 4) + outn * 4
+    return unfused, fused
 
 
 def _msa_bytes(BH, N, D):
@@ -229,6 +315,8 @@ def _msa_bytes(BH, N, D):
     Unfused reference dataflow materializes ReLU(Q)/ReLU(K), the KV
     state, the numerator and the divisor in HBM between ops; the fused
     single-pass kernel reads Q/K/V once and writes the output once.
+    (The attention core runs fp32 at either precision — the FIX8 win on
+    MSA sites is in the projection weights, counted separately.)
     """
     u = BH * N * D * 4                 # one (N, D) activation per head-fold
     state = BH * (D * D + D) * 4
@@ -243,27 +331,51 @@ def _msa_bytes(BH, N, D):
     return unfused, fused
 
 
+def _site_weight_bytes(d: SiteDecision) -> int:
+    """HBM weight bytes per launch at the site's precision.
+
+    Weights are re-read from HBM every launch, so FIX8 cuts this 4x —
+    the dominant term for the late, weight-heavy stages at batch 1
+    (exactly the paper's motivation for 8-bit storage)."""
+    per = 1 if d.precision == "int8" else 4
+    if d.kind == "mbconv":
+        _, _, _, C, mid, F, _ = d.shape
+        n = C * mid + 9 * mid + mid * F
+    elif d.kind == "dsconv":
+        _, _, _, C, _, F, _ = d.shape
+        n = 9 * C + C * F
+    else:                                          # msa: qkv + proj
+        _, _, _, n_branches, C = d.shape
+        n = 3 * C * C + n_branches * C * C
+    return n * per
+
+
 def plan_report(plan: FusionPlan) -> list[dict]:
     """Per-site analytic HBM bytes (unfused vs fused) + launch counts."""
     rows = []
     for d in plan.decisions.values():
         if d.kind == "mbconv":
             B, H, W, C, mid, F, stride = d.shape
-            unf, fus = _mbconv_bytes(B, H, W, C, mid, F, stride)
+            unf, fus = _mbconv_bytes(B, H, W, C, mid, F, stride, d.precision)
             launches = (3, 1)
         elif d.kind == "dsconv":
             B, H, W, C, _, F, _ = d.shape
-            unf, fus = _dsconv_bytes(B, H, W, C, F)
+            unf, fus = _dsconv_bytes(B, H, W, C, F, d.precision)
             launches = (2, 1)
         else:                                      # msa
-            BH, N, D, n_branches = d.shape
+            BH, N, D = d.shape[:3]
+            n_branches = d.shape[3]
             unf, fus = _msa_bytes(BH, N, D)
             launches = (2 * n_branches, 1)         # old per-branch 2-pass
+        w_bytes = _site_weight_bytes(d)
+        hbm_fused = fus if d.fused else unf
         rows.append({
             "site": d.name, "kind": d.kind, "fused": d.fused,
-            "reason": d.reason,
-            "hbm_unfused": unf, "hbm_fused": fus if d.fused else unf,
+            "reason": d.reason, "precision": d.precision,
+            "hbm_unfused": unf, "hbm_fused": hbm_fused,
             "saving_x": unf / fus if d.fused else 1.0,
+            "hbm_w": w_bytes,
+            "hbm_total": hbm_fused + w_bytes,
             "launches_ref": launches[0],
             "launches_fused": launches[1] if d.fused else launches[0],
         })

@@ -39,6 +39,36 @@ def quantize_tensor(x, axis=None, bits: int = 8):
     return q, scale
 
 
+def quantize_with_scale(x, scale, bits: int = 8):
+    """Symmetric quantization against a precomputed (calibrated) scale.
+
+    Skips the absmax reduction ``quantize_tensor`` runs on every call —
+    the serving-time fast path for static activation ranges.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8)
+
+
+def calibrate_act_scale(samples, bits: int = 8):
+    """Static per-tensor activation scale from calibration batches.
+
+    ``samples``: an array or an iterable of arrays of representative
+    activations.  Returns the symmetric scale covering their joint
+    absmax, for use as ``x_scale`` in ``kernels.int8_matmul.ops.
+    linear_w8a8`` (and anywhere else a static range beats a per-call
+    reduction).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    if hasattr(samples, "ndim"):
+        samples = [samples]
+    absmax = jnp.zeros((), jnp.float32)
+    for s in samples:
+        absmax = jnp.maximum(absmax,
+                             jnp.max(jnp.abs(s.astype(jnp.float32))))
+    return jnp.maximum(absmax, 1e-8) / qmax
+
+
 def dequantize(q, scale):
     return q.astype(jnp.float32) * scale
 

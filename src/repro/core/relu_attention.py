@@ -104,9 +104,23 @@ def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention,
     whole module issues ONE attention launch (§III-D intra-layer fusion).
     An explicitly overridden ``attention_fn`` always wins over the plan:
     the fused route only replaces the default reference core.
+
+    When the plan's site decision carries ``precision == "int8"`` (a
+    ``quantize_efficientvit`` tree under an auto/int8 plan), the QKV and
+    output projections run through the Pallas W8A8 GEMM
+    (``kernels.int8_matmul``) with per-output-channel weight scales in
+    the dequant epilogue, instead of the reference ``lax.conv`` path.
     """
     B, H, W, C = x.shape
-    qkv = _conv_any(params["qkv"], x)                 # (B,H,W,3*total)
+    d = plan.get(site) if (plan is not None and site is not None) else None
+    int8_proj = (d is not None and d.fused and d.precision == "int8"
+                 and "qconv" in params["qkv"] and "qconv" in params["proj"])
+    if int8_proj:
+        from repro.kernels.int8_matmul.ops import conv1x1_w8a8
+        qkv = conv1x1_w8a8(params["qkv"]["qconv"], x,
+                           interpret=plan.interpret)  # (B,H,W,3*total)
+    else:
+        qkv = _conv_any(params["qkv"], x)             # (B,H,W,3*total)
     multi = [qkv]
     for i, s in enumerate(cfg.scales):
         agg = _conv_any(params["aggreg"][i]["dw"], qkv, groups=qkv.shape[-1])
@@ -135,6 +149,9 @@ def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention,
             o = attention_fn(q, k, v)
             outs.append(o.reshape(B, H, W, cfg.total_dim))
         out = jnp.concatenate(outs, axis=-1)
+    if int8_proj:
+        return conv1x1_w8a8(params["proj"]["qconv"], out,
+                            interpret=plan.interpret)
     if "qconv" in params["proj"]:
         return _conv_any(params["proj"], out)  # BN folded by quantization
     out = pwconv(params["proj"], out)

@@ -6,7 +6,9 @@ same compile-time search CHOSEN (arXiv 2407.12736) runs over its FPGA
 design points.  ``autotune()`` sweeps a candidate list by timing the real
 kernel and remembers the winner in an on-disk JSON cache, so the sweep
 runs once per (kind, key) per machine and every later process — including
-a fresh interpreter — reuses the choice without re-timing.
+a fresh interpreter — reuses the choice without re-timing.  Callers put
+the dtype in the key next to the backend ("f32" vs "i8"), so the FIX8
+kernels tune and cache their tiles independently of the fp32 ones.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.

@@ -4,9 +4,18 @@ jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` (and
 back, across 0.4.x point releases).  Every kernel goes through
 ``tpu_compiler_params`` so a jax upgrade is a one-line fix here instead
 of a sweep over every ``pallas_call`` site.
+
+``default_interpret`` is the shared backend auto-detection: kernel
+wrappers take ``interpret=None`` and resolve it here, so TPU processes
+compile the Pallas kernels by default while CPU/GPU processes (no Mosaic
+backend) fall back to the interpreter without every call site having to
+pass ``interpret=True``.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 _PARAMS_CLS = getattr(pltpu, "TPUCompilerParams", None) or getattr(
@@ -16,3 +25,20 @@ _PARAMS_CLS = getattr(pltpu, "TPUCompilerParams", None) or getattr(
 def tpu_compiler_params(**kwargs):
     """Build the TPU compiler-params object under either jax naming."""
     return _PARAMS_CLS(**kwargs)
+
+
+@functools.lru_cache(maxsize=None)
+def _backend_is_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:          # backend init failure -> interpreter
+        return False
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret`` kwarg: explicit bools pass through,
+    ``None`` means "interpret only when there is no compiled Pallas
+    backend" (i.e. compile on TPU, interpret elsewhere)."""
+    if interpret is not None:
+        return interpret
+    return not _backend_is_tpu()

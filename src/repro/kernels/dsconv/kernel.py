@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import default_interpret, tpu_compiler_params
+from repro.kernels.quant import requantize_i8
 
 
 def _dsconv_kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, o_ref,
@@ -55,10 +56,11 @@ def _dsconv_kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, o_ref,
 
 def dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
                  act: bool = True, block_f: int = 128,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """x: (B, H, W, C); dw_w: (3, 3, C); pw_w: (C, F) -> (B, Ho, Wo, F)."""
     from repro.kernels.autotune import pad_to_multiple
 
+    interpret = default_interpret(interpret)
     B, H, W, C = x.shape
     F = pw_w.shape[1]
     assert H % stride == 0 and W % stride == 0
@@ -87,4 +89,102 @@ def dsconv_fused(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xp, dw_w, dw_b.reshape(1, C), pw_w, pw_b.reshape(1, Fp))
+    return out[..., :F]
+
+
+# ---------------------------------------------------------------------------
+# FIX8 variant: int8 weights, int32 MACs, in-kernel requant before the PW
+# ---------------------------------------------------------------------------
+
+def _dsconv_int8_kernel(x_ref, xs_ref, dww_ref, dws_ref, dwb_ref,
+                        pww_ref, pws_ref, pwb_ref, o_ref,
+                        dwq_scratch, sdw_scratch, *, stride: int, act: bool):
+    j = pl.program_id(1)
+    Hp, Wp, C = x_ref.shape[1], x_ref.shape[2], x_ref.shape[3]
+    H, W = Hp - 2, Wp - 2
+    Ho, Wo = H // stride, W // stride
+
+    @pl.when(j == 0)
+    def _dw_requant():
+        # VPU stage: depthwise 3x3 in int32 over the int8 input block
+        xp = x_ref[0].astype(jnp.int32)
+        acc = jnp.zeros((H, W, C), jnp.int32)
+        for dy in range(3):
+            for dx in range(3):
+                acc += xp[dy:dy + H, dx:dx + W, :] \
+                    * dww_ref[dy, dx].astype(jnp.int32)[None, None, :]
+        y = acc.astype(jnp.float32) * (xs_ref[0, 0] * dws_ref[0])[None, None, :] \
+            + dwb_ref[0][None, None, :]
+        if stride > 1:
+            # SAME anchoring for even H, W: offset stride-1, as in the
+            # int8 mbconv kernel and lax.conv's SAME stride-2 grid
+            y = y[stride - 1::stride, stride - 1::stride, :]
+        if act:
+            y = jax.nn.hard_swish(y)
+        # in-kernel requantization: the DW output stays int8 in scratch
+        dq, s_dw = requantize_i8(y.reshape(Ho * Wo, C))
+        sdw_scratch[0] = s_dw
+        dwq_scratch[...] = dq
+
+    # MXU stage: int8 pointwise conv over the requantized scratch
+    acc2 = jax.lax.dot_general(dwq_scratch[...], pww_ref[...],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    out = acc2.astype(jnp.float32) * (sdw_scratch[0] * pws_ref[0])[None, :] \
+        + pwb_ref[0][None, :]
+    o_ref[0] = out.reshape(Ho, Wo, -1)
+
+
+def dsconv_fused_int8(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
+                      stride: int = 1, act: bool = True, block_f: int = 128,
+                      interpret: bool | None = None):
+    """FIX8 DSConv.  x_q: (B, H, W, C) int8 quantized with per-tensor
+    ``x_scale``; dw_q: (3, 3, C) int8; pw_q: (C, F) int8; per-output-
+    channel weight scales, BN-folded biases.  Returns (B, Ho, Wo, F) fp32.
+
+    The depthwise output is requantized in-kernel (dynamic per batch
+    element; exact vs the reference ``conv2d_int8`` chain at batch 1) and
+    only ever exists as int8 VMEM scratch.
+    """
+    from repro.kernels.autotune import pad_to_multiple
+
+    interpret = default_interpret(interpret)
+    B, H, W, C = x_q.shape
+    F = pw_q.shape[1]
+    assert x_q.dtype == jnp.int8 and pw_q.dtype == jnp.int8
+    assert H % stride == 0 and W % stride == 0
+    Ho, Wo = H // stride, W // stride
+    bf = min(block_f, F)
+    pw_q, _ = pad_to_multiple(pw_q, 1, bf)
+    pw_sp, _ = pad_to_multiple(pw_s.reshape(1, F), 1, bf)
+    pw_bp, _ = pad_to_multiple(pw_b.reshape(1, F), 1, bf)
+    Fp = pw_q.shape[1]
+    nf = Fp // bf
+    xp = jnp.pad(x_q, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_dsconv_int8_kernel, stride=stride, act=act),
+        grid=(B, nf),
+        in_specs=[
+            pl.BlockSpec((1, H + 2, W + 2, C), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+            pl.BlockSpec((3, 3, C), lambda b, j: (0, 0, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, C), lambda b, j: (0, 0)),
+            pl.BlockSpec((C, bf), lambda b, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda b, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, bf), lambda b, j: (b, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Fp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((Ho * Wo, C), jnp.int8),
+            pltpu.SMEM((1,), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, xs, dw_q, dw_s.reshape(1, C), dw_b.reshape(1, C), pw_q, pw_sp,
+      pw_bp)
     return out[..., :F]

@@ -3,6 +3,10 @@
 ``dsconv_apply(params, x)`` consumes the EfficientViT {'dw','pw'} conv+BN
 block pair (folding BN on the fly) and runs the fused kernel; shapes whose
 VMEM tile would exceed the budget fall back to the reference path.
+
+``dsconv_apply_int8(params, x)`` consumes the *quantized* pair (each
+subblock a ``qconv`` from ``core.quantization.quantize_efficientvit``)
+and runs the FIX8 kernel with in-kernel requantization.
 """
 from __future__ import annotations
 
@@ -12,21 +16,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import fold_bn_into_conv
-from repro.kernels.dsconv.kernel import dsconv_fused
-from repro.kernels.dsconv.ref import dsconv_ref
+from repro.kernels.dsconv.kernel import dsconv_fused, dsconv_fused_int8
+from repro.kernels.dsconv.ref import dsconv_int8_ref, dsconv_ref
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-def dsconv_vmem_bytes(h: int, w: int, c: int, stride: int = 1) -> int:
-    """Analytic per-grid-step VMEM: padded input block + DW scratch."""
-    return (h + 2) * (w + 2) * c * 4 + (h * w // stride ** 2) * c * 4
+def dsconv_vmem_bytes(h: int, w: int, c: int, stride: int = 1, *,
+                      dtype: str = "f32") -> int:
+    """Analytic per-grid-step VMEM: padded input block + DW scratch.
+
+    ``dtype="i8"``: int8 input block and int8 requantized scratch (4x
+    less than fp32)."""
+    per = 1 if dtype == "i8" else 4
+    return per * ((h + 2) * (w + 2) * c + (h * w // stride ** 2) * c)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("stride", "act", "block_f", "interpret"))
 def dsconv_op(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1, act: bool = True,
-              block_f: int = 128, interpret: bool = True):
+              block_f: int = 128, interpret: bool | None = None):
     B, H, W, C = x.shape
     if dsconv_vmem_bytes(H, W, C, stride) > VMEM_BUDGET_BYTES:
         return dsconv_ref(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=act)
@@ -35,7 +44,7 @@ def dsconv_op(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1, act: bool = True,
 
 
 def dsconv_apply(params, x, *, stride: int = 1, block_f: int = 128,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """EfficientViT {'dw': conv+bn, 'pw': conv+bn} block -> fused kernel.
 
     Matches core.efficientvit.dsconv / the mbconv dw->pw2 tail: BN is
@@ -48,4 +57,43 @@ def dsconv_apply(params, x, *, stride: int = 1, block_f: int = 128,
     pw_w = pw_w4[0, 0]                # (1,1,C,F) -> (C,F)
     out = dsconv_op(x, dw_w, dw_b, pw_w, pw_b, stride=stride, act=True,
                     block_f=block_f, interpret=interpret)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FIX8 path
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "act", "block_f", "interpret"))
+def dsconv_op_int8(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
+                   stride: int = 1, act: bool = True, block_f: int = 128,
+                   interpret: bool | None = None):
+    B, H, W, C = x_q.shape
+    if dsconv_vmem_bytes(H, W, C, stride, dtype="i8") > VMEM_BUDGET_BYTES:
+        return dsconv_int8_ref(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s,
+                               pw_b, stride=stride, act=act)
+    return dsconv_fused_int8(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s,
+                             pw_b, stride=stride, act=act, block_f=block_f,
+                             interpret=interpret)
+
+
+def dsconv_apply_int8(params, x, *, stride: int = 1, block_f: int = 128,
+                      interpret: bool | None = None):
+    """Quantized {'dw','pw'} pair (``qconv`` subblocks) -> FIX8 kernel.
+
+    The input is quantized here with the whole-tensor absmax the
+    reference ``conv2d_int8`` uses (bit-identical first stage); the DW
+    output is requantized in-kernel.
+    """
+    from repro.core.quantization import quantize_tensor
+
+    qd = params["dw"]["qconv"]
+    qp = params["pw"]["qconv"]
+    dw_q = qd["q"][:, :, 0, :]         # (3,3,1,C) -> (3,3,C)
+    pw_q = qp["q"][0, 0]               # (1,1,C,F) -> (C,F)
+    x_q, x_scale = quantize_tensor(x)
+    out = dsconv_op_int8(x_q, x_scale, dw_q, qd["scale"], qd["bias"],
+                         pw_q, qp["scale"], qp["bias"], stride=stride,
+                         act=True, block_f=block_f, interpret=interpret)
     return out.astype(x.dtype)

@@ -31,3 +31,37 @@ def dsconv_ref(x, dw_w, dw_b, pw_w, pw_b, *, stride: int = 1,
         acc = jax.nn.hard_swish(acc)
     out = jnp.einsum("bhwc,cf->bhwf", acc, pw_w.astype(jnp.float32))
     return out + pw_b[None, None, None, :]
+
+
+def dsconv_int8_ref(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
+                    stride: int = 1, act: bool = True):
+    """Pure-jnp oracle for the FIX8 DSConv kernel (same args).
+
+    int32 depthwise MACs, fp32 dequant + Hardswish, dynamic symmetric
+    requantization per batch element, int32 pointwise GEMM — the
+    ``core.quantization.conv2d_int8`` chain with the kernel's
+    per-batch-element inter-stage scale.
+    """
+    from repro.core.quantization import quantize_tensor
+
+    def one(xi):                                    # (H, W, C) int8
+        H, W, C = xi.shape
+        xp = jnp.pad(xi, ((1, 1), (1, 1), (0, 0))).astype(jnp.int32)
+        acc = jnp.zeros((H, W, C), jnp.int32)
+        for dy in range(3):
+            for dx in range(3):
+                acc += xp[dy:dy + H, dx:dx + W, :] \
+                    * dw_q[dy, dx].astype(jnp.int32)[None, None, :]
+        y = acc.astype(jnp.float32) * (x_scale * dw_s)[None, None, :] \
+            + dw_b[None, None, :]
+        if stride > 1:
+            y = y[stride - 1::stride, stride - 1::stride, :]  # SAME anchor
+        if act:
+            y = jax.nn.hard_swish(y)
+        yq, s_dw = quantize_tensor(y)
+        acc2 = jnp.einsum("hwc,cf->hwf", yq.astype(jnp.int32),
+                          pw_q.astype(jnp.int32))
+        return acc2.astype(jnp.float32) * (s_dw * pw_s)[None, None, :] \
+            + pw_b[None, None, :]
+
+    return jax.vmap(one)(x_q)

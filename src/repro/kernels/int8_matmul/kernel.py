@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import default_interpret, tpu_compiler_params
 
 
 def _int8_mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
@@ -39,7 +39,7 @@ def _int8_mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
 
 def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
                 block_n: int = 256, block_k: int = 256,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """x_q: (M, K) int8; w_q: (K, N) int8 -> (M, N) fp32.
 
     Ragged M/N/K are zero-padded to the block boundary (exact for int32
@@ -47,6 +47,7 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
     """
     from repro.kernels.autotune import pad_to_multiple
 
+    interpret = default_interpret(interpret)
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2

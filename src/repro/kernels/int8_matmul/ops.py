@@ -1,4 +1,15 @@
-"""Jitted wrapper: quantize-on-the-fly W8A8 linear using the Pallas GEMM."""
+"""Jitted wrappers around the Pallas W8A8 GEMM.
+
+``linear_w8a8`` quantizes activations on the fly (dynamic per-tensor
+absmax) or, when a calibrated static ``x_scale`` from
+``core.quantization.calibrate_act_scale`` is supplied, skips the
+activation reduction entirely — the serving-time fast path.
+
+``conv1x1_w8a8`` runs a quantized 1x1 convolution (a ``qconv`` dict from
+``core.quantization.quantize_efficientvit``) as the int8 GEMM with the
+per-output-channel weight scales folded into the dequant epilogue — the
+route the fusion plan uses for MSA QKV/output projections.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,19 +17,42 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import quantize_tensor
+from repro.core.quantization import quantize_tensor, quantize_with_scale
 from repro.kernels.int8_matmul.kernel import int8_matmul
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def linear_w8a8(x, w_q, w_scale, *, interpret: bool = True):
+def linear_w8a8(x, w_q, w_scale, *, x_scale=None,
+                interpret: bool | None = None):
     """x: (..., K) fp; w_q: (K, N) int8; w_scale: (N,) -> (..., N) fp32.
 
-    Dynamic per-tensor activation quantization + fused int8 GEMM.
+    ``x_scale=None``: dynamic per-tensor activation quantization (absmax
+    recomputed every call).  Passing a calibrated static ``x_scale``
+    skips the absmax reduction and clips to the calibrated range.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
-    x_q, x_scale = quantize_tensor(x2)
-    out = int8_matmul(x_q, w_q, x_scale[()], w_scale, interpret=interpret)
+    if x_scale is None:
+        x_q, x_scale = quantize_tensor(x2)
+    else:
+        x_scale = jnp.asarray(x_scale, jnp.float32)
+        x_q = quantize_with_scale(x2, x_scale)
+    out = int8_matmul(x_q, w_q, x_scale, w_scale, interpret=interpret)
     return out.reshape(*lead, -1)
+
+
+def conv1x1_w8a8(qp, x, *, x_scale=None, interpret: bool | None = None):
+    """FIX8 1x1 conv as an int8 GEMM.  qp: {'q' (1,1,C,F) int8, 'scale'
+    (F,), 'bias' (F,)} from ``quantize_efficientvit``; x: (B, H, W, C).
+
+    Same arithmetic as ``core.quantization.conv2d_int8`` on a 1x1
+    ungrouped conv — int32 accumulation, per-output-channel dequant —
+    but through the Pallas MXU kernel instead of ``lax.conv``.
+    """
+    B, H, W, C = x.shape
+    w_q = qp["q"].reshape(C, -1)
+    out = linear_w8a8(x.reshape(-1, C), w_q, qp["scale"], x_scale=x_scale,
+                      interpret=interpret)
+    out = out + qp["bias"][None, :]
+    return out.reshape(B, H, W, -1).astype(x.dtype)

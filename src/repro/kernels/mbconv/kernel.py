@@ -27,7 +27,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.autotune import pad_to_multiple
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import default_interpret, tpu_compiler_params
+from repro.kernels.quant import requantize_i8
 
 
 def _mbconv_kernel(x_ref, w1_ref, b1_ref, dww_ref, dwb_ref, w2_ref, b2_ref,
@@ -66,13 +67,14 @@ def _mbconv_kernel(x_ref, w1_ref, b1_ref, dww_ref, dwb_ref, w2_ref, b2_ref,
 
 
 def mbconv_fused(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1,
-                 block_f: int = 128, interpret: bool = True):
+                 block_f: int = 128, interpret: bool | None = None):
     """x: (B, H, W, C); w1: (C, M); dw_w: (3, 3, M); w2: (M, F).
 
     Returns (B, Ho, Wo, F) fp32, Ho = H // stride.  The c_out axis is
     tiled by ``block_f`` with zero-padded ragged tails (no full-tensor
     fallback); both intermediates stay in VMEM scratch.
     """
+    interpret = default_interpret(interpret)
     B, H, W, C = x.shape
     M = w1.shape[1]
     F = w2.shape[1]
@@ -107,4 +109,118 @@ def mbconv_fused(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1,
         interpret=interpret,
     )(x, w1, b1.reshape(1, M), dw_w, dw_b.reshape(1, M), w2p,
       b2p.reshape(1, Fp))
+    return out[..., :F]
+
+
+# ---------------------------------------------------------------------------
+# FIX8 variant: int8 weights, int32 MXU accumulation, in-kernel requant
+# ---------------------------------------------------------------------------
+
+def _mbconv_int8_kernel(x_ref, xs_ref, w1_ref, s1_ref, b1_ref,
+                        dww_ref, dws_ref, dwb_ref, w2_ref, s2_ref, b2_ref,
+                        o_ref, midq_scratch, dwq_scratch, sdw_scratch,
+                        *, stride: int):
+    j = pl.program_id(1)
+    H, W, C = x_ref.shape[1], x_ref.shape[2], x_ref.shape[3]
+    M = midq_scratch.shape[2]
+    Ho, Wo = H // stride, W // stride
+
+    @pl.when(j == 0)
+    def _expand_dw_requant():
+        # MXU stage 1: int8 x int8 -> int32 expansion, fp32 dequant epilogue
+        xq = x_ref[0].reshape(H * W, C)
+        acc = jax.lax.dot_general(xq, w1_ref[...], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        mid = acc.astype(jnp.float32) * (xs_ref[0, 0] * s1_ref[0])[None, :] \
+            + b1_ref[0][None, :]
+        mid = jax.nn.hard_swish(mid)
+        # in-kernel requantization: the 4x-expanded mid tensor stays int8
+        # in VMEM scratch (the paper's fixed-point inter-stage pipeline)
+        mq, s_mid = requantize_i8(mid)
+        midq_scratch[...] = jnp.zeros((H + 2, W + 2, M), jnp.int8)
+        midq_scratch[1:H + 1, 1:W + 1, :] = mq.reshape(H, W, M)
+
+        # VPU stage: depthwise 3x3 in int32 over the int8 scratch
+        mp = midq_scratch[...].astype(jnp.int32)
+        acc2 = jnp.zeros((H, W, M), jnp.int32)
+        for dy in range(3):
+            for dx in range(3):
+                acc2 += mp[dy:dy + H, dx:dx + W, :] \
+                    * dww_ref[dy, dx].astype(jnp.int32)[None, None, :]
+        dw = acc2.astype(jnp.float32) * (s_mid * dws_ref[0])[None, None, :] \
+            + dwb_ref[0][None, None, :]
+        if stride > 1:
+            dw = dw[stride - 1::stride, stride - 1::stride, :]
+        dw = jax.nn.hard_swish(dw)
+        dq, s_dw = requantize_i8(dw.reshape(Ho * Wo, M))
+        sdw_scratch[0] = s_dw
+        dwq_scratch[...] = dq
+
+    # MXU stage 2: int8 projection of the VMEM-resident requantized DW out
+    acc3 = jax.lax.dot_general(dwq_scratch[...], w2_ref[...],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    out = acc3.astype(jnp.float32) * (sdw_scratch[0] * s2_ref[0])[None, :] \
+        + b2_ref[0][None, :]
+    o_ref[0] = out.reshape(Ho, Wo, -1)
+
+
+def mbconv_fused_int8(x_q, x_scale, w1_q, s1, b1, dw_q, s_dw, dw_b,
+                      w2_q, s2, b2, *, stride: int = 1, block_f: int = 128,
+                      interpret: bool | None = None):
+    """FIX8 MBConv megakernel.  x_q: (B, H, W, C) int8 (activations already
+    quantized with per-tensor ``x_scale``); w1_q: (C, M) int8; dw_q:
+    (3, 3, M) int8; w2_q: (M, F) int8; s*: per-output-channel fp32 weight
+    scales; b*: fp32 biases (BN folded).
+
+    Returns (B, Ho, Wo, F) fp32.  Both intermediates are requantized
+    in-kernel and stay **int8** in VMEM scratch (~4x less scratch than the
+    fp32 megakernel).  The inter-stage activation scales are dynamic
+    per batch element — identical to the reference FIX8 path
+    (``core.quantization.conv2d_int8`` chain) at batch 1, and within
+    quantization noise of it for larger batches.
+    """
+    interpret = default_interpret(interpret)
+    B, H, W, C = x_q.shape
+    M = w1_q.shape[1]
+    F = w2_q.shape[1]
+    assert x_q.dtype == jnp.int8 and w1_q.dtype == jnp.int8
+    assert H % stride == 0 and W % stride == 0
+    Ho, Wo = H // stride, W // stride
+    bf = min(block_f, F)
+    w2p, _ = pad_to_multiple(w2_q, 1, bf)
+    s2p, _ = pad_to_multiple(s2.reshape(1, F), 1, bf)
+    b2p, _ = pad_to_multiple(b2.reshape(1, F), 1, bf)
+    Fp = w2p.shape[1]
+    nf = Fp // bf
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_mbconv_int8_kernel, stride=stride),
+        grid=(B, nf),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+            pl.BlockSpec((C, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((3, 3, M), lambda b, j: (0, 0, 0)),
+            pl.BlockSpec((1, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, M), lambda b, j: (0, 0)),
+            pl.BlockSpec((M, bf), lambda b, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda b, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, bf), lambda b, j: (b, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Fp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((H + 2, W + 2, M), jnp.int8),
+            pltpu.VMEM((Ho * Wo, M), jnp.int8),
+            pltpu.SMEM((1,), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, xs, w1_q, s1.reshape(1, M), b1.reshape(1, M), dw_q,
+      s_dw.reshape(1, M), dw_b.reshape(1, M), w2p, s2p, b2p)
     return out[..., :F]

@@ -4,6 +4,12 @@
 {'pw1','dw','pw2'} conv+BN triple (folding BN on the fly, paper §II) and
 runs the megakernel; shapes whose VMEM tiles would blow the budget fall
 back to the jnp oracle, which has identical folded-weight numerics.
+
+``mbconv_apply_int8(params, x)`` is the FIX8 twin: it consumes the
+*quantized* triple ({'pw1','dw','pw2'} each holding a ``qconv`` from
+``core.quantization.quantize_efficientvit``) and runs the int8
+megakernel — int8 weights resident in VMEM, int32 MXU accumulation, and
+in-kernel requantization so the expanded mid tensor stays int8 on chip.
 """
 from __future__ import annotations
 
@@ -14,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.core.quantization import fold_bn_into_conv
 from repro.kernels.autotune import autotune
-from repro.kernels.mbconv.kernel import mbconv_fused
-from repro.kernels.mbconv.ref import mbconv_ref
+from repro.kernels.compat import default_interpret
+from repro.kernels.mbconv.kernel import mbconv_fused, mbconv_fused_int8
+from repro.kernels.mbconv.ref import mbconv_int8_ref, mbconv_ref
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -23,24 +30,41 @@ BLOCK_F_CANDIDATES = ({"block_f": 64}, {"block_f": 128}, {"block_f": 256})
 
 
 def mbconv_vmem_bytes(h: int, w: int, c_in: int, mid: int,
-                      stride: int = 1) -> int:
-    """Analytic per-grid-step VMEM: input block + both fused scratches."""
-    return 4 * (h * w * c_in + (h + 2) * (w + 2) * mid
-                + (h * w // stride ** 2) * mid)
+                      stride: int = 1, *, dtype: str = "f32") -> int:
+    """Analytic per-grid-step VMEM: input block + both fused scratches.
+
+    ``dtype="i8"`` is the FIX8 kernel: int8 input block and int8
+    requantized scratches — 4x less VMEM pressure than fp32, which is
+    what shrinks the ``"vmem"`` fallback set for quantized models.
+    """
+    per = 1 if dtype == "i8" else 4
+    return per * (h * w * c_in + (h + 2) * (w + 2) * mid
+                  + (h * w // stride ** 2) * mid)
 
 
 def tune_block_f(x_shape, mid: int, f: int, *, stride: int = 1,
-                 allow_sweep: bool = True, interpret: bool = True) -> int:
+                 allow_sweep: bool = True, interpret: bool | None = None,
+                 dtype: str = "f32") -> int:
     """Autotuned c_out tile for an MBConv shape (cached on disk).
 
-    The cache key carries the backend (interpret vs compiled) so tiles
-    timed under the CPU interpreter are never reused for compiled runs.
+    The cache key carries the backend (interpret vs compiled) AND the
+    dtype, so int8 tiles and fp32 tiles are tuned and cached separately.
     """
     B, H, W, C = x_shape
+    interpret = default_interpret(interpret)
     backend = "interp" if interpret else "compiled"
-    key = (B, H, W, C, mid, f, stride, "f32", backend)
+    key = (B, H, W, C, mid, f, stride, dtype, backend)
 
     def bench(cand):
+        if dtype == "i8":
+            return mbconv_fused_int8(
+                jnp.zeros((B, H, W, C), jnp.int8), jnp.float32(1.0),
+                jnp.zeros((C, mid), jnp.int8), jnp.ones((mid,)),
+                jnp.zeros((mid,)), jnp.zeros((3, 3, mid), jnp.int8),
+                jnp.ones((mid,)), jnp.zeros((mid,)),
+                jnp.zeros((mid, f), jnp.int8), jnp.ones((f,)),
+                jnp.zeros((f,)), stride=stride, block_f=cand["block_f"],
+                interpret=interpret)
         kx = jnp.zeros((B, H, W, C), jnp.float32)
         return mbconv_fused(
             kx, jnp.zeros((C, mid), jnp.float32), jnp.zeros((mid,)),
@@ -56,7 +80,7 @@ def tune_block_f(x_shape, mid: int, f: int, *, stride: int = 1,
 @functools.partial(jax.jit,
                    static_argnames=("stride", "block_f", "interpret"))
 def mbconv_op(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1,
-              block_f: int = 128, interpret: bool = True):
+              block_f: int = 128, interpret: bool | None = None):
     B, H, W, C = x.shape
     M = w1.shape[1]
     if mbconv_vmem_bytes(H, W, C, M, stride) > VMEM_BUDGET_BYTES:
@@ -66,7 +90,7 @@ def mbconv_op(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1,
 
 
 def mbconv_apply(params, x, *, stride: int = 1, block_f: int | None = None,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """EfficientViT {'pw1','dw','pw2'} conv+BN block -> fused megakernel.
 
     Matches core.efficientvit.mbconv: BN folded into all three convs,
@@ -84,4 +108,53 @@ def mbconv_apply(params, x, *, stride: int = 1, block_f: int | None = None,
                                interpret=interpret)
     out = mbconv_op(x, w1, b1, dw_w, dw_b, w2, b2, stride=stride,
                     block_f=block_f, interpret=interpret)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FIX8 path
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "block_f", "interpret"))
+def mbconv_op_int8(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b, w2_q, s2,
+                   b2, *, stride: int = 1, block_f: int = 128,
+                   interpret: bool | None = None):
+    B, H, W, C = x_q.shape
+    M = w1_q.shape[1]
+    if mbconv_vmem_bytes(H, W, C, M, stride, dtype="i8") > VMEM_BUDGET_BYTES:
+        return mbconv_int8_ref(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b,
+                               w2_q, s2, b2, stride=stride)
+    return mbconv_fused_int8(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b,
+                             w2_q, s2, b2, stride=stride, block_f=block_f,
+                             interpret=interpret)
+
+
+def mbconv_apply_int8(params, x, *, stride: int = 1,
+                      block_f: int | None = None,
+                      interpret: bool | None = None):
+    """Quantized EfficientViT {'pw1','dw','pw2'} block (each a ``qconv``
+    from ``quantize_efficientvit``) -> FIX8 megakernel.
+
+    The input activation is quantized here with the same whole-tensor
+    absmax the reference ``conv2d_int8`` uses, so the first stage is
+    bit-identical; inter-stage requantization happens in-kernel.
+    """
+    from repro.core.quantization import quantize_tensor
+
+    q1 = params["pw1"]["qconv"]
+    qd = params["dw"]["qconv"]
+    q2 = params["pw2"]["qconv"]
+    w1_q = q1["q"][0, 0]               # (1,1,C,M) -> (C,M)
+    dw_q = qd["q"][:, :, 0, :]         # (3,3,1,M) -> (3,3,M)
+    w2_q = q2["q"][0, 0]               # (1,1,M,F) -> (M,F)
+    if block_f is None:
+        block_f = tune_block_f(x.shape, w1_q.shape[1], w2_q.shape[1],
+                               stride=stride, allow_sweep=False,
+                               interpret=interpret, dtype="i8")
+    x_q, x_scale = quantize_tensor(x)
+    out = mbconv_op_int8(x_q, x_scale, w1_q, q1["scale"], q1["bias"],
+                         dw_q, qd["scale"], qd["bias"], w2_q, q2["scale"],
+                         q2["bias"], stride=stride, block_f=block_f,
+                         interpret=interpret)
     return out.astype(x.dtype)

@@ -37,3 +37,43 @@ def mbconv_ref(x, w1, b1, dw_w, dw_b, w2, b2, *, stride: int = 1):
     acc = jax.nn.hard_swish(acc)
     out = jnp.einsum("bhwm,mf->bhwf", acc, w2.astype(jnp.float32))
     return out + b2[None, None, None, :]
+
+
+def mbconv_int8_ref(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b, w2_q, s2,
+                    b2, *, stride: int = 1):
+    """Pure-jnp oracle for the FIX8 megakernel (same argument convention).
+
+    Mirrors the reference quantized chain (``core.quantization.
+    conv2d_int8`` per stage: int32 accumulation, fp32 dequant, Hardswish,
+    dynamic symmetric requantization) with the kernel's per-batch-element
+    inter-stage activation scales, via vmap over the batch.
+    """
+    from repro.core.quantization import quantize_tensor
+
+    def one(xi):                                     # (H, W, C) int8
+        H, W, C = xi.shape
+        M = w1_q.shape[1]
+        acc = jnp.einsum("hwc,cm->hwm", xi.astype(jnp.int32),
+                         w1_q.astype(jnp.int32))
+        mid = acc.astype(jnp.float32) * (x_scale * s1)[None, None, :] \
+            + b1[None, None, :]
+        mid = jax.nn.hard_swish(mid)
+        mq, s_mid = quantize_tensor(mid)
+        mp = jnp.pad(mq, ((1, 1), (1, 1), (0, 0))).astype(jnp.int32)
+        acc2 = jnp.zeros((H, W, M), jnp.int32)
+        for dy in range(3):
+            for dx in range(3):
+                acc2 += mp[dy:dy + H, dx:dx + W, :] \
+                    * dw_q[dy, dx].astype(jnp.int32)[None, None, :]
+        dw = acc2.astype(jnp.float32) * (s_mid * dw_s)[None, None, :] \
+            + dw_b[None, None, :]
+        if stride > 1:
+            dw = dw[stride - 1::stride, stride - 1::stride, :]
+        dw = jax.nn.hard_swish(dw)
+        dq, s_dw = quantize_tensor(dw)
+        acc3 = jnp.einsum("hwm,mf->hwf", dq.astype(jnp.int32),
+                          w2_q.astype(jnp.int32))
+        return acc3.astype(jnp.float32) * (s_dw * s2)[None, None, :] \
+            + b2[None, None, :]
+
+    return jax.vmap(one)(x_q)

@@ -1,0 +1,18 @@
+"""Shared in-kernel FIX8 requantization arithmetic.
+
+One definition for every megakernel's inter-stage requant step (mbconv,
+dsconv): ``requantize_i8`` delegates to ``core.quantization.
+quantize_tensor`` (jnp-only, Pallas-traceable), so the kernels and the
+reference ``conv2d_int8`` chain share the exact scale/clip/round
+arithmetic and cannot drift apart.  Inside the kernels the quantized
+block is one batch element, which makes the fused path bit-identical to
+the reference chain at batch 1.
+"""
+from __future__ import annotations
+
+from repro.core.quantization import quantize_tensor
+
+
+def requantize_i8(x, bits: int = 8):
+    """x fp32 -> (int8 values, fp32 scalar scale), symmetric per-block."""
+    return quantize_tensor(x, axis=None, bits=bits)

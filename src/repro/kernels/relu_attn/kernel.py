@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import default_interpret, tpu_compiler_params
 
 EPS = 1e-6
 
@@ -66,7 +66,7 @@ def _noncausal_kernel(q_ref, k_ref, v_ref, o_ref, kv_acc, ksum_acc, *, eps):
 
 
 def relu_attn_noncausal(q, k, v, *, block_n: int = 256, eps: float = EPS,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """q, k, v: (BH, N, D) -> (BH, N, D) fp32.  One launch per call.
 
     Grid (BH, phase, token tile): phase 0 consumes K/V tiles into VMEM
@@ -76,6 +76,7 @@ def relu_attn_noncausal(q, k, v, *, block_n: int = 256, eps: float = EPS,
     """
     from repro.kernels.autotune import pad_to_multiple
 
+    interpret = default_interpret(interpret)
     BH, N, D = q.shape
     bn = min(block_n, N)
     qp, _ = pad_to_multiple(q, 1, bn)
@@ -143,7 +144,7 @@ def _causal_kernel(q_ref, k_ref, v_ref, o_ref, state_acc, zsum_acc, *, eps):
 
 
 def relu_attn_causal(q, k, v, *, chunk: int = 256, eps: float = EPS,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """q, k, v: (BH, N, D) -> (BH, N, D) fp32, causal.
 
     Ragged N is zero-padded to the chunk boundary (padded tokens sit
@@ -151,6 +152,7 @@ def relu_attn_causal(q, k, v, *, chunk: int = 256, eps: float = EPS,
     """
     from repro.kernels.autotune import pad_to_multiple
 
+    interpret = default_interpret(interpret)
     BH, N, D = q.shape
     C = min(chunk, N)
     q, _ = pad_to_multiple(q, 1, C)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.autotune import autotune
+from repro.kernels.compat import default_interpret
 from repro.kernels.relu_attn.kernel import relu_attn_causal, relu_attn_noncausal
 
 BLOCK_N_CANDIDATES = ({"block_n": 256}, {"block_n": 128}, {"block_n": 64},
@@ -35,12 +36,13 @@ def _unfold_heads(x, B, H):
 
 
 def tune_block_n(bh: int, n: int, d: int, *, allow_sweep: bool = True,
-                 interpret: bool = True) -> int:
+                 interpret: bool | None = None) -> int:
     """Autotuned token tile for a (BH, N, D) attention shape (disk-cached).
 
     The cache key carries the backend (interpret vs compiled) so tiles
     timed under the CPU interpreter are never reused for compiled runs.
     """
+    interpret = default_interpret(interpret)
     backend = "interp" if interpret else "compiled"
     key = (bh, n, d, "f32", backend)
 
@@ -56,7 +58,7 @@ def tune_block_n(bh: int, n: int, d: int, *, allow_sweep: bool = True,
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_n", "interpret"))
 def relu_linear_attention(q, k, v, *, causal: bool = False,
-                          block_n: int = 256, interpret: bool = True):
+                          block_n: int = 256, interpret: bool | None = None):
     """Fused ReLU linear attention.  q, k, v: (B, N, H, D).
 
     Returns (B, N, H, D) in fp32.  The non-causal form is EfficientViT's
@@ -78,7 +80,7 @@ def msa_attention_fn(q, k, v):
 
 
 def msa_batched_attention(qkv, n_heads: int, head_dim: int, *,
-                          block_n: int = 256, interpret: bool = True):
+                          block_n: int = 256, interpret: bool | None = None):
     """All MSA branches + heads in one launch.
 
     qkv: (S, B, N, 3 * n_heads * head_dim) — the S multi-scale aggregation

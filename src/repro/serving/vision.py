@@ -26,6 +26,9 @@ class VisionServeConfig:
     microbatch: int = 8
     use_plan: bool = True     # False -> reference path (A/B and debugging)
     autotune: bool = True
+    precision: str = "auto"   # "auto" | "fp" | "int8" (FIX8 serving mode:
+    #                           pass a quantize_efficientvit tree and the
+    #                           plan routes the int8 megakernels)
 
 
 class VisionEngine:
@@ -35,10 +38,20 @@ class VisionEngine:
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.plan = (build_plan(params, cfg, batch=serve_cfg.microbatch,
-                                autotune=serve_cfg.autotune)
+                                autotune=serve_cfg.autotune,
+                                precision=serve_cfg.precision)
                      if serve_cfg.use_plan else None)
         self._fwd = jax.jit(
             lambda p, x: efficientvit(p, x, cfg, plan=self.plan))
+
+    @classmethod
+    def quantized(cls, params, cfg: EfficientViTConfig,
+                  serve_cfg: VisionServeConfig = VisionServeConfig()):
+        """FIX8 serving mode: quantize an fp32 param tree post-training
+        and serve it through the int8 fused path."""
+        from repro.core.quantization import quantize_efficientvit
+        return cls(quantize_efficientvit(params), cfg,
+                   dataclasses.replace(serve_cfg, precision="int8"))
 
     def logits(self, images) -> jax.Array:
         """images: (n, H, W, 3), any n -> (n, num_classes)."""

@@ -7,5 +7,17 @@ themselves in a subprocess (tests/test_distributed.py).
 import os
 import sys
 
+import pytest
+
 # make tests/proptest.py importable regardless of invocation directory
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+@pytest.fixture
+def tmp_autotune_cache(tmp_path, monkeypatch):
+    """Isolated on-disk autotune cache (shared by the fusion test files)."""
+    from repro.kernels import autotune as autotune_mod
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune_mod.clear_memory_cache()
+    yield tmp_path / "at.json"
+    autotune_mod.clear_memory_cache()

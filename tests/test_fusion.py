@@ -8,7 +8,6 @@ reference path, and any plan-routed forward agrees with it within 1e-3.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from numpy.testing import assert_allclose
 
 from proptest import sweep
@@ -24,14 +23,6 @@ from repro.kernels.mbconv.ref import mbconv_ref
 from repro.kernels.relu_attn.kernel import relu_attn_noncausal
 from repro.kernels.relu_attn.ops import msa_batched_attention
 from repro.kernels.relu_attn.ref import relu_attn_noncausal_ref
-
-
-@pytest.fixture
-def tmp_autotune_cache(tmp_path, monkeypatch):
-    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
-    autotune_mod.clear_memory_cache()
-    yield tmp_path / "at.json"
-    autotune_mod.clear_memory_cache()
 
 
 # ---------------------------------------------------------------------------
@@ -141,13 +132,17 @@ def test_efficientvit_fused_forward_matches_reference(tmp_autotune_cache):
         assert r_.fused
 
 
-def test_quantized_blocks_route_to_reference(tmp_autotune_cache):
+def test_quantized_blocks_forced_fp_route_to_reference(tmp_autotune_cache):
+    """precision="fp" on a FIX8 tree preserves the old demotion behavior
+    (the fp megakernels can't consume int8 weights) — and the plan-routed
+    forward still matches the reference quantized path."""
     from repro.core.fusion import build_plan
     from repro.core.quantization import quantize_efficientvit
     key = jax.random.PRNGKey(2)
     params = init_efficientvit(key, B1_SMOKE)
     qparams = quantize_efficientvit(params)
-    plan = build_plan(qparams, B1_SMOKE, batch=1, autotune=False)
+    plan = build_plan(qparams, B1_SMOKE, batch=1, autotune=False,
+                      precision="fp")
     conv_sites = [d for d in plan.decisions.values()
                   if d.kind in ("dsconv", "mbconv")]
     assert conv_sites and all(not d.fused and d.reason == "quantized"
