@@ -21,7 +21,16 @@ Asserts (CI smoke gate):
   * the int8 plan fuses every site the fp plan fuses (zero
     ``"quantized"`` fallbacks) on B1_SMOKE and full B1;
   * int8-fused analytic HBM bytes (act + weights) <= 0.6x fp-fused at
-    B1 @224.
+    B1 @224;
+  * drift gate: B1 @224 stays at ``core.fusion.
+    EXPECTED_B1_FUSED_LAUNCHES`` (= 22) fused launches in BOTH
+    precisions — a lowering/planner change that moves this must update
+    the expectation explicitly.
+
+Everything here runs through the program IR (``core.program.lower`` /
+``execute``) and the generic registry planner
+(``core.fusion.plan_program``) — the same single lowering the cycle
+model and fig6/table2 consume.
 
     PYTHONPATH=src python -m benchmarks.e2e_latency
 """
@@ -33,9 +42,10 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.kernel_bench import _time
-from repro.core.efficientvit import (
-    B1, B1_SMOKE, efficientvit, init_efficientvit)
-from repro.core.fusion import build_plan, launch_counts, plan_report
+from repro.core.efficientvit import B1, B1_SMOKE, init_efficientvit
+from repro.core.fusion import (
+    EXPECTED_B1_FUSED_LAUNCHES, launch_counts, plan_program, plan_report)
+from repro.core.program import execute, lower
 from repro.core.quantization import quantize_efficientvit
 
 
@@ -60,12 +70,13 @@ def run(batch: int = 2, autotune: bool = True):
     params = init_efficientvit(key, cfg)
     x = jax.random.normal(key, (batch, cfg.image_size, cfg.image_size, 3))
 
+    program = lower(cfg, batch=batch)        # ONE lowering for everything
     t0 = time.perf_counter()
-    plan = build_plan(params, cfg, batch=batch, autotune=autotune)
+    plan = plan_program(program, params, autotune=autotune)
     t_plan = time.perf_counter() - t0
 
-    ref_fwd = jax.jit(lambda p, x: efficientvit(p, x, cfg))
-    fus_fwd = jax.jit(lambda p, x: efficientvit(p, x, cfg, plan=plan))
+    ref_fwd = jax.jit(lambda p, x: execute(program, p, x))
+    fus_fwd = jax.jit(lambda p, x: execute(program, p, x, plan=plan))
 
     ref = ref_fwd(params, x)
     fus = fus_fwd(params, x)
@@ -104,14 +115,14 @@ def run(batch: int = 2, autotune: bool = True):
     # FIX8: quantized model through the int8 fused path
     # ---------------------------------------------------------------
     qparams = quantize_efficientvit(params)
-    qplan = build_plan(qparams, cfg, batch=batch, autotune=autotune)
+    qplan = plan_program(program, qparams, autotune=autotune)
     assert not any(d.reason == "quantized" for d in qplan.decisions.values())
     # >= because int8 may fuse MORE sites than fp (4x smaller VMEM tiles)
     assert qplan.n_fused() >= plan.n_fused(), \
         "int8 plan fuses fewer sites than fp"
 
-    qref_fwd = jax.jit(lambda p, x: efficientvit(p, x, cfg))
-    qfus_fwd = jax.jit(lambda p, x: efficientvit(p, x, cfg, plan=qplan))
+    qref_fwd = jax.jit(lambda p, x: execute(program, p, x))
+    qfus_fwd = jax.jit(lambda p, x: execute(program, p, x, plan=qplan))
     x1 = x[:1]                      # batch 1: in-kernel requant scales are
     qref = qref_fwd(qparams, x1)    # bit-identical to the reference chain
     qfus = qfus_fwd(qparams, x1)
@@ -136,11 +147,21 @@ def run(batch: int = 2, autotune: bool = True):
 
     # ---------------------------------------------------------------
     # analytic fp-fused vs int8-fused at full B1 @224 (act + weights)
+    # + the launch-count drift gate: any change to the lowering or the
+    # planner that moves B1 off its 22 fused launches must update
+    # core.fusion.EXPECTED_B1_FUSED_LAUNCHES explicitly.
     # ---------------------------------------------------------------
+    b1_program = lower(B1, batch=1)
     b1_params = init_efficientvit(key, B1)
-    b1_fp = plan_report(build_plan(b1_params, B1, batch=1, autotune=False))
-    b1_q = plan_report(build_plan(quantize_efficientvit(b1_params), B1,
-                                  batch=1, autotune=False))
+    b1_fp_plan = plan_program(b1_program, b1_params, autotune=False)
+    b1_q_plan = plan_program(b1_program, quantize_efficientvit(b1_params),
+                             autotune=False)
+    for p_ in (b1_fp_plan, b1_q_plan):
+        lc_b1 = launch_counts(p_)
+        assert lc_b1["fused"] == EXPECTED_B1_FUSED_LAUNCHES, \
+            (lc_b1, EXPECTED_B1_FUSED_LAUNCHES)
+    b1_fp = plan_report(b1_fp_plan)
+    b1_q = plan_report(b1_q_plan)
     assert all(r["fused"] for r in b1_q), \
         {r["site"]: r["reason"] for r in b1_q if not r["fused"]}
     fp_tot = sum(r["hbm_total"] for r in b1_fp)

@@ -3,15 +3,19 @@ EfficientViT-B1 on the cycle-level accelerator model.
 
 Paper anchors: first generic Conv ~37.5% util (3-channel input), group
 Convs in MSA slightly lower than PWConvs, overall >= 95% utilization.
+
+Consumes the program IR (``core.program.lower``) — the identical
+lowering the JAX forward executes and the fusion plan routes.
 """
 from __future__ import annotations
 
-from repro.core.accelerator_model import HwConfig, analyze
+from repro.core.accelerator_model import HwConfig, analyze_program
 from repro.core.efficientvit import B1
+from repro.core.program import lower
 
 
 def run(csv: bool = False):
-    rep, stages, sched = analyze(B1, HwConfig())
+    rep, stages, sched = analyze_program(lower(B1), HwConfig())
     rows = []
     first = next(s for s in sched if s.name == "conv1")
     rows.append(("first_conv", first.cycles / rep.hw.freq_hz * 1e3,

@@ -7,13 +7,15 @@ paper's TMP contribution (§III-D) — inter-layer (DW->PW) and intra-layer
 """
 from __future__ import annotations
 
-from repro.core.accelerator_model import HwConfig, TABLE_II, analyze
+from repro.core.accelerator_model import HwConfig, TABLE_II, analyze_program
 from repro.core.efficientvit import B1
+from repro.core.program import lower
 
 
 def run():
-    rep, _, _ = analyze(B1, fuse=True)
-    rep_nf, _, _ = analyze(B1, fuse=False)
+    program = lower(B1)       # the same lowering the JAX forward executes
+    rep, _, _ = analyze_program(program, fuse=True)
+    rep_nf, _, _ = analyze_program(program, fuse=False)
 
     print("# Table II — comparison with SOTA works")
     hdr = f"{'design':28s} {'GOPS':>8s} {'W':>6s} {'GOPS/W':>8s} {'GOPS/DSP':>9s}"

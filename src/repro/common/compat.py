@@ -1,0 +1,43 @@
+"""Version-compat shims for jax API moves (non-Pallas; the Pallas ones
+live in ``repro.kernels.compat``).
+
+``shard_map`` was promoted from ``jax.experimental.shard_map.shard_map``
+to ``jax.shard_map`` (with ``check_rep``/``auto`` renamed to
+``check_vma``/``axis_names``) across jax releases.  Every caller in this
+repo (layers/moe, distributed/pipeline, the distributed tests) goes
+through this ONE wrapper, so a jax upgrade or downgrade is a no-op for
+them: call with the new-style kwargs and the shim translates for old
+jax.
+"""
+from __future__ import annotations
+
+import jax
+
+_NEW_API = hasattr(jax, "shard_map")
+if _NEW_API:
+    _shard_map = jax.shard_map
+else:  # jax 0.4.x: experimental home, check_rep/auto kwargs
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    """``jax.shard_map`` under either jax naming.
+
+    New-style kwargs only: ``check_vma`` (old ``check_rep``) and
+    ``axis_names`` — the axes manual inside ``f`` (old jax takes the
+    complement as ``auto``).  ``None`` means library default.
+    """
+    kw = {}
+    if _NEW_API:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+    else:
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        if axis_names is not None:
+            kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

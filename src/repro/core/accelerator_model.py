@@ -19,10 +19,12 @@ for MSA.  The TMP dataflow (Fig. 5) is modeled as a two-resource schedule:
   K-adder-tree does the rowsum for free; ReLU(Q) @ [Z | ksum] runs
   concurrently on the MAT; divisions happen in post-processing.
 
-The model consumes the layer manifest exported by core/efficientvit.py, so
-Fig. 6 / Table II numbers trace to the same source of truth as the JAX
-model.  DRAM traffic is modeled at int8 with double-buffered overlap
-(cycles = max(compute, memory)); fusion removes intermediate round-trips.
+The model consumes op records expanded from the program IR
+(``core.program.lower`` + ``manifest`` — the same lowering the JAX
+forward executes), so Fig. 6 / Table II numbers trace to the same source
+of truth as the model that runs.  DRAM traffic is modeled at int8 with
+double-buffered overlap (cycles = max(compute, memory)); fusion removes
+intermediate round-trips.
 """
 from __future__ import annotations
 
@@ -30,7 +32,8 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
-from repro.core.efficientvit import B1, EfficientViTConfig, OpRecord, layer_manifest
+from repro.core.efficientvit import B1, EfficientViTConfig, OpRecord
+from repro.core.program import Program, lower, manifest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,16 +229,18 @@ class Report:
         return self.gops / self.hw.dsp_used
 
 
-def analyze(cfg: EfficientViTConfig = B1, hw: HwConfig = HwConfig(), *,
-            fuse: bool = True, include_head: bool = False):
-    """Full pipeline: manifest -> schedule -> (report, per-stage, per-op).
+def analyze_program(program: Program, hw: HwConfig = HwConfig(), *,
+                    fuse: bool = True, include_head: bool = False):
+    """IR pipeline: Program -> manifest -> schedule -> (report, per-stage,
+    per-op).  The cycle model and the JAX forward consume the SAME
+    lowering, so fig6/table2 numbers cannot drift from what runs.
 
     ``include_head=False`` matches the paper's evaluation scope: Fig. 6
     covers "a generic Conv, a DSConv layer, and four stages (S1-S4)" —
     the classification head (batch-1, DRAM-bound FC matmuls) is not part
     of the accelerator workload.
     """
-    ops = layer_manifest(cfg)
+    ops = manifest(program)
     if not include_head:
         ops = [o for o in ops if o.stage != "head"]
     sched = schedule(ops, hw, fuse=fuse)
@@ -252,6 +257,13 @@ def analyze(cfg: EfficientViTConfig = B1, hw: HwConfig = HwConfig(), *,
         st["util"] = st["macs"] / (st["cycles"] * hw.total_mults)
         st["latency_ms"] = st["cycles"] / hw.freq_hz * 1e3
     return rep, stages, sched
+
+
+def analyze(cfg: EfficientViTConfig = B1, hw: HwConfig = HwConfig(), *,
+            fuse: bool = True, include_head: bool = False):
+    """Back-compat shim: lower the config and analyze the program."""
+    return analyze_program(lower(cfg), hw, fuse=fuse,
+                           include_head=include_head)
 
 
 # Paper Table II reference rows, for the comparison benchmark.

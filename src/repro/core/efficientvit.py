@@ -5,10 +5,12 @@ then four stages: S1/S2 stack MBConvs, S3/S4 stack EfficientViT Modules
 (MSA + MBConv).  Every conv is followed by BN (foldable) and Hardswish
 except block-final projections, matching §II.
 
-Besides the JAX forward, the model exports a **layer manifest** — one
-record per hardware operation (type, shapes, MACs) — which drives both
-the cycle-level accelerator model (core/accelerator_model.py) and the
-fig6/table2 benchmarks, so the numbers trace to one source of truth.
+This module owns the *building blocks* (param init + reference block
+forwards).  The network-level walk lives in ONE place —
+``core.program.lower`` — and ``efficientvit()`` / ``layer_manifest()``
+below are thin shims over that IR (``execute``/``manifest``), so the
+forward, the fusion plan, the accelerator cycle model and the
+fig6/table2 benchmarks all trace to the same lowering.
 """
 from __future__ import annotations
 
@@ -110,14 +112,9 @@ def init_evit_module(key, c, head_dim, scales, expand, dtype):
     }
 
 
-def evit_module(p, x, cfg: EfficientViTConfig, c, *, attention_fn=None,
-                plan=None, site=None):
+def evit_module(p, x, cfg: EfficientViTConfig, c, *, attention_fn=None):
     mcfg = MSAConfig(c, cfg.head_dim, tuple(cfg.msa_scales), cfg.dtype)
     kw = {} if attention_fn is None else {"attention_fn": attention_fn}
-    if plan is not None:
-        from repro.core.fusion import dispatch_mbconv
-        x = x + msa(p["msa"], x, mcfg, plan=plan, site=f"{site}.msa", **kw)
-        return x + dispatch_mbconv(plan, f"{site}.mb", p["mbconv"], x)
     x = x + msa(p["msa"], x, mcfg, **kw)
     x = x + mbconv(p["mbconv"], x)
     return x
@@ -165,43 +162,19 @@ def efficientvit(params, x, cfg: EfficientViTConfig = B1, *,
                  attention_fn=None, plan=None):
     """x: (B, H, W, 3) image -> (B, num_classes) logits.
 
-    ``plan`` is an optional ``core.fusion.FusionPlan`` (built ahead of
-    time by ``core.fusion.build_plan``) routing stem DSConvs, MBConv
-    blocks and MSA cores through the fused Pallas megakernels — at the
-    precision each site's params carry, so a ``quantize_efficientvit``
-    tree runs the FIX8 int8 megakernels.  With ``plan=None`` the
-    reference path below runs unchanged.
+    Back-compat shim over the program IR: lowers ``cfg`` (cached) and
+    interprets it with ``core.program.execute``.  ``plan`` is an
+    optional ``core.fusion.FusionPlan`` routing fusible sites through
+    the registry's Pallas megakernels — at the precision each site's
+    params carry, so a ``quantize_efficientvit`` tree runs the FIX8
+    int8 megakernels.  With ``plan=None`` the reference path runs
+    unchanged.
     """
-    if plan is not None:
-        from repro.core.fusion import dispatch_dsconv, dispatch_mbconv
-    y = conv_bn_act(params["stem_conv"], x, stride=2)
-    for i, p in enumerate(params["stem_ds"]):
-        y = y + (dispatch_dsconv(plan, f"stem.ds{i}", p, y)
-                 if plan is not None else dsconv(p, y))
-    for si in (1, 2):
-        for bi, p in enumerate(params[f"stage{si}"]):
-            stride = 2 if bi == 0 else 1
-            out = (dispatch_mbconv(plan, f"S{si}.mb{bi}", p, y, stride=stride)
-                   if plan is not None else mbconv(p, y, stride=stride))
-            y = out if bi == 0 else y + out
-    for si in (3, 4):
-        stage = params[f"stage{si}"]
-        y = (dispatch_mbconv(plan, f"S{si}.down", stage["down"], y, stride=2)
-             if plan is not None else mbconv(stage["down"], y, stride=2))
-        for bi, p in enumerate(stage["blocks"]):
-            y = evit_module(p, y, cfg, y.shape[-1], attention_fn=attention_fn,
-                            plan=plan, site=f"S{si}.evit{bi}")
-    y = conv_bn_act(params["head"]["conv"], y)
-    y = jnp.mean(y, axis=(1, 2))
+    from repro.core.program import execute, lower
 
-    def fc(p, h):
-        if "qw" in p:
-            from repro.core.quantization import matmul_int8
-            return matmul_int8(h, p["qw"], p["scale"])
-        return jnp.einsum("bc,cf->bf", h, p["w"].astype(h.dtype))
-
-    y = _act(fc(params["head"]["fc1"], y))
-    return fc(params["head"]["fc2"], y)
+    program = lower(cfg, batch=x.shape[0], image_size=x.shape[1])
+    return execute(program, params, x, plan=plan,
+                   attention_fn=attention_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -238,67 +211,14 @@ class OpRecord:
 
 
 def layer_manifest(cfg: EfficientViTConfig = B1) -> list[OpRecord]:
-    """Enumerate hardware ops for one inference at cfg.image_size."""
-    ops: list[OpRecord] = []
-    w, d = cfg.widths, cfg.depths
-    r = cfg.image_size // 2
-    ops.append(OpRecord("stem", "conv1", "conv", r, r, 3, w[0], 3))
-    for i in range(d[0]):
-        ops.append(OpRecord("stem", f"ds{i}.dw", "dw", r, r, w[0], w[0], 3))
-        ops.append(OpRecord("stem", f"ds{i}.pw", "pw", r, r, w[0], w[0],
-                            fused_with_prev=True))
+    """Enumerate hardware ops for one inference at cfg.image_size.
 
-    def add_mbconv(stage, name, res, c_in, c_out, stride):
-        mid = c_in * cfg.expand_ratio
-        ro = res // stride
-        ops.append(OpRecord(stage, f"{name}.pw1", "pw", res, res, c_in, mid))
-        ops.append(OpRecord(stage, f"{name}.dw", "dw", ro, ro, mid, mid, 3,
-                            fused_with_prev=False))
-        ops.append(OpRecord(stage, f"{name}.pw2", "pw", ro, ro, mid, c_out,
-                            fused_with_prev=True))
-        return ro
-
-    for si in (1, 2):
-        c_in = w[si - 1]
-        for bi in range(d[si]):
-            r = add_mbconv(f"S{si}", f"mb{bi}", r, c_in, w[si],
-                           2 if bi == 0 else 1)
-            c_in = w[si]
-
-    for si in (3, 4):
-        c = w[si]
-        r = add_mbconv(f"S{si}", "down", r, w[si - 1], c, 2)
-        heads = c // cfg.head_dim
-        total = heads * cfg.head_dim
-        n_tok = r * r
-        for bi in range(d[si]):
-            pre = f"evit{bi}"
-            ops.append(OpRecord(f"S{si}", f"{pre}.qkv", "pw", r, r, c,
-                                3 * total))
-            for s in cfg.msa_scales:
-                ops.append(OpRecord(f"S{si}", f"{pre}.agg{s}.dw", "dw", r, r,
-                                    3 * total, 3 * total, s))
-                # grouped 1x1: reduction = channels per group
-                ops.append(OpRecord(f"S{si}", f"{pre}.agg{s}.pw", "group_pw",
-                                    r, r, cfg.head_dim, 3 * total,
-                                    fused_with_prev=True))
-            n_scales = 1 + len(cfg.msa_scales)
-            # ReLU(K)^T V : per head d x d state over n_tok tokens
-            ops.append(OpRecord(f"S{si}", f"{pre}.ktv", "matmul",
-                                n_scales * heads * cfg.head_dim, 1, n_tok,
-                                cfg.head_dim))
-            # ReLU(Q) @ [KtV | ksum]: fused with previous on MAT engine
-            ops.append(OpRecord(f"S{si}", f"{pre}.qz", "matmul",
-                                n_scales * heads * n_tok, 1, cfg.head_dim,
-                                cfg.head_dim + 1, fused_with_prev=True))
-            ops.append(OpRecord(f"S{si}", f"{pre}.proj", "pw", r, r,
-                                n_scales * total, c))
-            add_mbconv(f"S{si}", f"{pre}.mb", r, c, c, 1)
-    hw1, hw2 = cfg.head_widths
-    ops.append(OpRecord("head", "conv", "pw", r, r, w[4], hw1))
-    ops.append(OpRecord("head", "fc1", "matmul", 1, 1, hw1, hw2))
-    ops.append(OpRecord("head", "fc2", "matmul", 1, 1, hw2, cfg.num_classes))
-    return ops
+    Back-compat shim: the records are expanded from the same program IR
+    the forward executes (``core.program.lower`` + ``manifest``), so the
+    cycle model and benchmarks cannot drift from what actually runs.
+    """
+    from repro.core.program import lower, manifest
+    return manifest(lower(cfg))
 
 
 def total_macs(cfg: EfficientViTConfig = B1) -> int:

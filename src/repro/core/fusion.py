@@ -1,14 +1,14 @@
-"""Fusion-plan dispatch: route EfficientViT inference through the fused
-Pallas kernels.
+"""Fusion planning: freeze per-site kernel routing for one ``Program``.
 
 This is the software analogue of the paper's TMP dataflow compiler pass
 (and of CHOSEN's compile-time optimization stack, arXiv 2407.12736):
-``build_plan`` walks the param tree alongside the layer manifest ONCE,
-ahead of time and outside ``jax.jit``, deciding per fusible site whether
-the shapes qualify for the fused kernel (VMEM budget), **which precision
-it runs at**, and which autotuned block sizes to use.  The jitted forward
-then consults the frozen plan — dispatch is pure table lookup, no
-tracing-time tuning.
+``plan_program`` runs ONE generic loop over the lowered IR's fusible
+sites (``core.program.lower``), consulting the kernel registry
+(``repro.kernels.registry``) for each — which precision the site's
+params support, whether the shapes fit the kernel's VMEM budget, and
+which autotuned block sizes to freeze.  The jitted forward
+(``core.program.execute``) then consults the frozen plan — dispatch is
+pure table lookup, no tracing-time tuning.
 
 Precision is a first-class dispatch axis, not a bail-out: a FIX8 tree
 (``core.quantization.quantize_efficientvit``) routes to the int8
@@ -18,31 +18,32 @@ array fed by the TMP dataflow (§III/§IV-A; ME-ViT arXiv 2402.09709 shows
 the same single-load + low-precision pairing is where the memory win
 lives).
 
-Fusible sites:
+Fusible sites (= ``Program.fusible()``, the IR is the source of truth):
   * ``stem.ds{i}``            DSConv        -> kernels/dsconv  (DW+PW)
   * ``S{1,2}.mb{i}``          MBConv        -> kernels/mbconv  (PW+DW+PW)
   * ``S{3,4}.down``           MBConv        -> kernels/mbconv
   * ``S{3,4}.evit{i}.mb``     MBConv        -> kernels/mbconv
-  * ``S{3,4}.evit{i}.msa``    MSA core      -> kernels/relu_attn, all
-                              multi-scale branches + heads folded into
-                              one single-pass launch; for FIX8 trees the
-                              QKV/output projections additionally route
-                              through kernels/int8_matmul
+  * ``S{3,4}.evit{i}.msa``    MSA module    -> kernels/relu_attn (+
+                              kernels/int8_matmul projections for FIX8)
 
 Anything that fails a check runs the reference path — ``plan=None``
-leaves the reference forward byte-identical.
+leaves the reference forward byte-identical.  ``build_plan`` remains as
+the stable back-compat entry point (lower + plan in one call).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Mapping
 
-import jax.numpy as jnp
+__all__ = ["SiteDecision", "FusionPlan", "build_plan", "plan_program",
+           "plan_report", "launch_counts", "site_traffic",
+           "EXPECTED_B1_FUSED_LAUNCHES"]
 
-__all__ = ["SiteDecision", "FusionPlan", "build_plan", "plan_report",
-           "launch_counts"]
-
-MSA_DEFAULT_BLOCK_N = 256
+# Drift gate: one fused launch per fusible site of EfficientViT-B1
+# (1 stem DSConv + 2+3 MBConv + 2 downsamples + (3+4) x (MSA + MBConv)).
+# benchmarks/e2e_latency.py and tests/test_program.py fail if a change
+# moves this number without an explicit expectation update here.
+EXPECTED_B1_FUSED_LAUNCHES = 22
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,97 +92,54 @@ class FusionPlan:
         return "\n".join(rows)
 
 
-def _block_precision(block) -> str:
-    """Precision of one conv+BN (or qconv) subblock dict."""
-    kinds = {"int8" if (isinstance(v, dict) and "qconv" in v) else "fp"
-             for v in block.values() if isinstance(v, dict)}
-    if kinds == {"int8"}:
-        return "int8"
-    if kinds == {"fp"}:
-        return "fp"
-    return "mixed"
+# ---------------------------------------------------------------------------
+# the planner: ONE loop over Program.fusible(), all policy in the registry
+# ---------------------------------------------------------------------------
+
+def decision_shape(site) -> tuple:
+    """A ``Site`` -> the legacy ``SiteDecision.shape`` tuple the analytic
+    accounting consumes: conv kinds (B, H, W, C, mid, F, stride); msa
+    (BH, n_tok, head_dim, n_branches, channels)."""
+    if site.kind == "msa":
+        B, H, W, C = site.in_shape
+        bh = site.attrs["n_branches"] * B * site.attrs["heads"]
+        return (bh, H * W, site.attrs["head_dim"],
+                site.attrs["n_branches"], C)
+    if len(site.in_shape) == 4:
+        B, H, W, C = site.in_shape
+        F = site.out_shape[-1]
+        mid = site.attrs.get("mid", C)
+        return (B, H, W, C, mid, F, site.stride)
+    # registered non-builtin kind with an unconventional layout
+    return tuple(site.in_shape) + tuple(site.out_shape)
 
 
-def _resolve_precision(site_prec: str, requested: str):
-    """(site precision, requested precision) -> (run precision, reason).
+def _decide(site, params, *, enabled, autotune, interpret, precision):
+    from repro.kernels.registry import get_kernel, get_probe
 
-    reason None means proceed; otherwise it's the fallback reason."""
-    if site_prec == "mixed":
-        return "fp", "mixed"
-    if requested == "auto":
-        return site_prec, None
-    if requested == site_prec:
-        return site_prec, None
-    # forcing fp on int8 weights (or int8 on fp weights) cannot run the
-    # matching kernel family -> reference path
-    return "fp", "quantized" if site_prec == "int8" else "not-quantized"
-
-
-def _decide_mbconv(name, p, B, H, W, C, F, stride, *, enabled, autotune,
-                   interpret, precision):
-    from repro.kernels.mbconv.ops import (
-        VMEM_BUDGET_BYTES, mbconv_vmem_bytes, tune_block_f)
-    mid = p["pw1"]["conv"]["w"].shape[-1] if "conv" in p["pw1"] else \
-        p["pw1"]["qconv"]["q"].shape[-1]
-    shape = (B, H, W, C, mid, F, stride)
+    shape = decision_shape(site)
     if not enabled:
-        return SiteDecision(name, "mbconv", False, "disabled", shape=shape)
-    prec, fail = _resolve_precision(_block_precision(p), precision)
+        return SiteDecision(site.name, site.kind, False, "disabled",
+                            shape=shape)
+    probe = get_probe(site.kind)          # precision policy is per-kind
+    prec, fail = probe.resolve_precision(probe.site_precision(params),
+                                         precision)
     if fail is not None:
-        return SiteDecision(name, "mbconv", False, fail, shape=shape)
-    dtype = "i8" if prec == "int8" else "f32"
-    if mbconv_vmem_bytes(H, W, C, mid, stride,
-                         dtype=dtype) > VMEM_BUDGET_BYTES:
-        return SiteDecision(name, "mbconv", False, "vmem", shape=shape,
-                            precision=prec)
-    bf = tune_block_f((B, H, W, C), mid, F, stride=stride,
-                      allow_sweep=autotune, interpret=interpret, dtype=dtype)
-    return SiteDecision(name, "mbconv", True, "ok", {"block_f": bf}, shape,
+        return SiteDecision(site.name, site.kind, False, fail, shape=shape)
+    impl = get_kernel(site.kind, prec)
+    if impl.vmem_bytes(site) > impl.vmem_budget:
+        return SiteDecision(site.name, site.kind, False, "vmem",
+                            shape=shape, precision=prec)
+    blocks = impl.tune(site, autotune=autotune, interpret=interpret)
+    return SiteDecision(site.name, site.kind, True, "ok", blocks, shape,
                         precision=prec)
 
 
-def _decide_dsconv(name, p, B, H, W, C, *, enabled, autotune, precision):
-    from repro.kernels.dsconv.ops import VMEM_BUDGET_BYTES, dsconv_vmem_bytes
-    shape = (B, H, W, C, C, C, 1)
-    if not enabled:
-        return SiteDecision(name, "dsconv", False, "disabled", shape=shape)
-    prec, fail = _resolve_precision(_block_precision(p), precision)
-    if fail is not None:
-        return SiteDecision(name, "dsconv", False, fail, shape=shape)
-    dtype = "i8" if prec == "int8" else "f32"
-    if dsconv_vmem_bytes(H, W, C, dtype=dtype) > VMEM_BUDGET_BYTES:
-        return SiteDecision(name, "dsconv", False, "vmem", shape=shape,
-                            precision=prec)
-    return SiteDecision(name, "dsconv", True, "ok", {"block_f": 128}, shape,
-                        precision=prec)
-
-
-def _decide_msa(name, p, B, n_tok, heads, head_dim, n_branches, channels, *,
-                enabled, autotune, interpret, precision):
-    from repro.kernels.relu_attn.ops import tune_block_n
-    BH = n_branches * B * heads
-    shape = (BH, n_tok, head_dim, n_branches, channels)
-    if not enabled:
-        return SiteDecision(name, "msa", False, "disabled", shape=shape)
-    # The attention core is precision-agnostic (fp accumulation either
-    # way); `precision` here records whether the QKV/output projections
-    # route through the int8 GEMM kernel.  Both projections must be
-    # quantized — a mixed tree keeps them on the reference path ("fp").
-    site_prec = ("int8" if "qconv" in p["qkv"] and "qconv" in p["proj"]
-                 else "fp")
-    prec = site_prec if precision in ("auto", site_prec) else "fp"
-    bn = tune_block_n(BH, n_tok, head_dim, allow_sweep=autotune,
-                      interpret=interpret)
-    return SiteDecision(name, "msa", True, "ok", {"block_n": bn}, shape,
-                        precision=prec)
-
-
-def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
-               fuse_dsconv: bool = True, fuse_mbconv: bool = True,
-               fuse_msa: bool = True, autotune: bool = True,
-               interpret: bool | None = None,
-               precision: str = "auto") -> FusionPlan:
-    """Walk the param tree + architecture and freeze per-site routing.
+def plan_program(program, params, *, fuse_dsconv: bool = True,
+                 fuse_mbconv: bool = True, fuse_msa: bool = True,
+                 autotune: bool = True, interpret: bool | None = None,
+                 precision: str = "auto") -> FusionPlan:
+    """Freeze per-site routing for a lowered ``core.program.Program``.
 
     ``precision``: "auto" (default) matches each site's params — fp32
     trees run the fp megakernels, ``quantize_efficientvit`` trees run
@@ -193,86 +151,39 @@ def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
     cache is cold) time the real kernels on synthetic inputs here, never
     at trace time.
     """
+    from repro.core.program import params_at
     from repro.kernels.compat import default_interpret
 
     assert precision in ("auto", "fp", "int8"), precision
     interpret = default_interpret(interpret)
-    w, d = cfg.widths, cfg.depths
-    size = image_size or cfg.image_size
-    B = batch
+    enabled = {"dsconv": fuse_dsconv, "mbconv": fuse_mbconv,
+               "msa": fuse_msa}
     decisions: dict[str, SiteDecision] = {}
-
-    def put(dec):
-        decisions[dec.name] = dec
-
-    r = size // 2                                   # after the stem conv
-    for i, p in enumerate(params["stem_ds"]):
-        put(_decide_dsconv(f"stem.ds{i}", p, B, r, r, w[0],
-                           enabled=fuse_dsconv, autotune=autotune,
-                           precision=precision))
-    for si in (1, 2):
-        c_in = w[si - 1]
-        for bi, p in enumerate(params[f"stage{si}"]):
-            stride = 2 if bi == 0 else 1
-            put(_decide_mbconv(f"S{si}.mb{bi}", p, B, r, r, c_in, w[si],
-                               stride, enabled=fuse_mbconv,
-                               autotune=autotune, interpret=interpret,
-                               precision=precision))
-            r //= stride
-            c_in = w[si]
-    for si in (3, 4):
-        stage = params[f"stage{si}"]
-        c = w[si]
-        put(_decide_mbconv(f"S{si}.down", stage["down"], B, r, r, w[si - 1],
-                           c, 2, enabled=fuse_mbconv, autotune=autotune,
-                           interpret=interpret, precision=precision))
-        r //= 2
-        heads = c // cfg.head_dim
-        for bi, p in enumerate(stage["blocks"]):
-            put(_decide_msa(f"S{si}.evit{bi}.msa", p["msa"], B, r * r, heads,
-                            cfg.head_dim, 1 + len(cfg.msa_scales), c,
-                            enabled=fuse_msa, autotune=autotune,
-                            interpret=interpret, precision=precision))
-            put(_decide_mbconv(f"S{si}.evit{bi}.mb", p["mbconv"], B, r, r,
-                               c, c, 1, enabled=fuse_mbconv,
-                               autotune=autotune, interpret=interpret,
-                               precision=precision))
+    for site in program.fusible():
+        decisions[site.name] = _decide(
+            site, params_at(params, site.param_path),
+            enabled=enabled.get(site.kind, True),  # new kinds default on
+            autotune=autotune, interpret=interpret, precision=precision)
     return FusionPlan(decisions=decisions, interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# dispatch (called from core.efficientvit / core.relu_attention)
-# ---------------------------------------------------------------------------
+def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
+               fuse_dsconv: bool = True, fuse_mbconv: bool = True,
+               fuse_msa: bool = True, autotune: bool = True,
+               interpret: bool | None = None,
+               precision: str = "auto") -> FusionPlan:
+    """Back-compat entry point: lower the config, then plan it.
 
-def dispatch_dsconv(plan, name, p, x):
-    from repro.core.efficientvit import dsconv
-    d = plan.get(name)
-    if d is None or not d.fused:
-        return dsconv(p, x)
-    if d.precision == "int8":
-        from repro.kernels.dsconv.ops import dsconv_apply_int8
-        return dsconv_apply_int8(p, x, stride=1,
-                                 block_f=d.blocks.get("block_f", 128),
-                                 interpret=plan.interpret)
-    from repro.kernels.dsconv.ops import dsconv_apply
-    return dsconv_apply(p, x, stride=1, block_f=d.blocks.get("block_f", 128),
-                        interpret=plan.interpret)
+    Equivalent to ``plan_program(lower(cfg, batch=..., image_size=...),
+    params, ...)``; kept so existing callers and tests keep working.
+    """
+    from repro.core.program import lower
 
-
-def dispatch_mbconv(plan, name, p, x, *, stride=1):
-    from repro.core.efficientvit import mbconv
-    d = plan.get(name)
-    if d is None or not d.fused:
-        return mbconv(p, x, stride=stride)
-    if d.precision == "int8":
-        from repro.kernels.mbconv.ops import mbconv_apply_int8
-        return mbconv_apply_int8(p, x, stride=stride,
-                                 block_f=d.blocks.get("block_f"),
-                                 interpret=plan.interpret)
-    from repro.kernels.mbconv.ops import mbconv_apply
-    return mbconv_apply(p, x, stride=stride,
-                        block_f=d.blocks.get("block_f"),
-                        interpret=plan.interpret)
+    program = lower(cfg, batch=batch, image_size=image_size)
+    return plan_program(program, params, fuse_dsconv=fuse_dsconv,
+                        fuse_mbconv=fuse_mbconv, fuse_msa=fuse_msa,
+                        autotune=autotune, interpret=interpret,
+                        precision=precision)
 
 
 # ---------------------------------------------------------------------------
@@ -331,49 +242,70 @@ def _msa_bytes(BH, N, D):
     return unfused, fused
 
 
-def _site_weight_bytes(d: SiteDecision) -> int:
+def _weight_bytes(kind, shape, precision) -> int:
     """HBM weight bytes per launch at the site's precision.
 
     Weights are re-read from HBM every launch, so FIX8 cuts this 4x —
     the dominant term for the late, weight-heavy stages at batch 1
     (exactly the paper's motivation for 8-bit storage)."""
-    per = 1 if d.precision == "int8" else 4
-    if d.kind == "mbconv":
-        _, _, _, C, mid, F, _ = d.shape
+    per = 1 if precision == "int8" else 4
+    if kind == "mbconv":
+        _, _, _, C, mid, F, _ = shape
         n = C * mid + 9 * mid + mid * F
-    elif d.kind == "dsconv":
-        _, _, _, C, _, F, _ = d.shape
+    elif kind == "dsconv":
+        _, _, _, C, _, F, _ = shape
         n = 9 * C + C * F
     else:                                          # msa: qkv + proj
-        _, _, _, n_branches, C = d.shape
+        _, _, _, n_branches, C = shape
         n = 3 * C * C + n_branches * C * C
     return n * per
+
+
+def _site_accounting(kind, shape, precision):
+    """(hbm_unfused, hbm_fused, weight_bytes, (launches_ref, fused))."""
+    if kind == "mbconv":
+        B, H, W, C, mid, F, stride = shape
+        unf, fus = _mbconv_bytes(B, H, W, C, mid, F, stride, precision)
+        launches = (3, 1)
+    elif kind == "dsconv":
+        B, H, W, C, _, F, _ = shape
+        unf, fus = _dsconv_bytes(B, H, W, C, F, precision)
+        launches = (2, 1)
+    elif kind == "msa":
+        BH, N, D, n_branches = shape[:4]
+        unf, fus = _msa_bytes(BH, N, D)
+        launches = (2 * n_branches, 1)             # old per-branch 2-pass
+    else:
+        # registered non-builtin kind: no analytic byte model yet —
+        # count one launch either way, contribute zero bytes rather
+        # than guessing (plan_report totals stay additive)
+        return 0, 0, 0, (1, 1)
+    return unf, fus, _weight_bytes(kind, shape, precision), launches
+
+
+def site_traffic(site, *, precision: str = "fp") -> dict:
+    """Analytic HBM/launch accounting straight from a ``Site`` — the
+    registry-side twin of ``plan_report`` rows, used to assert the two
+    derivations (IR geometry vs frozen decision shapes) cannot drift."""
+    unf, fus, w_bytes, launches = _site_accounting(
+        site.kind, decision_shape(site), precision)
+    return {"site": site.name, "kind": site.kind, "hbm_unfused": unf,
+            "hbm_fused": fus, "hbm_w": w_bytes,
+            "launches_ref": launches[0], "launches_fused": launches[1]}
 
 
 def plan_report(plan: FusionPlan) -> list[dict]:
     """Per-site analytic HBM bytes (unfused vs fused) + launch counts."""
     rows = []
     for d in plan.decisions.values():
-        if d.kind == "mbconv":
-            B, H, W, C, mid, F, stride = d.shape
-            unf, fus = _mbconv_bytes(B, H, W, C, mid, F, stride, d.precision)
-            launches = (3, 1)
-        elif d.kind == "dsconv":
-            B, H, W, C, _, F, _ = d.shape
-            unf, fus = _dsconv_bytes(B, H, W, C, F, d.precision)
-            launches = (2, 1)
-        else:                                      # msa
-            BH, N, D = d.shape[:3]
-            n_branches = d.shape[3]
-            unf, fus = _msa_bytes(BH, N, D)
-            launches = (2 * n_branches, 1)         # old per-branch 2-pass
-        w_bytes = _site_weight_bytes(d)
+        unf, fus, w_bytes, launches = _site_accounting(d.kind, d.shape,
+                                                       d.precision)
         hbm_fused = fus if d.fused else unf
         rows.append({
             "site": d.name, "kind": d.kind, "fused": d.fused,
             "reason": d.reason, "precision": d.precision,
             "hbm_unfused": unf, "hbm_fused": hbm_fused,
-            "saving_x": unf / fus if d.fused else 1.0,
+            "saving_x": unf / fus if d.fused and fus else 1.0,
             "hbm_w": w_bytes,
             "hbm_total": hbm_fused + w_bytes,
             "launches_ref": launches[0],

@@ -1,0 +1,335 @@
+"""Typed program IR: ONE lowering of EfficientViT that everything runs.
+
+The paper's core claim is a *reconfigurable* engine driven by one
+compiled schedule (TMP dataflow, §III/§IV).  CHOSEN (arXiv 2407.12736)
+makes the software version of that point: the win comes from a
+compile-time stack with a single program representation.  This module is
+that representation for the repo:
+
+    ``lower(cfg) -> Program``     architecture walk, done ONCE
+    ``execute(program, params, x, plan=...)``
+                                  the forward — interprets the IR
+    ``manifest(program)``         hardware op records (MACs/shapes) for
+                                  the cycle model + fig6/table2
+
+Before this module the network existed three times — the
+``efficientvit()`` forward, ``build_plan``'s site walk, and
+``layer_manifest`` — each hand-maintained and free to drift.  Now all
+three derive from the same frozen ``Site`` sequence, so the fusion
+plan's site set, the analytic HBM accounting, and the benchmark numbers
+cannot disagree with what actually runs.
+
+Execution routes fusible sites (``dsconv | mbconv | msa``) through the
+pluggable kernel registry (``repro.kernels.registry``) when a
+``FusionPlan`` decision says so; with ``plan=None`` the reference path
+below is byte-identical to the pre-IR forward.  Registering a new
+kernel (see the registry docstring for the worked grouped-int8 example)
+makes it schedulable here with no changes to this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.efficientvit import (
+    B1, EfficientViTConfig, OpRecord, _act, conv_bn_act, dsconv, mbconv)
+from repro.core.relu_attention import MSAConfig, msa
+
+__all__ = ["Site", "Program", "lower", "execute", "manifest",
+           "FUSIBLE_KINDS", "params_at"]
+
+# Structural kinds ``execute`` interprets inline; every OTHER kind is
+# fusible — it plans through the kernel registry, so a newly registered
+# kind (see kernels/registry.py's worked example) is schedulable the
+# moment ``lower`` emits its Site.  FUSIBLE_KINDS lists the built-ins.
+STRUCTURAL_KINDS = ("conv_bn", "gap", "fc")
+FUSIBLE_KINDS = ("dsconv", "mbconv", "msa")
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One schedulable node of the lowered network.
+
+    ``name`` is the dotted site id shared with ``FusionPlan`` decisions
+    (e.g. ``"S3.evit0.msa"``); ``param_path`` indexes the param tree
+    (str = dict key, int = list index); ``attrs`` carries kind-specific
+    geometry (mbconv: ``mid``; msa: ``heads``/``head_dim``/``scales``/
+    ``n_branches``; conv_bn: ``k``).
+    """
+    name: str
+    kind: str                  # conv_bn | dsconv | mbconv | msa | gap | fc
+    stage: str                 # stem | S1..S4 | head
+    param_path: Tuple[Any, ...]
+    in_shape: Tuple[int, ...]  # (B, H, W, C) — (B, C) for fc
+    out_shape: Tuple[int, ...]
+    stride: int = 1
+    residual: bool = False     # out = x + op(x)
+    act: bool = False          # trailing Hardswish (conv_bn / fc sites)
+    attrs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def local_name(self) -> str:
+        """Site name with the stage prefix stripped (manifest naming)."""
+        prefix = f"{self.stage}."
+        return self.name[len(prefix):] if self.name.startswith(prefix) \
+            else self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """Frozen, ordered lowering of one EfficientViT configuration."""
+    cfg: EfficientViTConfig
+    batch: int
+    image_size: int
+    sites: Tuple[Site, ...]
+
+    def site(self, name: str) -> Site:
+        for s in self.sites:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def by_kind(self, *kinds: str) -> Tuple[Site, ...]:
+        return tuple(s for s in self.sites if s.kind in kinds)
+
+    def fusible(self) -> Tuple[Site, ...]:
+        """Sites the kernel registry can route — the fusion-plan keys.
+        Any non-structural kind qualifies, so new registered kinds are
+        planned without touching this module."""
+        return tuple(s for s in self.sites
+                     if s.kind not in STRUCTURAL_KINDS)
+
+
+def params_at(params, path: Tuple[Any, ...]):
+    """Resolve a ``Site.param_path`` against a param tree."""
+    node = params
+    for key in path:
+        node = node[key]
+    return node
+
+
+# ---------------------------------------------------------------------------
+# lower: cfg -> Program (the single architecture walk)
+# ---------------------------------------------------------------------------
+
+_SEQ_FIELDS = ("widths", "depths", "msa_scales", "head_widths")
+
+
+def lower(cfg: EfficientViTConfig = B1, *, batch: int = 1,
+          image_size: int | None = None) -> Program:
+    """Lower a config to the frozen ``Site`` sequence.
+
+    Cached (configs are frozen dataclasses): re-lowering inside a jit
+    trace or a per-request loop is a dict lookup.  List-valued
+    ``Sequence`` fields are normalized to tuples first so such configs
+    stay usable (the cache hashes the config).
+    """
+    repl = {f: tuple(v) for f in _SEQ_FIELDS
+            if not isinstance(v := getattr(cfg, f), tuple)}
+    if repl:
+        cfg = dataclasses.replace(cfg, **repl)
+    return _lower(cfg, batch, image_size)
+
+
+@functools.lru_cache(maxsize=64)
+def _lower(cfg: EfficientViTConfig, batch: int,
+           image_size: int | None) -> Program:
+    w, d = cfg.widths, cfg.depths
+    size = image_size or cfg.image_size
+    B = batch
+    sites: list[Site] = []
+    r = size // 2
+
+    sites.append(Site("stem.conv1", "conv_bn", "stem", ("stem_conv",),
+                      (B, size, size, 3), (B, r, r, w[0]), stride=2,
+                      act=True, attrs={"k": 3}))
+    for i in range(d[0]):
+        sites.append(Site(f"stem.ds{i}", "dsconv", "stem", ("stem_ds", i),
+                          (B, r, r, w[0]), (B, r, r, w[0]), residual=True))
+    for si in (1, 2):
+        c_in = w[si - 1]
+        for bi in range(d[si]):
+            stride = 2 if bi == 0 else 1
+            ro = r // stride
+            sites.append(Site(
+                f"S{si}.mb{bi}", "mbconv", f"S{si}", (f"stage{si}", bi),
+                (B, r, r, c_in), (B, ro, ro, w[si]), stride=stride,
+                residual=bi > 0, attrs={"mid": c_in * cfg.expand_ratio}))
+            r, c_in = ro, w[si]
+    for si in (3, 4):
+        c = w[si]
+        sites.append(Site(
+            f"S{si}.down", "mbconv", f"S{si}", (f"stage{si}", "down"),
+            (B, r, r, w[si - 1]), (B, r // 2, r // 2, c), stride=2,
+            attrs={"mid": w[si - 1] * cfg.expand_ratio}))
+        r //= 2
+        heads = c // cfg.head_dim
+        for bi in range(d[si]):
+            sites.append(Site(
+                f"S{si}.evit{bi}.msa", "msa", f"S{si}",
+                (f"stage{si}", "blocks", bi, "msa"),
+                (B, r, r, c), (B, r, r, c), residual=True,
+                attrs={"heads": heads, "head_dim": cfg.head_dim,
+                       "scales": tuple(cfg.msa_scales),
+                       "n_branches": 1 + len(cfg.msa_scales)}))
+            sites.append(Site(
+                f"S{si}.evit{bi}.mb", "mbconv", f"S{si}",
+                (f"stage{si}", "blocks", bi, "mbconv"),
+                (B, r, r, c), (B, r, r, c), residual=True,
+                attrs={"mid": c * cfg.expand_ratio}))
+    hw1, hw2 = cfg.head_widths
+    sites.append(Site("head.conv", "conv_bn", "head", ("head", "conv"),
+                      (B, r, r, w[4]), (B, r, r, hw1), act=True,
+                      attrs={"k": 1}))
+    sites.append(Site("head.gap", "gap", "head", (),
+                      (B, r, r, hw1), (B, hw1)))
+    sites.append(Site("head.fc1", "fc", "head", ("head", "fc1"),
+                      (B, hw1), (B, hw2), act=True))
+    sites.append(Site("head.fc2", "fc", "head", ("head", "fc2"),
+                      (B, hw2), (B, cfg.num_classes)))
+    return Program(cfg, B, size, tuple(sites))
+
+
+# ---------------------------------------------------------------------------
+# execute: interpret the IR (reference ops + registry dispatch)
+# ---------------------------------------------------------------------------
+
+def _fc(p, h):
+    if "qw" in p:
+        from repro.core.quantization import matmul_int8
+        return matmul_int8(h, p["qw"], p["scale"])
+    return jnp.einsum("bc,cf->bf", h, p["w"].astype(h.dtype))
+
+
+def _dispatch(site: Site, p, y, plan, cfg, attention_fn):
+    """Fusible site: registry kernel when the plan says so, else reference.
+
+    Mirrors the legacy dispatch contract: conv sites fall back when their
+    decision is absent or unfused; MSA sites route through the ``msa``
+    shim so ``plan.default_fuse`` applies to unknown names, an explicitly
+    overridden ``attention_fn`` wins over the plan, and an int8-fused
+    decision keeps its W8A8 projections even under an overridden
+    attention core.  Kinds beyond the built-ins resolve through the
+    registry: ``apply`` when fused, the impl's ``ref`` otherwise.
+    """
+    if site.kind == "msa":
+        mcfg = MSAConfig(site.in_shape[-1], site.attrs["head_dim"],
+                         site.attrs["scales"], cfg.dtype)
+        kw = {} if attention_fn is None else {"attention_fn": attention_fn}
+        return msa(p, y, mcfg, plan=plan, site=site.name, **kw)
+    d = plan.get(site.name) if plan is not None else None
+    if d is not None and d.fused:
+        from repro.kernels.registry import get_kernel
+        impl = get_kernel(site.kind, d.precision)
+        return impl.apply(p, y, site, d, interpret=plan.interpret)
+    if site.kind == "dsconv":
+        return dsconv(p, y, stride=site.stride)
+    if site.kind == "mbconv":
+        return mbconv(p, y, stride=site.stride)
+    from repro.kernels.registry import get_probe
+    return get_probe(site.kind).ref(p, y, site)
+
+
+def execute(program: Program, params, x, *, plan=None, attention_fn=None):
+    """Run the lowered program.  x: (B, H, W, 3) -> (B, num_classes).
+
+    ``plan`` is an optional ``core.fusion.FusionPlan`` (built by
+    ``core.fusion.plan_program`` over the same ``Program``) routing
+    fusible sites through the registry's Pallas megakernels at the
+    precision each decision carries.  ``plan=None`` runs the reference
+    ops — byte-identical to the pre-IR ``efficientvit()`` forward.
+    """
+    cfg = program.cfg
+    y = x
+    for site in program.sites:
+        p = params_at(params, site.param_path) if site.param_path else None
+        if site.kind == "conv_bn":
+            y = conv_bn_act(p, y, stride=site.stride, act=site.act)
+        elif site.kind == "gap":
+            y = jnp.mean(y, axis=(1, 2))
+        elif site.kind == "fc":
+            y = _fc(p, y)
+            if site.act:
+                y = _act(y)
+        else:
+            out = _dispatch(site, p, y, plan, cfg, attention_fn)
+            y = y + out if site.residual else out
+    return y
+
+
+# ---------------------------------------------------------------------------
+# manifest: IR -> hardware op records (cycle model / fig6 / table2)
+# ---------------------------------------------------------------------------
+
+def _mbconv_records(site: Site) -> list[OpRecord]:
+    _, H, _, C = site.in_shape
+    _, Ho, _, F = site.out_shape
+    mid = site.attrs["mid"]
+    n = site.local_name
+    return [
+        OpRecord(site.stage, f"{n}.pw1", "pw", H, H, C, mid),
+        OpRecord(site.stage, f"{n}.dw", "dw", Ho, Ho, mid, mid, 3,
+                 fused_with_prev=False),
+        OpRecord(site.stage, f"{n}.pw2", "pw", Ho, Ho, mid, F,
+                 fused_with_prev=True),
+    ]
+
+
+def _msa_records(site: Site) -> list[OpRecord]:
+    _, r, _, c = site.in_shape
+    heads, head_dim = site.attrs["heads"], site.attrs["head_dim"]
+    scales = site.attrs["scales"]
+    total = heads * head_dim
+    n_tok = r * r
+    n_scales = 1 + len(scales)
+    pre = site.local_name[:-len(".msa")]         # "evit{bi}"
+    ops = [OpRecord(site.stage, f"{pre}.qkv", "pw", r, r, c, 3 * total)]
+    for s in scales:
+        ops.append(OpRecord(site.stage, f"{pre}.agg{s}.dw", "dw", r, r,
+                            3 * total, 3 * total, s))
+        # grouped 1x1: reduction = channels per group
+        ops.append(OpRecord(site.stage, f"{pre}.agg{s}.pw", "group_pw",
+                            r, r, head_dim, 3 * total, fused_with_prev=True))
+    # ReLU(K)^T V : per head d x d state over n_tok tokens
+    ops.append(OpRecord(site.stage, f"{pre}.ktv", "matmul",
+                        n_scales * heads * head_dim, 1, n_tok, head_dim))
+    # ReLU(Q) @ [KtV | ksum]: fused with previous on MAT engine
+    ops.append(OpRecord(site.stage, f"{pre}.qz", "matmul",
+                        n_scales * heads * n_tok, 1, head_dim,
+                        head_dim + 1, fused_with_prev=True))
+    ops.append(OpRecord(site.stage, f"{pre}.proj", "pw", r, r,
+                        n_scales * total, c))
+    return ops
+
+
+def manifest(program: Program) -> list[OpRecord]:
+    """Expand the IR into per-hardware-op records (one inference; the
+    batch dim is excluded, matching the legacy ``layer_manifest``)."""
+    ops: list[OpRecord] = []
+    for site in program.sites:
+        if site.kind == "conv_bn":
+            _, _, _, C = site.in_shape
+            _, r, _, F = site.out_shape
+            k = site.attrs.get("k", 1)
+            kind = "conv" if k > 1 else "pw"
+            ops.append(OpRecord(site.stage, site.local_name, kind, r, r, C,
+                                F, k))
+        elif site.kind == "dsconv":
+            _, r, _, C = site.in_shape
+            F = site.out_shape[-1]
+            n = site.local_name
+            ops.append(OpRecord(site.stage, f"{n}.dw", "dw", r, r, C, C, 3))
+            ops.append(OpRecord(site.stage, f"{n}.pw", "pw", r, r, C, F,
+                                fused_with_prev=True))
+        elif site.kind == "mbconv":
+            ops.extend(_mbconv_records(site))
+        elif site.kind == "msa":
+            ops.extend(_msa_records(site))
+        elif site.kind == "fc":
+            ops.append(OpRecord(site.stage, site.local_name, "matmul", 1, 1,
+                                site.in_shape[-1], site.out_shape[-1]))
+        # gap: no MACs, no record (legacy manifest had none either)
+    return ops

@@ -97,24 +97,41 @@ def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention,
     """x: (B, H, W, C) -> (B, H, W, C).
 
     ``plan=None`` (default) is the reference path: a Python loop over the
-    ``1 + len(scales)`` branches, each through ``attention_fn``.  With a
-    ``core.fusion.FusionPlan`` (``site`` names this module's entry, e.g.
-    "S3.evit0.msa"; omit it for a standalone module), all branches and
-    heads fold into one grid axis of the single-pass Pallas kernel — the
-    whole module issues ONE attention launch (§III-D intra-layer fusion).
-    An explicitly overridden ``attention_fn`` always wins over the plan:
-    the fused route only replaces the default reference core.
+    ``1 + len(scales)`` branches, each through ``attention_fn``.
 
-    When the plan's site decision carries ``precision == "int8"`` (a
-    ``quantize_efficientvit`` tree under an auto/int8 plan), the QKV and
-    output projections run through the Pallas W8A8 GEMM
-    (``kernels.int8_matmul``) with per-output-channel weight scales in
-    the dequant epilogue, instead of the reference ``lax.conv`` path.
+    ``plan``/``site`` are back-compat shim kwargs: they delegate to the
+    kernel registry's fused MSA module (``kernels.relu_attn.ops.
+    msa_fused_apply`` — all branches and heads folded into ONE attention
+    launch, §III-D intra-layer fusion; the int8 registration additionally
+    routes the QKV/output projections through the Pallas W8A8 GEMM).
+    ``site`` names this module's plan entry, e.g. "S3.evit0.msa"; omit it
+    for a standalone module (``plan.default_fuse`` applies).  An
+    explicitly overridden ``attention_fn`` always wins over the plan:
+    the fused route only replaces the default reference core.  Program
+    execution (``core.program.execute``) dispatches through the registry
+    directly and never passes these kwargs.
     """
-    B, H, W, C = x.shape
     d = plan.get(site) if (plan is not None and site is not None) else None
+    if plan is not None and attention_fn is relu_global_attention:
+        if d.fused if d is not None else plan.default_fuse:
+            from repro.core.program import Site
+            from repro.kernels.registry import get_kernel
+            prec = d.precision if d is not None else "fp"
+            impl = get_kernel("msa", prec)
+            shim_site = Site(
+                name=site or "msa", kind="msa", stage="", param_path=(),
+                in_shape=x.shape, out_shape=x.shape,
+                attrs={"heads": cfg.n_heads, "head_dim": cfg.head_dim,
+                       "scales": tuple(cfg.scales),
+                       "n_branches": 1 + len(cfg.scales)})
+            return impl.apply(params, x, shim_site, d,
+                              interpret=plan.interpret)
+
+    # reference attention core — but an int8-fused decision keeps its
+    # W8A8 projections even when attention_fn overrides the fused core
     int8_proj = (d is not None and d.fused and d.precision == "int8"
                  and "qconv" in params["qkv"] and "qconv" in params["proj"])
+    B, H, W, C = x.shape
     if int8_proj:
         from repro.kernels.int8_matmul.ops import conv1x1_w8a8
         qkv = conv1x1_w8a8(params["qkv"]["qconv"], x,
@@ -126,29 +143,13 @@ def msa(params, x, cfg: MSAConfig, *, attention_fn=relu_global_attention,
         agg = _conv_any(params["aggreg"][i]["dw"], qkv, groups=qkv.shape[-1])
         agg = _conv_any(params["aggreg"][i]["pw"], agg, groups=3 * cfg.n_heads)
         multi.append(agg)
-
-    if (plan is not None and attention_fn is relu_global_attention
-            and (site is None or plan.is_fused(site))):
-        from repro.kernels.relu_attn.ops import msa_batched_attention
-        blocks = plan.blocks(site) if site is not None else {}
-        stack = jnp.stack(multi)                      # (S,B,H,W,3*total)
-        S = stack.shape[0]
-        o = msa_batched_attention(
-            stack.reshape(S, B, H * W, 3 * cfg.total_dim),
-            cfg.n_heads, cfg.head_dim,
-            block_n=blocks.get("block_n", 256),
-            interpret=plan.interpret)                 # one launch
-        o = o.reshape(S, B, H, W, cfg.total_dim)
-        out = jnp.moveaxis(o, 0, -2).reshape(B, H, W, S * cfg.total_dim)
-        out = out.astype(x.dtype)
-    else:
-        outs = []
-        for branch in multi:
-            t = branch.reshape(B, H * W, 3, cfg.n_heads, cfg.head_dim)
-            q, k, v = t[:, :, 0], t[:, :, 1], t[:, :, 2]
-            o = attention_fn(q, k, v)
-            outs.append(o.reshape(B, H, W, cfg.total_dim))
-        out = jnp.concatenate(outs, axis=-1)
+    outs = []
+    for branch in multi:
+        t = branch.reshape(B, H * W, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = t[:, :, 0], t[:, :, 1], t[:, :, 2]
+        o = attention_fn(q, k, v)
+        outs.append(o.reshape(B, H, W, cfg.total_dim))
+    out = jnp.concatenate(outs, axis=-1)
     if int8_proj:
         return conv1x1_w8a8(params["proj"]["qconv"], out,
                             interpret=plan.interpret)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core.quantization import fold_bn_into_conv
 from repro.kernels.dsconv.kernel import dsconv_fused, dsconv_fused_int8
 from repro.kernels.dsconv.ref import dsconv_int8_ref, dsconv_ref
+from repro.kernels.registry import KernelBase, register
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -97,3 +98,44 @@ def dsconv_apply_int8(params, x, *, stride: int = 1, block_f: int = 128,
                          pw_q, qp["scale"], qp["bias"], stride=stride,
                          act=True, block_f=block_f, interpret=interpret)
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry impls (consumed by core.fusion.plan_program / core.program)
+# ---------------------------------------------------------------------------
+
+@register
+class DsconvKernel(KernelBase):
+    """(dsconv, fp): the DW+PW megakernel behind ``dsconv_apply``."""
+    kind, precision, dtype = "dsconv", "fp", "f32"
+    vmem_budget = VMEM_BUDGET_BYTES
+
+    def vmem_bytes(self, site, dtype=None):
+        _, H, W, C = site.in_shape
+        return dsconv_vmem_bytes(H, W, C, site.stride,
+                                 dtype=dtype or self.dtype)
+
+    def tune(self, site, *, autotune=True, interpret=None):
+        return {"block_f": 128}
+
+    def apply(self, params, x, site, decision=None, *, interpret=None):
+        blocks = decision.blocks if decision is not None else {}
+        return dsconv_apply(params, x, stride=site.stride,
+                            block_f=blocks.get("block_f", 128),
+                            interpret=interpret)
+
+    def ref(self, params, x, site, **kw):
+        from repro.core.efficientvit import dsconv
+        return dsconv(params, x, stride=site.stride)
+
+
+@register
+class DsconvInt8Kernel(DsconvKernel):
+    """(dsconv, int8): FIX8 twin with in-kernel requantization."""
+    precision, dtype = "int8", "i8"
+
+    def apply(self, params, x, site, decision=None, *, interpret=None):
+        blocks = decision.blocks if decision is not None else {}
+        return dsconv_apply_int8(params, x, stride=site.stride,
+                                 block_f=blocks.get("block_f", 128),
+                                 interpret=interpret)

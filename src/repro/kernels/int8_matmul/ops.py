@@ -19,6 +19,8 @@ import jax.numpy as jnp
 
 from repro.core.quantization import quantize_tensor, quantize_with_scale
 from repro.kernels.int8_matmul.kernel import int8_matmul
+from repro.kernels.registry import register
+from repro.kernels.relu_attn.ops import MsaKernel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -56,3 +58,17 @@ def conv1x1_w8a8(qp, x, *, x_scale=None, interpret: bool | None = None):
                       interpret=interpret)
     out = out + qp["bias"][None, :]
     return out.reshape(B, H, W, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry impl: the FIX8 MSA module
+# ---------------------------------------------------------------------------
+
+@register
+class MsaInt8Kernel(MsaKernel):
+    """(msa, int8): the fp fused module with QKV/output projections
+    routed through the Pallas W8A8 GEMM above (per-output-channel weight
+    scales in the dequant epilogue) — exactly the FIX8 route the fusion
+    plan assigns to ``quantize_efficientvit`` trees."""
+    precision, dtype = "int8", "i8"
+    int8_proj = True

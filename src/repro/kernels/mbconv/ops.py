@@ -23,6 +23,7 @@ from repro.kernels.autotune import autotune
 from repro.kernels.compat import default_interpret
 from repro.kernels.mbconv.kernel import mbconv_fused, mbconv_fused_int8
 from repro.kernels.mbconv.ref import mbconv_int8_ref, mbconv_ref
+from repro.kernels.registry import KernelBase, register
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -158,3 +159,48 @@ def mbconv_apply_int8(params, x, *, stride: int = 1,
                          q2["bias"], stride=stride, block_f=block_f,
                          interpret=interpret)
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry impls (consumed by core.fusion.plan_program / core.program)
+# ---------------------------------------------------------------------------
+
+@register
+class MbconvKernel(KernelBase):
+    """(mbconv, fp): the PW+DW+PW megakernel behind ``mbconv_apply``."""
+    kind, precision, dtype = "mbconv", "fp", "f32"
+    vmem_budget = VMEM_BUDGET_BYTES
+
+    def vmem_bytes(self, site, dtype=None):
+        _, H, W, C = site.in_shape
+        return mbconv_vmem_bytes(H, W, C, site.attrs["mid"], site.stride,
+                                 dtype=dtype or self.dtype)
+
+    def tune(self, site, *, autotune=True, interpret=None):
+        bf = tune_block_f(site.in_shape, site.attrs["mid"],
+                          site.out_shape[-1], stride=site.stride,
+                          allow_sweep=autotune, interpret=interpret,
+                          dtype=self.dtype)
+        return {"block_f": bf}
+
+    def apply(self, params, x, site, decision=None, *, interpret=None):
+        blocks = decision.blocks if decision is not None else {}
+        return mbconv_apply(params, x, stride=site.stride,
+                            block_f=blocks.get("block_f"),
+                            interpret=interpret)
+
+    def ref(self, params, x, site, **kw):
+        from repro.core.efficientvit import mbconv
+        return mbconv(params, x, stride=site.stride)
+
+
+@register
+class MbconvInt8Kernel(MbconvKernel):
+    """(mbconv, int8): FIX8 twin — int8 scratches, in-kernel requant."""
+    precision, dtype = "int8", "i8"
+
+    def apply(self, params, x, site, decision=None, *, interpret=None):
+        blocks = decision.blocks if decision is not None else {}
+        return mbconv_apply_int8(params, x, stride=site.stride,
+                                 block_f=blocks.get("block_f"),
+                                 interpret=interpret)

@@ -1,0 +1,243 @@
+"""Pluggable kernel registry: one uniform interface per fused kernel.
+
+ME-ViT (arXiv 2402.09709) argues the hardware version of this point — a
+uniform processing-element interface is what lets new op types slot into
+the pipeline without restructuring it.  This is the software analogue:
+every fused execution path registers a ``KernelImpl`` under a
+``(kind, precision)`` key, and both the planner
+(``core.fusion.plan_program``) and the executor
+(``core.program.execute``) consult the registry instead of hand-threaded
+``dispatch_*`` functions and per-kind if/elif precision branches.
+
+Built-in registrations (loaded lazily from the kernel packages):
+
+    ("dsconv", "fp")   kernels/dsconv/ops.py     DW+PW megakernel
+    ("dsconv", "int8") kernels/dsconv/ops.py     FIX8, in-kernel requant
+    ("mbconv", "fp")   kernels/mbconv/ops.py     PW+DW+PW megakernel
+    ("mbconv", "int8") kernels/mbconv/ops.py     FIX8, in-kernel requant
+    ("msa",    "fp")   kernels/relu_attn/ops.py  single-launch MSA module
+    ("msa",    "int8") kernels/int8_matmul/ops.py  + W8A8 projections
+
+## Registering a new kernel (worked example)
+
+The ROADMAP calls for a grouped int8 kernel folding the MSA multi-scale
+aggregation convs (depthwise s x s + grouped 1x1) into the fused launch.
+With the registry that is additive:
+
+1. write the Pallas kernel + wrapper, e.g.
+   ``kernels/group_conv/ops.py`` with ``group_agg_apply_int8(params, x,
+   site, decision)``;
+2. register it there (an int8-only kind is fine — ``get_probe`` falls
+   back to whatever precision the kind ships)::
+
+       @register
+       class GroupAggInt8Kernel(KernelBase):
+           kind, precision, dtype = "group_agg", "int8", "i8"
+           def site_precision(self, params): ...
+           def vmem_bytes(self, site, dtype=None): ...
+           def tune(self, site, *, autotune=True, interpret=None): ...
+           def apply(self, params, x, site, decision=None, *,
+                     interpret=None): ...
+           def ref(self, params, x, site, **kw): ...   # fallback path
+
+3. emit a ``Site(kind="group_agg", ...)`` for the aggregation stage in
+   ``core.program.lower`` (or fold it into the msa site's apply) and add
+   the module to ``_BUILTIN_MODULES`` below.
+
+No changes to ``build_plan``, ``execute``, the benchmarks or the cycle
+model: any non-structural ``Site`` kind is fusible, the planner's
+generic loop resolves the impl by key (unknown kinds default to
+enabled), ``execute`` runs ``apply`` when the decision fuses and the
+impl's ``ref`` otherwise, and the drift-gate tests pin the launch-count
+consequences explicitly.  ``tests/test_program.py::
+test_registry_new_kernel_plans_and_executes`` exercises this flow
+end-to-end with a dummy kind.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, Tuple
+
+__all__ = ["KernelImpl", "KernelBase", "register", "get_kernel",
+           "get_probe", "registered_kinds", "available", "unregister",
+           "conv_block_precision", "resolve_conv_precision"]
+
+VMEM_UNLIMITED = float("inf")
+
+
+class KernelImpl(Protocol):
+    """The uniform kernel interface the planner and executor consume.
+
+    ``kind``/``precision`` key the registry; ``dtype`` is the analytic
+    dtype tag ("f32" | "i8") used for VMEM sizing and autotune cache
+    keys; ``vmem_budget`` is the per-launch budget ``vmem_bytes`` is
+    checked against (``VMEM_UNLIMITED`` for streamed kernels).
+    """
+    kind: str
+    precision: str
+    dtype: str
+    vmem_budget: float
+
+    def site_precision(self, params) -> str:
+        """Precision the site's param subtree carries: fp | int8 | mixed."""
+        ...
+
+    def resolve_precision(self, site_precision: str, requested: str
+                          ) -> Tuple[str, Optional[str]]:
+        """(site precision, requested) -> (run precision, fallback reason
+        or None to proceed)."""
+        ...
+
+    def vmem_bytes(self, site, dtype: str | None = None) -> float:
+        """Analytic per-grid-step VMEM for the site's shape."""
+        ...
+
+    def tune(self, site, *, autotune: bool = True,
+             interpret: bool | None = None) -> Dict[str, int]:
+        """Block-size choices (autotuned when ``autotune``, else cached/
+        heuristic) to freeze into the site's decision."""
+        ...
+
+    def apply(self, params, x, site, decision=None, *,
+              interpret: bool | None = None):
+        """Run the fused kernel on one site.  ``decision`` (a
+        ``core.fusion.SiteDecision``) supplies block sizes; ``None``
+        means defaults."""
+        ...
+
+    def ref(self, params, x, site, **kw):
+        """The site's reference-path computation (parity oracle)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# shared precision-resolution policies
+# ---------------------------------------------------------------------------
+
+def conv_block_precision(block) -> str:
+    """Precision of a conv+BN (or qconv) block tree: every subblock
+    quantized -> int8, none -> fp, anything else -> mixed."""
+    kinds = {"int8" if (isinstance(v, dict) and "qconv" in v) else "fp"
+             for v in block.values() if isinstance(v, dict)}
+    if kinds == {"int8"}:
+        return "int8"
+    if kinds == {"fp"}:
+        return "fp"
+    return "mixed"
+
+
+def resolve_conv_precision(site_prec: str, requested: str
+                           ) -> Tuple[str, Optional[str]]:
+    """Conv-kind policy: the megakernels consume one weight dtype, so a
+    forced mismatch (or a part-quantized tree) demotes to reference."""
+    if site_prec == "mixed":
+        return "fp", "mixed"
+    if requested in ("auto", site_prec):
+        return site_prec, None
+    return "fp", "quantized" if site_prec == "int8" else "not-quantized"
+
+
+class KernelBase:
+    """Default ``KernelImpl`` behavior: conv-style precision policy, no
+    VMEM constraint, no tunable blocks.  Impls override what differs."""
+    kind = ""
+    precision = "fp"
+    dtype = "f32"
+    vmem_budget = VMEM_UNLIMITED
+
+    def site_precision(self, params) -> str:
+        return conv_block_precision(params)
+
+    def resolve_precision(self, site_prec, requested):
+        return resolve_conv_precision(site_prec, requested)
+
+    def vmem_bytes(self, site, dtype=None) -> float:
+        return 0.0
+
+    def tune(self, site, *, autotune=True, interpret=None):
+        return {}
+
+    def apply(self, params, x, site, decision=None, *, interpret=None):
+        raise NotImplementedError(type(self).__name__)
+
+    def ref(self, params, x, site, **kw):
+        raise NotImplementedError(type(self).__name__)
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[Tuple[str, str], Any] = {}
+_BUILTIN_MODULES = (
+    "repro.kernels.dsconv.ops",
+    "repro.kernels.mbconv.ops",
+    "repro.kernels.relu_attn.ops",
+    "repro.kernels.int8_matmul.ops",
+)
+_builtins_loaded = False
+
+
+def register(cls):
+    """Class decorator: instantiate and register under
+    ``(cls.kind, cls.precision)``.  Last registration wins, so a user
+    kernel can shadow a built-in."""
+    impl = cls()
+    assert impl.kind and impl.precision, cls
+    _REGISTRY[(impl.kind, impl.precision)] = impl
+    return cls
+
+
+def unregister(kind: str, precision: str) -> None:
+    _REGISTRY.pop((kind, precision), None)
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    import importlib
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    # flag only after every import succeeded, so a transient failure
+    # surfaces as the real ImportError on retry, not a misleading
+    # "no kernel registered" KeyError forever after
+    _builtins_loaded = True
+
+
+def get_kernel(kind: str, precision: str = "fp"):
+    """Look up the ``KernelImpl`` for a (kind, precision) pair."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[(kind, precision)]
+    except KeyError:
+        raise KeyError(
+            f"no kernel registered for {(kind, precision)!r}; "
+            f"available: {sorted(_REGISTRY)}") from None
+
+
+def get_probe(kind: str):
+    """The impl that answers kind-level questions (``site_precision``,
+    ``resolve_precision``, reference path) — the "fp" registration when
+    present, else any registration of that kind, so a kind that only
+    ships one precision (e.g. an int8-only grouped conv) still plans."""
+    _ensure_builtins()
+    impl = _REGISTRY.get((kind, "fp"))
+    if impl is not None:
+        return impl
+    for (k, _), candidate in sorted(_REGISTRY.items()):
+        if k == kind:
+            return candidate
+    raise KeyError(f"no kernel registered for kind {kind!r}; "
+                   f"available: {sorted(_REGISTRY)}")
+
+
+def registered_kinds() -> set:
+    """Every kind with at least one registration."""
+    _ensure_builtins()
+    return {k for k, _ in _REGISTRY}
+
+
+def available() -> list[Tuple[str, str]]:
+    """Sorted (kind, precision) keys of every registered kernel."""
+    _ensure_builtins()
+    return sorted(_REGISTRY)

@@ -18,10 +18,12 @@ import jax.numpy as jnp
 
 from repro.kernels.autotune import autotune
 from repro.kernels.compat import default_interpret
+from repro.kernels.registry import KernelBase, register
 from repro.kernels.relu_attn.kernel import relu_attn_causal, relu_attn_noncausal
 
 BLOCK_N_CANDIDATES = ({"block_n": 256}, {"block_n": 128}, {"block_n": 64},
                       {"block_n": 512})
+MSA_DEFAULT_BLOCK_N = 256   # token tile when no plan/autotune choice exists
 
 
 def _fold_heads(x):
@@ -94,3 +96,96 @@ def msa_batched_attention(qkv, n_heads: int, head_dim: int, *,
     out = relu_linear_attention(q, k, v, causal=False, block_n=block_n,
                                 interpret=interpret)
     return out.reshape(S, B, N, n_heads * head_dim)
+
+
+# ---------------------------------------------------------------------------
+# fused MSA module (registry impl for core.program / core.fusion)
+# ---------------------------------------------------------------------------
+
+def msa_fused_apply(params, x, n_heads: int, head_dim: int, *,
+                    block_n: int = MSA_DEFAULT_BLOCK_N,
+                    interpret: bool | None = None,
+                    int8_proj: bool = False):
+    """One EfficientViT MSA module, attention core fused to ONE launch.
+
+    params: the module's {'qkv','aggreg','proj','proj_bn'} tree (fp32 or
+    ``quantize_efficientvit`` qconv subtrees).  ``int8_proj`` routes the
+    QKV/output projections through the Pallas W8A8 GEMM — only honored
+    when both projections are actually quantized, so a mixed tree keeps
+    its projections on the reference conv path.
+    """
+    from repro.core.relu_attention import _conv_any
+    from repro.layers.conv import pwconv
+    from repro.layers.norms import batchnorm
+
+    B, H, W, _ = x.shape
+    int8 = (int8_proj and "qconv" in params["qkv"]
+            and "qconv" in params["proj"])
+    if int8:
+        from repro.kernels.int8_matmul.ops import conv1x1_w8a8
+        qkv = conv1x1_w8a8(params["qkv"]["qconv"], x, interpret=interpret)
+    else:
+        qkv = _conv_any(params["qkv"], x)             # (B,H,W,3*total)
+    multi = [qkv]
+    for agg in params["aggreg"]:
+        a = _conv_any(agg["dw"], qkv, groups=qkv.shape[-1])
+        multi.append(_conv_any(agg["pw"], a, groups=3 * n_heads))
+    stack = jnp.stack(multi)                          # (S,B,H,W,3*total)
+    S = stack.shape[0]
+    total = n_heads * head_dim
+    o = msa_batched_attention(
+        stack.reshape(S, B, H * W, 3 * total), n_heads, head_dim,
+        block_n=block_n, interpret=interpret)         # one launch
+    out = jnp.moveaxis(o.reshape(S, B, H, W, total), 0, -2)
+    out = out.reshape(B, H, W, S * total).astype(x.dtype)
+    if int8:
+        return conv1x1_w8a8(params["proj"]["qconv"], out,
+                            interpret=interpret)
+    if "qconv" in params["proj"]:
+        return _conv_any(params["proj"], out)  # BN folded by quantization
+    return batchnorm(params["proj_bn"], pwconv(params["proj"], out))
+
+
+@register
+class MsaKernel(KernelBase):
+    """(msa, fp): whole-module fusion — all branches and heads fold into
+    one attention launch; projections stay on the reference conv path."""
+    kind, precision, dtype = "msa", "fp", "f32"
+    int8_proj = False
+
+    def site_precision(self, params):
+        # Both projections must be quantized for the W8A8 route; the
+        # attention core itself is precision-agnostic (fp accumulation).
+        return ("int8" if "qconv" in params["qkv"]
+                and "qconv" in params["proj"] else "fp")
+
+    def resolve_precision(self, site_prec, requested):
+        # Never a fallback: a precision mismatch just keeps the
+        # projections on the reference path (precision "fp") while the
+        # attention core fuses either way.
+        if requested in ("auto", site_prec):
+            return site_prec, None
+        return "fp", None
+
+    def tune(self, site, *, autotune=True, interpret=None):
+        B, H, W, _ = site.in_shape
+        bh = site.attrs["n_branches"] * B * site.attrs["heads"]
+        bn = tune_block_n(bh, H * W, site.attrs["head_dim"],
+                          allow_sweep=autotune, interpret=interpret)
+        return {"block_n": bn}
+
+    def apply(self, params, x, site, decision=None, *, interpret=None):
+        blocks = decision.blocks if decision is not None else {}
+        return msa_fused_apply(params, x, site.attrs["heads"],
+                               site.attrs["head_dim"],
+                               block_n=blocks.get("block_n",
+                                                  MSA_DEFAULT_BLOCK_N),
+                               interpret=interpret,
+                               int8_proj=self.int8_proj)
+
+    def ref(self, params, x, site, *, attention_fn=None, **kw):
+        from repro.core.relu_attention import MSAConfig, msa
+        mcfg = MSAConfig(x.shape[-1], site.attrs["head_dim"],
+                         site.attrs["scales"])
+        akw = {} if attention_fn is None else {"attention_fn": attention_fn}
+        return msa(params, x, mcfg, **akw)

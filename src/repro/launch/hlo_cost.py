@@ -394,8 +394,14 @@ def cost_of(comp_name: str, comps: dict, memo: dict) -> HloCost:
                 total.collective_bytes += inner.collective_bytes
                 for k, v in inner.coll_by_kind.items():
                     total.coll_by_kind[k] = total.coll_by_kind.get(k, 0) + v
-                if op == "fusion" and _is_light_fusion(inner_comp):
-                    continue   # pure-elementwise: fuses into neighbours
+                if op in ("fusion", "call") and _is_light_fusion(inner_comp):
+                    # pure-elementwise: fuses into neighbours.  Covers
+                    # CPU XLA's parallel kLoop `call`s too — e.g. the
+                    # broadcast initializing a scan's ys buffer, which
+                    # the loop's dynamic-update-slices fully overwrite;
+                    # charging it was what pushed loop-body DUS traffic
+                    # back up to full-buffer size.
+                    continue
                 # in-place DUS / sliced-param aliasing corrections
                 sub, add = _fusion_alias_correction(inner_comp)
                 boundary = max(0, boundary - sub) + add

@@ -1,11 +1,12 @@
 """Vision serving: batched EfficientViT classification over the fused path.
 
 The LM side serves through ``serving.engine``; this is the ViT
-counterpart.  At construction the engine builds a ``core.fusion``
-FusionPlan for its fixed microbatch shape (autotune sweeps run here, once,
-outside the request loop) and jits one fused forward.  Requests are
-padded up to the microbatch size so every call hits the same compiled
-executable and the same autotuned block choices.
+counterpart.  At construction the engine lowers the config ONCE to a
+``core.program.Program`` for its fixed microbatch shape, plans it
+(``core.fusion.plan_program`` — autotune sweeps run here, once, outside
+the request loop) and jits one ``execute`` of that program.  Requests
+are padded up to the microbatch size so every call hits the same
+compiled executable and the same autotuned block choices.
 """
 from __future__ import annotations
 
@@ -15,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.efficientvit import EfficientViTConfig, efficientvit
-from repro.core.fusion import build_plan
+from repro.core.efficientvit import EfficientViTConfig
+from repro.core.fusion import plan_program
+from repro.core.program import execute, lower
 
 __all__ = ["VisionServeConfig", "VisionEngine"]
 
@@ -37,12 +39,13 @@ class VisionEngine:
         self.params = params
         self.cfg = cfg
         self.serve_cfg = serve_cfg
-        self.plan = (build_plan(params, cfg, batch=serve_cfg.microbatch,
-                                autotune=serve_cfg.autotune,
-                                precision=serve_cfg.precision)
+        self.program = lower(cfg, batch=serve_cfg.microbatch)
+        self.plan = (plan_program(self.program, params,
+                                  autotune=serve_cfg.autotune,
+                                  precision=serve_cfg.precision)
                      if serve_cfg.use_plan else None)
         self._fwd = jax.jit(
-            lambda p, x: efficientvit(p, x, cfg, plan=self.plan))
+            lambda p, x: execute(self.program, p, x, plan=self.plan))
 
     @classmethod
     def quantized(cls, params, cfg: EfficientViTConfig,

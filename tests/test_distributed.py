@@ -141,7 +141,7 @@ def test_elastic_reshard_and_ckpt_cross_mesh(tmp_path):
 def test_compressed_psum_matches_exact():
     r = run_sub("""
         from functools import partial
-        from jax import shard_map
+        from repro.common.compat import shard_map
         from repro.optim.compression import compressed_psum
 
         mesh = jax.make_mesh((8,), ("pod",))
