@@ -1,0 +1,216 @@
+"""Mixed-trace serving benchmark: fixed-microbatch padding vs
+shape-bucketed continuous micro-batching, fp32 and FIX8 int8.
+
+A synthetic request trace (Poisson-ish arrivals, mixed resolutions) is
+replayed twice per precision through the serving runtime
+(``serving.executors`` + ``serving.scheduler``):
+
+  * ``fixed``    — the legacy ``VisionEngine`` behavior: every dispatch
+    is the full microbatch, ragged groups padded up to it;
+  * ``bucketed`` — batch formation groups same-resolution requests into
+    the largest ready bucket and flushes due tails to the smallest
+    bucket that fits, so pad waste only ever appears inside the
+    smallest covering bucket.
+
+Replay runs on a manual clock (deterministic queue/deadline behavior);
+wall clock is measured around the dispatch+finalize work for a
+throughput figure (CPU interpret mode: a consistency check, not a TPU
+number — occupancy and pad waste are the backend-independent story).
+
+Asserts (CI smoke gate, ``--smoke``):
+  * bucketed pads strictly fewer samples and reaches strictly higher
+    batch occupancy than fixed, at BOTH precisions;
+  * fp logits agree between the two policies (1e-3) and with the
+    unbatched reference forward;
+  * executor-cache key-set drift gate: the bucketed smoke replay
+    compiles exactly ``EXPECTED_SMOKE_KEYS`` — a scheduler or bucket-
+    policy change that alters the compiled working set must update the
+    expectation here explicitly.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.efficientvit import B1_SMOKE, init_efficientvit
+from repro.core.program import execute, lower
+from repro.core.quantization import quantize_efficientvit
+from repro.serving.executors import ExecutorCache
+from repro.serving.scheduler import (
+    BucketedPolicy, FixedMicrobatchPolicy, ManualClock, MicroBatchScheduler,
+    Request)
+from repro.serving.telemetry import Telemetry
+
+# Drift gate: the (batch bucket, resolution) executors the bucketed
+# smoke replay actually dispatches to.  12 requests over {32, 64}px with
+# buckets (1, 2, 4): full 4-buckets for the steady groups, a 1-bucket
+# only for the drained tail.  If batch formation changes, this set
+# moves — update it HERE, deliberately, alongside the scheduler change.
+EXPECTED_SMOKE_KEYS = {(4, 32), (4, 64), (1, 64)}
+
+SMOKE = dict(n_requests=12, resolutions=(32, 64), res_weights=(0.5, 0.5),
+             buckets=(1, 2, 4), microbatch=4, mean_gap_ms=2.0,
+             deadline_ms=40.0)
+FULL = dict(n_requests=32, resolutions=(32, 64, 96),
+            res_weights=(0.3, 0.5, 0.2), buckets=(1, 2, 4, 8),
+            microbatch=8, mean_gap_ms=2.0, deadline_ms=40.0)
+
+
+def make_trace(spec: dict, seed: int = 0):
+    """[(arrival_s, resolution)] — exponential gaps, weighted sizes."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    trace = []
+    for _ in range(spec["n_requests"]):
+        t += rng.exponential(spec["mean_gap_ms"] / 1e3)
+        res = int(rng.choice(spec["resolutions"], p=spec["res_weights"]))
+        trace.append((t, res))
+    return trace
+
+
+def make_images(trace, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((res, res, 3)).astype(np.float32)
+            for _, res in trace]
+
+
+def replay(params, spec, trace, images, *, policy_name: str,
+           precision: str = "auto"):
+    """One policy x precision replay; returns (telemetry, logits, wall_s,
+    cache)."""
+    tel = Telemetry()
+    cache = ExecutorCache(params, B1_SMOKE, buckets=spec["buckets"],
+                          precision=precision, autotune=False,
+                          telemetry=tel)
+    policy = (FixedMicrobatchPolicy(spec["microbatch"])
+              if policy_name == "fixed" else BucketedPolicy())
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, params, policy=policy,
+                                telemetry=tel, clock=clock)
+    reqs = [Request(rid=i, image=img, deadline_ms=spec["deadline_ms"])
+            for i, img in enumerate(images)]
+    # warm the compiled working set outside the timed window, like a
+    # serving engine warming up before traffic — CPU-interpret compile
+    # stalls would otherwise dominate the replay wall clock
+    if policy_name == "fixed":
+        for res in spec["resolutions"]:
+            cache.get(spec["microbatch"], res).warm(params)
+    else:
+        cache.warmup(spec["resolutions"])
+    t0 = time.perf_counter()
+    for (at, _), req in zip(trace, reqs):
+        clock.advance_to(at)
+        sched.submit(req)
+        sched.step()
+    clock.advance(spec["deadline_ms"] / 1e3)   # let stragglers come due
+    sched.step()
+    sched.step(drain=True)
+    sched.finalize()
+    wall = time.perf_counter() - t0
+    assert all(r.logits is not None for r in reqs), "requests dropped"
+    return tel, np.stack([r.logits for r in reqs]), wall, cache
+
+
+def reference_logits(params, images):
+    """Unbatched reference forward (plan=None), one request at a time."""
+    outs = []
+    for img in images:
+        program = lower(B1_SMOKE, batch=1, image_size=img.shape[0])
+        outs.append(np.asarray(
+            execute(program, params, img[None]))[0])
+    return np.stack(outs)
+
+
+def _policy_line(name, tel, wall, n):
+    return (f"  {name:<9} occupancy {tel.occupancy:>5.1%}  "
+            f"padded {tel.total('padded'):>3}  "
+            f"dispatches {tel.total('dispatches'):>3}  "
+            f"compiles {tel.counters.get('executor_miss', 0):>2}  "
+            f"plan-sites reused {tel.counters.get('plan_sites_reused', 0):>2}"
+            f"  wall {wall * 1e3:7.0f} ms  ({n / wall:6.1f} img/s)")
+
+
+def run(smoke: bool = False):
+    spec = SMOKE if smoke else FULL
+    key = jax.random.PRNGKey(0)
+    params = init_efficientvit(key, B1_SMOKE)
+    qparams = quantize_efficientvit(params)
+    trace = make_trace(spec)
+    images = make_images(trace)
+    n = len(images)
+
+    print(f"# serving bench — {B1_SMOKE.name}, {n} requests over "
+          f"{spec['resolutions']}px, buckets {spec['buckets']}, "
+          f"fixed microbatch {spec['microbatch']}, "
+          f"deadline {spec['deadline_ms']:.0f} ms (virtual clock)")
+
+    results = {}
+    for prec_name, tree, precision in (("fp", params, "auto"),
+                                       ("int8", qparams, "int8")):
+        print(f"\n## {prec_name}")
+        per = {}
+        for policy in ("fixed", "bucketed"):
+            tel, logits, wall, cache = replay(
+                tree, spec, trace, images, policy_name=policy,
+                precision=precision)
+            per[policy] = dict(tel=tel, logits=logits, wall=wall,
+                               cache=cache)
+            print(_policy_line(policy, tel, wall, n))
+        results[prec_name] = per
+
+        fx, bk = per["fixed"]["tel"], per["bucketed"]["tel"]
+        assert bk.total("padded") < fx.total("padded"), \
+            (prec_name, bk.total("padded"), fx.total("padded"))
+        assert bk.occupancy > fx.occupancy, \
+            (prec_name, bk.occupancy, fx.occupancy)
+        print(f"  -> bucketed pads {fx.total('padded') - bk.total('padded')}"
+              f" fewer samples; occupancy {fx.occupancy:.1%} -> "
+              f"{bk.occupancy:.1%}")
+        print("\n  per-bucket telemetry (bucketed):")
+        for line in bk.table().splitlines():
+            print("  " + line)
+
+    # fp numerics: both policies match each other and the unbatched
+    # reference (int8 differs within quantization noise across batch
+    # compositions — per-tensor dynamic activation scales — so parity
+    # for it is asserted per-bucket in tests/test_serving_runtime.py).
+    fp = results["fp"]
+    ref = reference_logits(params, images)
+    for policy in ("fixed", "bucketed"):
+        err = float(np.max(np.abs(fp[policy]["logits"] - ref)))
+        assert err < 1e-3, (policy, err)
+    print(f"\nfp parity: fixed/bucketed vs unbatched reference "
+          f"max|Δ| < 1e-3 on all {n} requests")
+
+    # executor-cache key-set drift gate (smoke trace only: the full
+    # trace's key set depends on its larger random arrival pattern).
+    # Gated on the keys batch formation actually dispatched to — the
+    # warmed cache holds the full bucket x resolution product.
+    if smoke:
+        got = {(b, res) for b, res, _ in fp["bucketed"]["tel"].buckets}
+        assert got == EXPECTED_SMOKE_KEYS, \
+            f"executor key-set drift: {sorted(got)} != " \
+            f"{sorted(EXPECTED_SMOKE_KEYS)} — update EXPECTED_SMOKE_KEYS " \
+            f"alongside the scheduler change"
+        print(f"executor key-set gate: dispatched {sorted(got)} == expected")
+
+    return {
+        prec: {pol: {"occupancy": d["tel"].occupancy,
+                     "padded": d["tel"].total("padded"),
+                     "dispatches": d["tel"].total("dispatches"),
+                     "wall_s": d["wall"]}
+               for pol, d in per.items()}
+        for prec, per in results.items()}
+
+
+def main():
+    run(smoke="--smoke" in sys.argv[1:])
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,7 @@ class SiteDecision:
     blocks: Mapping[str, int] = dataclasses.field(default_factory=dict)
     shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D, S, C)
     precision: str = "fp"  # "fp" | "int8" — which kernel family runs
+    reused: bool = False   # blocks inherited from a donor plan (no re-tune)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,7 +115,27 @@ def decision_shape(site) -> tuple:
     return tuple(site.in_shape) + tuple(site.out_shape)
 
 
-def _decide(site, params, *, enabled, autotune, interpret, precision):
+def _reusable_blocks(reuse, site, prec):
+    """Donor blocks for this site, or None if no safe donor exists.
+
+    A donor decision qualifies when it fused the *same-named* site at
+    the same precision with identical per-sample geometry — everything
+    in the decision shape except the leading batch axis (the image
+    batch for conv kinds, the folded branch*batch*head axis for msa).
+    Batch is exactly the axis serving buckets vary, so a donor plan from
+    another bucket at the same resolution shares its tuned blocks and
+    the new bucket skips the tuner entirely.
+    """
+    d = reuse.get(site.name) if reuse is not None else None
+    if (d is None or not d.fused or d.kind != site.kind
+            or d.precision != prec
+            or tuple(d.shape[1:]) != tuple(decision_shape(site)[1:])):
+        return None
+    return dict(d.blocks)
+
+
+def _decide(site, params, *, enabled, autotune, interpret, precision,
+            reuse=None):
     from repro.kernels.registry import get_kernel, get_probe
 
     shape = decision_shape(site)
@@ -130,15 +151,19 @@ def _decide(site, params, *, enabled, autotune, interpret, precision):
     if impl.vmem_bytes(site) > impl.vmem_budget:
         return SiteDecision(site.name, site.kind, False, "vmem",
                             shape=shape, precision=prec)
-    blocks = impl.tune(site, autotune=autotune, interpret=interpret)
+    blocks = _reusable_blocks(reuse, site, prec)
+    reused = blocks is not None
+    if not reused:
+        blocks = impl.tune(site, autotune=autotune, interpret=interpret)
     return SiteDecision(site.name, site.kind, True, "ok", blocks, shape,
-                        precision=prec)
+                        precision=prec, reused=reused)
 
 
 def plan_program(program, params, *, fuse_dsconv: bool = True,
                  fuse_mbconv: bool = True, fuse_msa: bool = True,
                  autotune: bool = True, interpret: bool | None = None,
-                 precision: str = "auto") -> FusionPlan:
+                 precision: str = "auto",
+                 reuse: FusionPlan | None = None) -> FusionPlan:
     """Freeze per-site routing for a lowered ``core.program.Program``.
 
     ``precision``: "auto" (default) matches each site's params — fp32
@@ -146,6 +171,13 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     the FIX8 ones; "fp"/"int8" force one family and demote mismatched
     sites to the reference path.  ``interpret=None`` auto-detects the
     backend (compile on TPU, interpret elsewhere).
+
+    ``reuse``: an optional donor ``FusionPlan`` (typically another batch
+    bucket at the same resolution, built by the serving executor cache).
+    Sites whose per-sample geometry matches a fused donor decision
+    inherit its block choices without consulting the tuner — their
+    decisions carry ``reused=True``.  Sites with no safe donor (other
+    resolution, precision mismatch, donor fell back) tune normally.
 
     Runs outside jit: autotune sweeps (when ``autotune=True`` and the
     cache is cold) time the real kernels on synthetic inputs here, never
@@ -163,7 +195,8 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
         decisions[site.name] = _decide(
             site, params_at(params, site.param_path),
             enabled=enabled.get(site.kind, True),  # new kinds default on
-            autotune=autotune, interpret=interpret, precision=precision)
+            autotune=autotune, interpret=interpret, precision=precision,
+            reuse=reuse)
     return FusionPlan(decisions=decisions, interpret=interpret)
 
 

@@ -134,12 +134,45 @@ def lower(cfg: EfficientViTConfig = B1, *, batch: int = 1,
     return _lower(cfg, batch, image_size)
 
 
+def _validate_geometry(sites: Tuple[Site, ...], size: int) -> None:
+    """Geometry invariants for any (batch, resolution) lowering.
+
+    The serving runtime lowers arbitrary resolutions, not just the
+    config default, so the shape chain is checked here once instead of
+    surfacing as a conv shape error deep inside a jitted executor: each
+    site consumes exactly what its predecessor produced, residual sites
+    are shape-preserving, and no spatial extent collapses to zero.
+    """
+    prev = None
+    for s in sites:
+        if any(dim <= 0 for dim in s.out_shape):
+            raise ValueError(
+                f"site {s.name}: out_shape {s.out_shape} has a "
+                f"non-positive dim at image_size={size}")
+        if prev is not None and s.in_shape != prev.out_shape:
+            raise ValueError(
+                f"geometry break at {prev.name} -> {s.name}: "
+                f"{prev.out_shape} != {s.in_shape}")
+        if s.residual and s.in_shape != s.out_shape:
+            raise ValueError(
+                f"residual site {s.name} is not shape-preserving: "
+                f"{s.in_shape} -> {s.out_shape}")
+        prev = s
+
+
 @functools.lru_cache(maxsize=64)
 def _lower(cfg: EfficientViTConfig, batch: int,
            image_size: int | None) -> Program:
     w, d = cfg.widths, cfg.depths
     size = image_size or cfg.image_size
     B = batch
+    if B < 1:
+        raise ValueError(f"batch must be >= 1, got {B}")
+    if size % 32:
+        raise ValueError(
+            f"image_size={size}: EfficientViT downsamples by 2 five "
+            f"times (stem, S1, S2, S3.down, S4.down), so serving "
+            f"resolutions must be multiples of 32 (192/224/256/...)")
     sites: list[Site] = []
     r = size // 2
 
@@ -190,6 +223,7 @@ def _lower(cfg: EfficientViTConfig, batch: int,
                       (B, hw1), (B, hw2), act=True))
     sites.append(Site("head.fc2", "fc", "head", ("head", "fc2"),
                       (B, hw2), (B, cfg.num_classes)))
+    _validate_geometry(tuple(sites), size)
     return Program(cfg, B, size, tuple(sites))
 
 

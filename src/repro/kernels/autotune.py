@@ -34,8 +34,8 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-__all__ = ["autotune", "pad_to_multiple", "cache_path", "clear_memory_cache",
-           "SWEEP_COUNT"]
+__all__ = ["autotune", "shape_key", "pad_to_multiple", "cache_path",
+           "clear_memory_cache", "SWEEP_COUNT"]
 
 # in-memory cache: {cache_key: choice-dict}; mirrors the on-disk file
 _MEM: dict[str, dict] = {}
@@ -93,6 +93,31 @@ def _save_disk(path: str) -> None:
 
 def _key(kind: str, key: Sequence) -> str:
     return f"{kind}|" + ",".join(str(k) for k in key)
+
+
+def shape_key(*, batch: int, spatial, dtype: str, backend: str,
+              **dims) -> tuple:
+    """Canonical persistent-cache key for a kernel tuning case.
+
+    Every key MUST carry the batch size and the spatial extent(s): the
+    serving runtime lowers the same network at several (batch bucket,
+    resolution) pairs, and a key that only encoded channels + dtype
+    would hand one bucket's block choice to a different shape — a stale
+    tile that silently mis-sizes the grid.  ``batch`` is whatever the
+    kernel grids over (the image batch for the conv megakernels, the
+    folded branch*batch*head axis for attention); ``spatial`` is the
+    per-sample extent (H, W) or a token count.  Labeled ``name=value``
+    items keep the on-disk key self-describing, so dropping a dimension
+    or reordering fields cannot re-introduce a collision unnoticed.
+    """
+    try:
+        spatial = tuple(int(s) for s in spatial)
+    except TypeError:
+        spatial = (int(spatial),)
+    parts = [f"b={int(batch)}", "s=" + "x".join(str(s) for s in spatial)]
+    parts += [f"{k}={v}" for k, v in sorted(dims.items())]
+    parts += [f"dtype={dtype}", f"backend={backend}"]
+    return tuple(parts)
 
 
 def _time_once(fn: Callable[[], object], reps: int = 3) -> float:

@@ -16,11 +16,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import fold_bn_into_conv
+from repro.kernels.autotune import autotune, shape_key
+from repro.kernels.compat import default_interpret
 from repro.kernels.dsconv.kernel import dsconv_fused, dsconv_fused_int8
 from repro.kernels.dsconv.ref import dsconv_int8_ref, dsconv_ref
 from repro.kernels.registry import KernelBase, register
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+BLOCK_F_CANDIDATES = ({"block_f": 64}, {"block_f": 128}, {"block_f": 256})
 
 
 def dsconv_vmem_bytes(h: int, w: int, c: int, stride: int = 1, *,
@@ -31,6 +35,40 @@ def dsconv_vmem_bytes(h: int, w: int, c: int, stride: int = 1, *,
     less than fp32)."""
     per = 1 if dtype == "i8" else 4
     return per * ((h + 2) * (w + 2) * c + (h * w // stride ** 2) * c)
+
+
+def tune_block_f(x_shape, f: int, *, stride: int = 1,
+                 allow_sweep: bool = True, interpret: bool | None = None,
+                 dtype: str = "f32") -> int:
+    """Autotuned c_out tile for a DSConv shape (cached on disk).
+
+    Cache keys carry batch + spatial dims (``autotune.shape_key``) so
+    serving buckets at other (batch, resolution) pairs tune and cache
+    independently of each other, and int8 separately from fp32.
+    """
+    B, H, W, C = x_shape
+    interpret = default_interpret(interpret)
+    backend = "interp" if interpret else "compiled"
+    key = shape_key(batch=B, spatial=(H, W), c=C, f=f, stride=stride,
+                    dtype=dtype, backend=backend)
+
+    def bench(cand):
+        if dtype == "i8":
+            return dsconv_fused_int8(
+                jnp.zeros((B, H, W, C), jnp.int8), jnp.float32(1.0),
+                jnp.zeros((3, 3, C), jnp.int8), jnp.ones((C,)),
+                jnp.zeros((C,)), jnp.zeros((C, f), jnp.int8),
+                jnp.ones((f,)), jnp.zeros((f,)), stride=stride,
+                block_f=cand["block_f"], interpret=interpret)
+        return dsconv_fused(
+            jnp.zeros((B, H, W, C), jnp.float32), jnp.zeros((3, 3, C)),
+            jnp.zeros((C,)), jnp.zeros((C, f), jnp.float32),
+            jnp.zeros((f,)), stride=stride, block_f=cand["block_f"],
+            interpret=interpret)
+
+    choice = autotune("dsconv", key, BLOCK_F_CANDIDATES,
+                      bench if allow_sweep else None)
+    return choice["block_f"]
 
 
 @functools.partial(jax.jit,
@@ -116,7 +154,10 @@ class DsconvKernel(KernelBase):
                                  dtype=dtype or self.dtype)
 
     def tune(self, site, *, autotune=True, interpret=None):
-        return {"block_f": 128}
+        bf = tune_block_f(site.in_shape, site.out_shape[-1],
+                          stride=site.stride, allow_sweep=autotune,
+                          interpret=interpret, dtype=self.dtype)
+        return {"block_f": bf}
 
     def apply(self, params, x, site, decision=None, *, interpret=None):
         blocks = decision.blocks if decision is not None else {}

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import fold_bn_into_conv
-from repro.kernels.autotune import autotune
+from repro.kernels.autotune import autotune, shape_key
 from repro.kernels.compat import default_interpret
 from repro.kernels.mbconv.kernel import mbconv_fused, mbconv_fused_int8
 from repro.kernels.mbconv.ref import mbconv_int8_ref, mbconv_ref
@@ -48,13 +48,16 @@ def tune_block_f(x_shape, mid: int, f: int, *, stride: int = 1,
                  dtype: str = "f32") -> int:
     """Autotuned c_out tile for an MBConv shape (cached on disk).
 
-    The cache key carries the backend (interpret vs compiled) AND the
-    dtype, so int8 tiles and fp32 tiles are tuned and cached separately.
+    The cache key carries batch + spatial dims next to the channel
+    geometry, the backend (interpret vs compiled) and the dtype, so
+    serving buckets at other (batch, resolution) pairs can never collide
+    on a stale block choice, and int8 tiles cache separately from fp32.
     """
     B, H, W, C = x_shape
     interpret = default_interpret(interpret)
     backend = "interp" if interpret else "compiled"
-    key = (B, H, W, C, mid, f, stride, dtype, backend)
+    key = shape_key(batch=B, spatial=(H, W), c=C, mid=mid, f=f,
+                    stride=stride, dtype=dtype, backend=backend)
 
     def bench(cand):
         if dtype == "i8":

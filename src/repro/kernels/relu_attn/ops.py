@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.autotune import autotune
+from repro.kernels.autotune import autotune, shape_key
 from repro.kernels.compat import default_interpret
 from repro.kernels.registry import KernelBase, register
 from repro.kernels.relu_attn.kernel import relu_attn_causal, relu_attn_noncausal
@@ -41,12 +41,17 @@ def tune_block_n(bh: int, n: int, d: int, *, allow_sweep: bool = True,
                  interpret: bool | None = None) -> int:
     """Autotuned token tile for a (BH, N, D) attention shape (disk-cached).
 
-    The cache key carries the backend (interpret vs compiled) so tiles
-    timed under the CPU interpreter are never reused for compiled runs.
+    The cache key carries the folded grid batch ``bh`` (branches x image
+    batch x heads) and the token count ``n`` (= H*W) explicitly, so two
+    serving buckets differing only in batch or resolution tune and cache
+    independently; the backend tag keeps interpreter timings away from
+    compiled runs.  The attention core always accumulates fp32, hence
+    the fixed dtype tag.
     """
     interpret = default_interpret(interpret)
     backend = "interp" if interpret else "compiled"
-    key = (bh, n, d, "f32", backend)
+    key = shape_key(batch=bh, spatial=(n,), d=d, dtype="f32",
+                    backend=backend)
 
     def bench(cand):
         z = jnp.zeros((bh, n, d), jnp.float32)

@@ -1,3 +1,9 @@
 from repro.serving.engine import ServeConfig, ServingEngine, Request  # noqa: F401
+from repro.serving.executors import (  # noqa: F401
+    Executor, ExecutorCache, ExecutorKey)
 from repro.serving.sampler import SamplerConfig, sample  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    BucketedPolicy, FixedMicrobatchPolicy, ManualClock, MicroBatchScheduler)
+from repro.serving.scheduler import Request as VisionRequest  # noqa: F401
+from repro.serving.telemetry import Telemetry  # noqa: F401
 from repro.serving.vision import VisionEngine, VisionServeConfig  # noqa: F401

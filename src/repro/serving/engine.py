@@ -29,6 +29,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models.registry import Model, build_model
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.telemetry import Telemetry
 
 
 @dataclasses.dataclass
@@ -63,9 +64,11 @@ def _batch_axes(model: Model, max_len: int):
 
 
 class ServingEngine:
-    def __init__(self, arch: ArchConfig, params, cfg: ServeConfig):
+    def __init__(self, arch: ArchConfig, params, cfg: ServeConfig, *,
+                 telemetry: Telemetry | None = None):
         self.arch = arch
         self.cfg = cfg
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.model: Model = build_model(arch)
         self.params = params
         B = cfg.max_slots
@@ -117,6 +120,7 @@ class ServingEngine:
         self.slot_pos[slot] = len(req.prompt)
         self.slot_budget[slot] = req.max_tokens - 1
         self.last_token[slot] = first
+        self.telemetry.count("admitted")
         return True
 
     # -- decode ---------------------------------------------------------
@@ -128,6 +132,9 @@ class ServingEngine:
         compute garbage into their soon-to-be-overwritten caches)."""
         if self.active() == 0:
             return None
+        self.telemetry.count("decode_steps")
+        self.telemetry.observe("slot_occupancy",
+                               self.active() / self.cfg.max_slots)
         tokens = jnp.asarray(self.last_token)[:, None, None]  # (B,1,1)
         pos = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.caches = self._decode(
@@ -145,6 +152,7 @@ class ServingEngine:
             if tok == self.cfg.eos_token or self.slot_budget[i] <= 0:
                 self.finished.append(req)
                 self.slot_req[i] = None
+                self.telemetry.count("finished")
         return nxt
 
     def run(self, requests: list, *, max_steps: int = 10_000) -> list:

@@ -1,0 +1,190 @@
+"""Shape-bucketed executor cache over the Program IR.
+
+The paper's reconfigurable engine keeps ONE compiled schedule busy
+across heterogeneous ops (TMP dataflow, §III/§IV); the serving-system
+analogue is keeping a small set of compiled executables busy across
+heterogeneous *requests*.  CHOSEN (arXiv 2407.12736) builds exactly
+this specialize-per-shape compilation layer for ViT inference; ME-ViT
+(arXiv 2402.09709) quantifies how much throughput leaks when batch
+shaping and memory movement are left to chance.
+
+An ``Executor`` is one fully specialized pipeline for an
+``ExecutorKey = (batch bucket, resolution, precision)``:
+
+    lower(cfg, batch, image_size)   -> Program     (cached, per shape)
+    plan_program(program, params)   -> FusionPlan  (autotune swept ONCE,
+                                       outside the request loop; block
+                                       choices inherited from a donor
+                                       bucket at the same resolution via
+                                       ``plan_program(..., reuse=)``)
+    jax.jit(execute)                -> the compiled forward
+
+``ExecutorCache`` builds executors lazily on first use, serves them LRU
+with optional capacity eviction, exposes ``warmup`` (pre-compile the
+expected working set before traffic arrives) and reports cache behavior
+(hits / misses / plan reuse / evictions) into a shared ``Telemetry``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.efficientvit import EfficientViTConfig
+from repro.core.fusion import plan_program
+from repro.core.program import execute, lower
+from repro.serving.telemetry import Telemetry
+
+__all__ = ["ExecutorKey", "Executor", "ExecutorCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorKey:
+    batch: int        # bucket size (the compiled batch dimension)
+    resolution: int   # square image size
+    precision: str    # requested plan precision: "auto" | "fp" | "int8"
+
+
+class Executor:
+    """One compiled (program, plan, jitted forward) for a fixed shape."""
+
+    def __init__(self, key: ExecutorKey, program, plan):
+        self.key = key
+        self.program = program
+        self.plan = plan
+        self._fn = jax.jit(lambda p, x: execute(program, p, x, plan=plan))
+        self.calls = 0
+        self.warmed = False
+
+    def __call__(self, params, x):
+        """Dispatch the compiled forward.  Asynchronous: the result is a
+        device array; nothing blocks the host until someone reads it."""
+        self.calls += 1
+        return self._fn(params, x)
+
+    def warm(self, params) -> "Executor":
+        """Trigger compilation (and the first-device-touch costs) on a
+        zero batch, outside the request loop."""
+        if not self.warmed:
+            k = self.key
+            x = jnp.zeros((k.batch, k.resolution, k.resolution, 3),
+                          jnp.float32)
+            jax.block_until_ready(self._fn(params, x))
+            self.warmed = True
+        return self
+
+
+class ExecutorCache:
+    """LRU cache of ``Executor``s keyed by (batch bucket, resolution).
+
+    ``buckets`` is the ascending set of batch sizes the runtime compiles
+    for; ``bucket_for(n)`` picks the smallest bucket >= n (the ragged
+    tail of a request group pads only up to that, never to the largest
+    microbatch).  The first plan built at a resolution becomes the donor
+    for every later bucket at that resolution: their ``plan_program``
+    call inherits tuned block choices site-by-site (``reuse=``) instead
+    of re-consulting the autotuner.
+    """
+
+    def __init__(self, params, cfg: EfficientViTConfig, *,
+                 buckets: Tuple[int, ...] = (1, 2, 4, 8),
+                 precision: str = "auto", use_plan: bool = True,
+                 autotune: bool = True, interpret: bool | None = None,
+                 capacity: int | None = None,
+                 telemetry: Telemetry | None = None):
+        assert buckets and all(b >= 1 for b in buckets), buckets
+        self.params = params
+        self.cfg = cfg
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.precision = precision
+        self.use_plan = use_plan
+        self.autotune = autotune
+        self.interpret = interpret
+        self.capacity = capacity
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._lru: "collections.OrderedDict[ExecutorKey, Executor]" = \
+            collections.OrderedDict()
+        self._donor_plans: dict[int, object] = {}   # resolution -> plan
+
+    # -- bucket policy ---------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n; the largest bucket when n exceeds all
+        (the caller then splits n across several dispatches)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def chunks_for(self, n: int) -> list[int]:
+        """Greedy bucket cover of ``n`` requests: full largest buckets,
+        then the smallest bucket that fits the ragged tail."""
+        out = []
+        big = self.buckets[-1]
+        while n >= big:
+            out.append(big)
+            n -= big
+        if n:
+            out.append(self.bucket_for(n))
+        return out
+
+    # -- the cache -------------------------------------------------------
+    def get(self, batch: int, resolution: int) -> Executor:
+        key = ExecutorKey(int(batch), int(resolution), self.precision)
+        ex = self._lru.get(key)
+        if ex is not None:
+            self._lru.move_to_end(key)
+            self.telemetry.count("executor_hit")
+            return ex
+        self.telemetry.count("executor_miss")
+        ex = self._build(key)
+        self._lru[key] = ex
+        while self.capacity is not None and len(self._lru) > self.capacity:
+            evicted_key, _ = self._lru.popitem(last=False)
+            self.telemetry.count("executor_evicted")
+            if not any(k.resolution == evicted_key.resolution
+                       for k in self._lru):
+                self._donor_plans.pop(evicted_key.resolution, None)
+        return ex
+
+    def executor_for(self, n: int, resolution: int) -> Executor:
+        """The executor serving a group of ``n`` same-resolution
+        requests: smallest cached bucket >= n."""
+        return self.get(self.bucket_for(n), resolution)
+
+    def _build(self, key: ExecutorKey) -> Executor:
+        program = lower(self.cfg, batch=key.batch,
+                        image_size=key.resolution)
+        plan = None
+        if self.use_plan:
+            donor = self._donor_plans.get(key.resolution)
+            plan = plan_program(program, self.params,
+                                autotune=self.autotune,
+                                interpret=self.interpret,
+                                precision=self.precision, reuse=donor)
+            self.telemetry.count("plans_built")
+            reused = sum(d.reused for d in plan.decisions.values())
+            if reused:
+                self.telemetry.count("plan_sites_reused", reused)
+            if donor is None:
+                self._donor_plans[key.resolution] = plan
+        return Executor(key, program, plan)
+
+    # -- introspection / lifecycle --------------------------------------
+    def keys(self) -> Tuple[ExecutorKey, ...]:
+        """Currently cached keys, least- to most-recently used."""
+        return tuple(self._lru)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def warmup(self, resolutions, buckets=None) -> "ExecutorCache":
+        """Pre-build and compile the expected working set (every (bucket,
+        resolution) pair) before traffic arrives, so no request pays a
+        lowering/planning/compile stall."""
+        for res in resolutions:
+            for b in (buckets if buckets is not None else self.buckets):
+                self.get(b, res).warm(self.params)
+        return self

@@ -1,0 +1,205 @@
+"""Continuous micro-batching scheduler over the executor cache.
+
+Requests (one image each, possibly mixed resolutions and deadlines)
+flow through an admission queue per resolution.  Batch formation groups
+same-resolution requests into the *largest ready bucket* — never
+padding a 5-deep queue to a fixed microbatch of 8 — and a ragged tail
+is flushed to the smallest bucket that fits it, either when its
+deadline comes due or at drain.  This is the continuous-batching
+discipline of the LM engine (``serving.engine``) translated to vision:
+there slots free per token, here buckets form per dispatch.
+
+Dispatches are asynchronous: ``step()`` hands padded batches to the
+compiled executors and returns without any host/device sync; the device
+pipeline stays busy across chunks (the old ``VisionEngine.logits`` host
+loop implicitly serialized on each chunk's result).  ``finalize()``
+materializes outstanding outputs, scatters logits back onto their
+requests and stamps completion latency into telemetry.
+
+Wall-clock is injectable (``clock=``): the serving benchmark replays
+recorded traces on a manual clock, so queue-wait and deadline behavior
+are deterministic and testable.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.executors import ExecutorCache
+from repro.serving.telemetry import Telemetry
+
+__all__ = ["Request", "BucketedPolicy", "FixedMicrobatchPolicy",
+           "ManualClock", "MicroBatchScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One classification request: an (H, W, 3) image + optional deadline
+    (milliseconds after arrival) by which it should be dispatched even if
+    its bucket has not filled."""
+    rid: int
+    image: object
+    deadline_ms: Optional[float] = None
+    arrival: float = 0.0                 # stamped by submit()
+    logits: Optional[np.ndarray] = None  # filled by finalize()
+
+    @property
+    def resolution(self) -> int:
+        return int(np.shape(self.image)[0])
+
+
+class ManualClock:
+    """Deterministic clock for trace replay and deadline tests."""
+
+    def __init__(self, now: float = 0.0):
+        self.now = float(now)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += float(dt)
+        return self.now
+
+    def advance_to(self, t: float) -> float:
+        self.now = max(self.now, float(t))
+        return self.now
+
+
+class BucketedPolicy:
+    """Group into the largest ready bucket; flush the ragged tail to the
+    smallest bucket >= tail only when due (deadline or drain)."""
+
+    def form(self, qlen: int, buckets, due: bool) -> List[int]:
+        sizes = []
+        big = buckets[-1]
+        while qlen >= big:
+            sizes.append(big)
+            qlen -= big
+        if due and qlen:
+            sizes.append(next(b for b in buckets if b >= qlen))
+        return sizes
+
+
+class FixedMicrobatchPolicy:
+    """Legacy behavior: every dispatch is the full microbatch, the tail
+    padded up to it.  Kept as the A/B baseline (and the back-compat
+    ``VisionEngine`` policy)."""
+
+    def __init__(self, microbatch: int):
+        self.microbatch = int(microbatch)
+
+    def form(self, qlen: int, buckets, due: bool) -> List[int]:
+        sizes = [self.microbatch] * (qlen // self.microbatch)
+        if due and qlen % self.microbatch:
+            sizes.append(self.microbatch)
+        return sizes
+
+
+class MicroBatchScheduler:
+    """Admission queues + batch formation + async dispatch over an
+    ``ExecutorCache``.
+
+    Typical loop (the benchmark's trace replay)::
+
+        sched = MicroBatchScheduler(cache, params)
+        for req in arriving:   sched.submit(req); sched.step()
+        sched.step(drain=True)
+        sched.finalize()       # req.logits populated
+
+    or one-shot: ``sched.serve(requests) -> (n, num_classes)``.
+    """
+
+    def __init__(self, cache: ExecutorCache, params, *,
+                 policy=None, telemetry: Telemetry | None = None,
+                 clock=None):
+        self.cache = cache
+        self.params = params
+        self.policy = policy if policy is not None else BucketedPolicy()
+        self.telemetry = (telemetry if telemetry is not None
+                          else cache.telemetry)
+        self.clock = clock if clock is not None else time.monotonic
+        self._queues: dict[int, collections.deque] = {}
+        self._pending: list = []     # (device_out, requests, bucket_key)
+
+    # -- admission -------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.arrival = self.clock()
+        self._queues.setdefault(req.resolution,
+                                collections.deque()).append(req)
+        self.telemetry.count("submitted")
+
+    def queue_depth(self, resolution: int | None = None) -> int:
+        if resolution is not None:
+            return len(self._queues.get(resolution, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    # -- batch formation + dispatch -------------------------------------
+    def _due(self, q) -> bool:
+        now = self.clock()
+        return any(r.deadline_ms is not None
+                   and now >= r.arrival + r.deadline_ms / 1e3 for r in q)
+
+    def step(self, *, drain: bool = False) -> int:
+        """Form and dispatch every ready batch; returns the number of
+        requests dispatched.  ``drain=True`` treats all queues as due."""
+        dispatched = 0
+        for res, q in list(self._queues.items()):
+            due = drain or self._due(q)
+            for size in self.policy.form(len(q), self.cache.buckets, due):
+                take = min(size, len(q))
+                if take == 0:
+                    break
+                reqs = [q.popleft() for _ in range(take)]
+                self._dispatch(res, reqs, size)
+                dispatched += take
+        return dispatched
+
+    def _dispatch(self, resolution: int, reqs: List[Request],
+                  bucket: int) -> None:
+        now = self.clock()
+        imgs = np.stack([np.asarray(r.image, np.float32) for r in reqs])
+        if bucket > len(reqs):
+            pad = np.zeros((bucket - len(reqs),) + imgs.shape[1:],
+                           imgs.dtype)
+            imgs = np.concatenate([imgs, pad])
+        ex = self.cache.get(bucket, resolution)
+        out = ex(self.params, jnp.asarray(imgs))   # async, no host sync
+        key = (bucket, resolution, self.cache.precision)
+        self.telemetry.record_dispatch(
+            key, len(reqs), bucket,
+            queue_depth=len(self._queues[resolution]),
+            wait_ms=[(now - r.arrival) * 1e3 for r in reqs])
+        self._pending.append((out, reqs, key))
+
+    # -- completion ------------------------------------------------------
+    def finalize(self) -> int:
+        """Block on outstanding dispatches (in dispatch order), scatter
+        logits onto requests, stamp completion latency.  Returns the
+        number of requests completed."""
+        done = 0
+        for out, reqs, key in self._pending:
+            arr = np.asarray(out)                  # sync on this chunk
+            t = self.clock()
+            for i, r in enumerate(reqs):
+                r.logits = arr[i]
+            self.telemetry.record_latency(
+                key, [(t - r.arrival) * 1e3 for r in reqs])
+            done += len(reqs)
+        self._pending.clear()
+        self.telemetry.count("completed", done)
+        return done
+
+    # -- one-shot --------------------------------------------------------
+    def serve(self, requests: List[Request]) -> np.ndarray:
+        """Submit, drain, finalize; logits stacked in request order."""
+        for r in requests:
+            self.submit(r)
+        self.step(drain=True)
+        self.finalize()
+        return np.stack([r.logits for r in requests])

@@ -1,0 +1,162 @@
+"""Serving telemetry: per-bucket counters + runtime-wide series.
+
+One ``Telemetry`` instance is threaded through the serving runtime —
+the executor cache counts compile/plan cache behavior into it, the
+micro-batching scheduler records per-dispatch bucket occupancy, pad
+waste, queue depth and request latency, and the LM ``ServingEngine``
+reports slot occupancy through the same object.  ``snapshot()`` returns
+plain dicts (machine-readable, benchmark-friendly); ``table()`` renders
+the per-bucket view as a pretty table.
+
+This is deliberately dependency-free bookkeeping (no jax): recording a
+dispatch must never add host/device synchronization to the serving hot
+path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+__all__ = ["Telemetry", "BucketStats", "percentile", "MAX_SAMPLES"]
+
+# Observation series are bounded ring buffers: a long-lived serving
+# process records one wait + one latency sample per request (and one
+# occupancy sample per LM decode step), so unbounded lists would grow
+# forever.  Percentiles over the most recent window are what an
+# operator wants anyway; integer counters are exact for all time.
+MAX_SAMPLES = 4096
+
+
+def _ring():
+    return collections.deque(maxlen=MAX_SAMPLES)
+
+
+def percentile(xs, q: float) -> float:
+    """Linear-interpolated percentile of a sample list; nan when empty."""
+    if not xs:
+        return float("nan")
+    s = sorted(float(x) for x in xs)
+    if len(s) == 1:
+        return s[0]
+    idx = (len(s) - 1) * q
+    lo, hi = math.floor(idx), math.ceil(idx)
+    frac = idx - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Counters for one executor bucket (batch, resolution, precision)."""
+    dispatches: int = 0
+    samples: int = 0          # real requests served
+    padded: int = 0           # slots filled with zero-padding
+    queue_depth: collections.deque = dataclasses.field(default_factory=_ring)
+    wait_ms: collections.deque = dataclasses.field(default_factory=_ring)
+    latency_ms: collections.deque = dataclasses.field(default_factory=_ring)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of dispatched slots holding real samples."""
+        total = self.samples + self.padded
+        return self.samples / total if total else 1.0
+
+    def snapshot(self) -> dict:
+        return {
+            "dispatches": self.dispatches,
+            "samples": self.samples,
+            "padded": self.padded,
+            "occupancy": self.occupancy,
+            "queue_depth_p50": percentile(self.queue_depth, 0.5),
+            "wait_ms_p50": percentile(self.wait_ms, 0.5),
+            "wait_ms_p95": percentile(self.wait_ms, 0.95),
+            "latency_ms_p50": percentile(self.latency_ms, 0.5),
+            "latency_ms_p95": percentile(self.latency_ms, 0.95),
+        }
+
+
+class Telemetry:
+    """Shared counters: generic names, observation series, bucket stats."""
+
+    def __init__(self):
+        self.counters: Dict[str, int] = {}
+        self.series: Dict[str, collections.deque] = {}
+        self.buckets: Dict[Tuple, BucketStats] = {}
+
+    # -- generic ---------------------------------------------------------
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def observe(self, name: str, value: float) -> None:
+        self.series.setdefault(name, _ring()).append(float(value))
+
+    # -- per-bucket ------------------------------------------------------
+    def bucket(self, key) -> BucketStats:
+        key = tuple(key)
+        if key not in self.buckets:
+            self.buckets[key] = BucketStats()
+        return self.buckets[key]
+
+    def record_dispatch(self, key, n_real: int, bucket_size: int, *,
+                        queue_depth: int | None = None,
+                        wait_ms=()) -> None:
+        b = self.bucket(key)
+        b.dispatches += 1
+        b.samples += n_real
+        b.padded += max(0, bucket_size - n_real)
+        if queue_depth is not None:
+            b.queue_depth.append(int(queue_depth))
+        b.wait_ms.extend(float(w) for w in wait_ms)
+
+    def record_latency(self, key, latencies_ms) -> None:
+        self.bucket(key).latency_ms.extend(float(x) for x in latencies_ms)
+
+    # -- aggregate views -------------------------------------------------
+    def total(self, field: str) -> int:
+        """Sum an integer BucketStats field over every bucket."""
+        return sum(getattr(b, field) for b in self.buckets.values())
+
+    @property
+    def occupancy(self) -> float:
+        total = self.total("samples") + self.total("padded")
+        return self.total("samples") / total if total else 1.0
+
+    def snapshot(self) -> dict:
+        return {
+            "counters": dict(self.counters),
+            "series": {
+                name: {"n": len(v), "p50": percentile(v, 0.5),
+                       "p95": percentile(v, 0.95)}
+                for name, v in self.series.items()},
+            "buckets": {"/".join(str(k) for k in key): b.snapshot()
+                        for key, b in sorted(self.buckets.items(),
+                                             key=lambda kv: str(kv[0]))},
+            "occupancy": self.occupancy,
+            "padded_total": self.total("padded"),
+            "samples_total": self.total("samples"),
+        }
+
+    def table(self) -> str:
+        """Per-bucket pretty table (benchmark / EXPERIMENTS.md output)."""
+        head = (f"{'bucket':<22} {'disp':>5} {'samples':>8} {'pad':>5} "
+                f"{'occ':>6} {'q p50':>6} {'wait p50/p95 ms':>16} "
+                f"{'lat p50/p95 ms':>16}")
+        lines = [head, "-" * len(head)]
+        for key, b in sorted(self.buckets.items(), key=lambda kv: str(kv[0])):
+            s = b.snapshot()
+            name = "x".join(str(k) for k in key)
+            lines.append(
+                f"{name:<22} {b.dispatches:>5} {b.samples:>8} "
+                f"{b.padded:>5} {b.occupancy:>5.0%} "
+                f"{s['queue_depth_p50']:>6.1f} "
+                f"{s['wait_ms_p50']:>7.1f}/{s['wait_ms_p95']:<8.1f} "
+                f"{s['latency_ms_p50']:>7.1f}/{s['latency_ms_p95']:<8.1f}")
+        lines.append(
+            f"{'TOTAL':<22} {self.total('dispatches'):>5} "
+            f"{self.total('samples'):>8} {self.total('padded'):>5} "
+            f"{self.occupancy:>5.0%}")
+        if self.counters:
+            lines.append("counters: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(self.counters.items())))
+        return "\n".join(lines)

@@ -1,12 +1,24 @@
-"""Vision serving: batched EfficientViT classification over the fused path.
+"""Vision serving: a thin façade over the serving runtime.
 
-The LM side serves through ``serving.engine``; this is the ViT
-counterpart.  At construction the engine lowers the config ONCE to a
-``core.program.Program`` for its fixed microbatch shape, plans it
-(``core.fusion.plan_program`` — autotune sweeps run here, once, outside
-the request loop) and jits one ``execute`` of that program.  Requests
-are padded up to the microbatch size so every call hits the same
-compiled executable and the same autotuned block choices.
+``VisionEngine`` used to own one lowering, one plan and one jitted
+forward at a fixed microbatch, padding every request group up to it.
+It is now a façade over the runtime subsystem:
+
+    ``serving.executors.ExecutorCache``   shape-bucketed compiled
+                                          executables, plans shared
+                                          across buckets, LRU eviction
+    ``serving.scheduler``                 continuous micro-batching with
+                                          deadline-aware flush
+    ``serving.telemetry``                 per-bucket counters
+
+The constructor keeps the old contract — lower + plan once, outside the
+request loop, exposed as ``.program`` / ``.plan`` for the primary
+microbatch shape — and ``logits`` / ``classify`` / ``quantized`` behave
+as before, except the ragged tail of a batch now routes to the smallest
+cached bucket that fits it (policy ``"bucketed"``, the default) instead
+of padding to the full microbatch, and chunks dispatch without host
+synchronization between them.  ``policy="fixed"`` restores the legacy
+pad-to-microbatch behavior exactly.
 """
 from __future__ import annotations
 
@@ -17,35 +29,67 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.efficientvit import EfficientViTConfig
-from repro.core.fusion import plan_program
-from repro.core.program import execute, lower
+from repro.serving.executors import ExecutorCache
+from repro.serving.scheduler import (
+    BucketedPolicy, FixedMicrobatchPolicy, MicroBatchScheduler, Request)
+from repro.serving.telemetry import Telemetry
 
 __all__ = ["VisionServeConfig", "VisionEngine"]
 
 
+def _default_buckets(microbatch: int) -> tuple:
+    """Powers of two up to and including the microbatch: 8 -> (1,2,4,8)."""
+    out = {microbatch}
+    b = 1
+    while b < microbatch:
+        out.add(b)
+        b *= 2
+    return tuple(sorted(out))
+
+
 @dataclasses.dataclass(frozen=True)
 class VisionServeConfig:
-    microbatch: int = 8
+    microbatch: int = 8       # largest batch bucket (and the fixed size
+    #                           under policy="fixed")
     use_plan: bool = True     # False -> reference path (A/B and debugging)
     autotune: bool = True
     precision: str = "auto"   # "auto" | "fp" | "int8" (FIX8 serving mode:
     #                           pass a quantize_efficientvit tree and the
     #                           plan routes the int8 megakernels)
+    policy: str = "bucketed"  # "bucketed" | "fixed" (legacy pad-to-mb)
+    buckets: tuple | None = None   # None -> powers of 2 up to microbatch
+    capacity: int | None = None    # executor-cache LRU capacity (None =
+    #                                unbounded)
 
 
 class VisionEngine:
     def __init__(self, params, cfg: EfficientViTConfig,
                  serve_cfg: VisionServeConfig = VisionServeConfig()):
+        assert serve_cfg.policy in ("bucketed", "fixed"), serve_cfg.policy
         self.params = params
         self.cfg = cfg
         self.serve_cfg = serve_cfg
-        self.program = lower(cfg, batch=serve_cfg.microbatch)
-        self.plan = (plan_program(self.program, params,
-                                  autotune=serve_cfg.autotune,
-                                  precision=serve_cfg.precision)
-                     if serve_cfg.use_plan else None)
-        self._fwd = jax.jit(
-            lambda p, x: execute(self.program, p, x, plan=self.plan))
+        mb = serve_cfg.microbatch
+        buckets = serve_cfg.buckets
+        if buckets is None:
+            buckets = (mb,) if serve_cfg.policy == "fixed" \
+                else _default_buckets(mb)
+        # the microbatch is always a bucket: it is the primary compiled
+        # shape, and chunking must never hand an n-row batch to an
+        # executor compiled for fewer rows
+        buckets = tuple(sorted(set(buckets) | {mb}))
+        self.telemetry = Telemetry()
+        self.cache = ExecutorCache(
+            params, cfg, buckets=buckets, precision=serve_cfg.precision,
+            use_plan=serve_cfg.use_plan, autotune=serve_cfg.autotune,
+            capacity=serve_cfg.capacity, telemetry=self.telemetry)
+        # primary executor built eagerly: plan construction (autotune
+        # sweeps included) happens here, outside the request loop, and
+        # .program / .plan keep their pre-runtime meaning
+        primary = self.cache.get(mb, cfg.image_size)
+        self.program = primary.program
+        self.plan = primary.plan
+        self._scheduler: MicroBatchScheduler | None = None
 
     @classmethod
     def quantized(cls, params, cfg: EfficientViTConfig,
@@ -56,22 +100,64 @@ class VisionEngine:
         return cls(quantize_efficientvit(params), cfg,
                    dataclasses.replace(serve_cfg, precision="int8"))
 
+    # -- batch API (back-compat) ----------------------------------------
     def logits(self, images) -> jax.Array:
-        """images: (n, H, W, 3), any n -> (n, num_classes)."""
+        """images: (n, H, W, 3), any n -> (n, num_classes).
+
+        Chunks dispatch asynchronously (no host sync between them); the
+        ragged tail routes to the smallest cached bucket >= its size
+        under the bucketed policy, so a 9-image call with microbatch 8
+        runs an 8-bucket and a 1-bucket instead of padding 8+8.
+        """
         images = jnp.asarray(images)
-        n = images.shape[0]
+        n = int(images.shape[0])
+        res = int(images.shape[1])
         mb = self.serve_cfg.microbatch
+        if self.serve_cfg.policy == "fixed":
+            sizes = [mb] * -(-n // mb)           # pad every chunk to mb
+        else:
+            sizes = self.cache.chunks_for(n)     # tail -> smallest bucket
         outs = []
-        for i in range(0, n, mb):
-            chunk = images[i:i + mb]
-            pad = mb - chunk.shape[0]
-            if pad:
+        i = 0
+        for bucket in sizes:
+            take = min(bucket, n - i)
+            chunk = images[i:i + take]
+            if bucket > take:
                 chunk = jnp.concatenate(
-                    [chunk, jnp.zeros((pad,) + chunk.shape[1:],
+                    [chunk, jnp.zeros((bucket - take,) + chunk.shape[1:],
                                       chunk.dtype)])
-            outs.append(self._fwd(self.params, chunk)[:mb - pad if pad else mb])
-        return jnp.concatenate(outs)[:n]
+            ex = self.cache.get(bucket, res)
+            outs.append(ex(self.params, chunk)[:take])
+            self.telemetry.record_dispatch(
+                (bucket, res, self.cache.precision), take, bucket)
+            i += take
+        return jnp.concatenate(outs)
 
     def classify(self, images) -> np.ndarray:
         """images: (n, H, W, 3) -> (n,) int top-1 labels."""
         return np.asarray(jnp.argmax(self.logits(images), axis=-1))
+
+    # -- request API (the serving runtime) ------------------------------
+    def scheduler(self, *, clock=None, policy=None) -> MicroBatchScheduler:
+        """A continuous micro-batching scheduler bound to this engine's
+        executor cache, params and telemetry."""
+        if policy is None:
+            policy = (FixedMicrobatchPolicy(self.serve_cfg.microbatch)
+                      if self.serve_cfg.policy == "fixed"
+                      else BucketedPolicy())
+        return MicroBatchScheduler(self.cache, self.params, policy=policy,
+                                   telemetry=self.telemetry, clock=clock)
+
+    def serve(self, requests: list[Request]) -> np.ndarray:
+        """Serve a list of ``scheduler.Request``s (mixed resolutions and
+        deadlines welcome); returns logits stacked in request order."""
+        if self._scheduler is None:
+            self._scheduler = self.scheduler()
+        return self._scheduler.serve(requests)
+
+    def warmup(self, resolutions=None) -> "VisionEngine":
+        """Pre-compile the bucket working set for the given resolutions
+        (default: the config's image size)."""
+        self.cache.warmup(resolutions if resolutions is not None
+                          else (self.cfg.image_size,))
+        return self
