@@ -14,18 +14,27 @@ Reports, per the EXPERIMENTS.md fusion tables:
     activations another 4x.
 
 Asserts (CI smoke gate):
-  * fused forward matches reference within 1e-3 (fp) / 1e-2 + argmax
-    bit-exact (int8 vs the int8 reference path);
+  * fused forward matches reference within 1e-3 (fp) / BIT-EXACT at
+    batch 1 (int8 vs the int8 reference path — through the full
+    producer-epilogue chain);
   * >= 2x analytic HBM-byte reduction on every fused MBConv/MSA site;
-  * msa() launch count drops to 1 per module;
+  * msa() launch count drops to 1 per module at fp (n_branches at int8:
+    attention core + one grouped-aggregation launch per scale);
   * the int8 plan fuses every site the fp plan fuses (zero
     ``"quantized"`` fallbacks) on B1_SMOKE and full B1;
   * int8-fused analytic HBM bytes (act + weights) <= 0.6x fp-fused at
     B1 @224;
+  * int8 DATAFLOW gate: every fused int8 conv site's input arrives
+    quantized from its producer's epilogue (q_in — the delivered
+    1 byte/element fused-site input), and the delivered activation
+    bytes measured from the executed program's epilogue dtypes equal
+    the analytic steady-state accounting within exactly the residual-fp
+    correction;
   * drift gate: B1 @224 stays at ``core.fusion.
-    EXPECTED_B1_FUSED_LAUNCHES`` (= 22) fused launches in BOTH
-    precisions — a lowering/planner change that moves this must update
-    the expectation explicitly.
+    EXPECTED_B1_FUSED_LAUNCHES`` (= 22) fused launches at fp and
+    ``EXPECTED_B1_FUSED_LAUNCHES_INT8`` (= 29) at int8 — a lowering/
+    planner/registry change that moves either must update the
+    expectation explicitly.
 
 Everything here runs through the program IR (``core.program.lower`` /
 ``execute``) and the generic registry planner
@@ -44,9 +53,34 @@ import jax.numpy as jnp
 from benchmarks.kernel_bench import _time
 from repro.core.efficientvit import B1, B1_SMOKE, init_efficientvit
 from repro.core.fusion import (
-    EXPECTED_B1_FUSED_LAUNCHES, launch_counts, plan_program, plan_report)
+    EXPECTED_B1_FUSED_LAUNCHES, EXPECTED_B1_FUSED_LAUNCHES_INT8,
+    launch_counts, plan_program, plan_report)
 from repro.core.program import execute, lower
 from repro.core.quantization import quantize_efficientvit
+
+
+def _delivered_gate(plan, rows):
+    """The int8-dataflow acceptance check: per fused int8 conv site the
+    input boundary is 1 byte/element (producer-emitted) and the
+    delivered bytes (epilogue dtypes of the executed program) equal the
+    analytic steady-state within exactly the residual-fp correction."""
+    checked = 0
+    for r in rows:
+        if not (r["fused"] and r["kind"] in ("mbconv", "dsconv")
+                and r["precision"] == "int8"):
+            continue
+        assert r["q_in"], \
+            f"{r['site']}: fused int8 input not producer-emitted"
+        B, H, W, C, _, F, stride = plan.get(r["site"]).shape
+        outn = (B * (H // stride) * (W // stride) * F
+                if r["kind"] == "mbconv" else B * H * W * F)
+        ep = r["epilogue"]
+        corr = (0 if ep is None or not ep.emits_q
+                else outn if ep.keeps_fp else -3 * outn)
+        assert r["hbm_delivered"] == r["hbm_fused"] + corr, r["site"]
+        checked += 1
+    assert checked, "no fused int8 conv sites to gate"
+    return checked
 
 
 def _print_rows(rows):
@@ -121,14 +155,20 @@ def run(batch: int = 2, autotune: bool = True):
     assert qplan.n_fused() >= plan.n_fused(), \
         "int8 plan fuses fewer sites than fp"
 
-    qref_fwd = jax.jit(lambda p, x: execute(program, p, x))
-    qfus_fwd = jax.jit(lambda p, x: execute(program, p, x, plan=qplan))
+    # batch 1 parity runs on a batch-1 program so the producer-epilogue
+    # chain (per-batch-element scales) is bit-identical to the reference
+    program1 = lower(cfg, batch=1)
+    qplan1 = plan_program(program1, qparams, autotune=autotune)
+    assert qplan1.epilogues, "int8 plan assigned no producer epilogues"
+    qref_fwd = jax.jit(lambda p, x: execute(program1, p, x))
+    qfus_fwd = jax.jit(lambda p, x: execute(program1, p, x, plan=qplan1))
     x1 = x[:1]                      # batch 1: in-kernel requant scales are
     qref = qref_fwd(qparams, x1)    # bit-identical to the reference chain
     qfus = qfus_fwd(qparams, x1)
     qerr = float(jnp.max(jnp.abs(qref - qfus)))
     argmax_ok = bool((jnp.argmax(qref, -1) == jnp.argmax(qfus, -1)).all())
-    assert qerr < 1e-2, f"int8 fused diverged: max|Δ| = {qerr:.2e}"
+    assert qerr == 0.0, \
+        f"int8 epilogue chain not bit-exact at batch 1: max|Δ| = {qerr:.2e}"
     assert argmax_ok, "int8 fused changed the top-1 label"
 
     t_qref = _time(qref_fwd, qparams, x1)
@@ -138,12 +178,23 @@ def run(batch: int = 2, autotune: bool = True):
     print(f"\n# FIX8 — {cfg.name}, int8 megakernels (batch=1 parity)")
     print(f"plan: {qplan.n_fused()}/{len(qrows)} sites fused int8 "
           f"(zero 'quantized' fallbacks)")
-    print(f"numerics: max|Δ| int8-fused vs int8-reference = {qerr:.2e}, "
+    print(f"numerics: max|Δ| int8-fused vs int8-reference = {qerr:.2e} "
+          f"(bit-exact through the producer-epilogue chain), "
           f"argmax bit-exact = {argmax_ok}")
     print(f"wall clock (CPU interpret): int8 reference {t_qref * 1e3:.0f} ms, "
           f"int8 fused {t_qfus * 1e3:.0f} ms")
     print()
     _print_rows(qrows)
+
+    # the int8 dataflow: delivered = analytic within the residual-fp
+    # correction, on the SMOKE plan (batch 2) and the batch-1 plan
+    n_gated = _delivered_gate(qplan, qrows)
+    n_gated += _delivered_gate(qplan1, plan_report(qplan1))
+    q_deliv = sum(r["hbm_delivered"] for r in qrows)
+    q_ana = sum(r["hbm_fused"] for r in qrows)
+    print(f"\nint8 dataflow: {n_gated} fused conv sites gated; delivered "
+          f"act bytes {q_deliv / 1e6:.2f} MB vs analytic steady-state "
+          f"{q_ana / 1e6:.2f} MB (residual-fp correction only)")
 
     # ---------------------------------------------------------------
     # analytic fp-fused vs int8-fused at full B1 @224 (act + weights)
@@ -156,14 +207,15 @@ def run(batch: int = 2, autotune: bool = True):
     b1_fp_plan = plan_program(b1_program, b1_params, autotune=False)
     b1_q_plan = plan_program(b1_program, quantize_efficientvit(b1_params),
                              autotune=False)
-    for p_ in (b1_fp_plan, b1_q_plan):
+    for p_, want in ((b1_fp_plan, EXPECTED_B1_FUSED_LAUNCHES),
+                     (b1_q_plan, EXPECTED_B1_FUSED_LAUNCHES_INT8)):
         lc_b1 = launch_counts(p_)
-        assert lc_b1["fused"] == EXPECTED_B1_FUSED_LAUNCHES, \
-            (lc_b1, EXPECTED_B1_FUSED_LAUNCHES)
+        assert lc_b1["fused"] == want, (lc_b1, want)
     b1_fp = plan_report(b1_fp_plan)
     b1_q = plan_report(b1_q_plan)
     assert all(r["fused"] for r in b1_q), \
         {r["site"]: r["reason"] for r in b1_q if not r["fused"]}
+    _delivered_gate(b1_q_plan, b1_q)    # full-B1 int8 dataflow coverage
     fp_tot = sum(r["hbm_total"] for r in b1_fp)
     q_tot = sum(r["hbm_total"] for r in b1_q)
     ratio = q_tot / fp_tot

@@ -37,13 +37,18 @@ from typing import Mapping
 
 __all__ = ["SiteDecision", "FusionPlan", "build_plan", "plan_program",
            "plan_report", "launch_counts", "site_traffic",
-           "EXPECTED_B1_FUSED_LAUNCHES"]
+           "EXPECTED_B1_FUSED_LAUNCHES", "EXPECTED_B1_FUSED_LAUNCHES_INT8"]
 
 # Drift gate: one fused launch per fusible site of EfficientViT-B1
 # (1 stem DSConv + 2+3 MBConv + 2 downsamples + (3+4) x (MSA + MBConv)).
 # benchmarks/e2e_latency.py and tests/test_program.py fail if a change
 # moves this number without an explicit expectation update here.
 EXPECTED_B1_FUSED_LAUNCHES = 22
+# FIX8 twin: the quantized MSA multi-scale aggregation convs run the
+# grouped int8 Pallas kernel (kernels/group_conv) instead of reference
+# XLA convs, so each fused int8 MSA site counts ``n_branches`` launches
+# (1 attention core + 1 per aggregation scale): 22 + 7 msa x 1 scale.
+EXPECTED_B1_FUSED_LAUNCHES_INT8 = 29
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +62,10 @@ class SiteDecision:
     shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D, S, C)
     precision: str = "fp"  # "fp" | "int8" — which kernel family runs
     reused: bool = False   # blocks inherited from a donor plan (no re-tune)
+    epilogue: object = None   # core.program.Epilogue for this site's OWN
+    #                           output (producer side), None -> fp
+    q_in: bool = False     # the producer's epilogue delivers this site's
+    #                        input already quantized (int8 boundary)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +73,10 @@ class FusionPlan:
     decisions: Mapping[str, SiteDecision]
     interpret: bool | None = None   # None -> backend auto-detect
     default_fuse: bool = True   # sites not in the table (standalone msa())
+    # producer-side output epilogues by site name — includes STRUCTURAL
+    # producers (e.g. a quantized stem conv feeding a fused int8 DSConv),
+    # which have no SiteDecision of their own
+    epilogues: Mapping[str, object] = dataclasses.field(default_factory=dict)
 
     def get(self, name):
         return self.decisions.get(name)
@@ -115,7 +128,7 @@ def decision_shape(site) -> tuple:
     return tuple(site.in_shape) + tuple(site.out_shape)
 
 
-def _reusable_blocks(reuse, site, prec):
+def _reusable_blocks(reuse, site, prec, impl):
     """Donor blocks for this site, or None if no safe donor exists.
 
     A donor decision qualifies when it fused the *same-named* site at
@@ -125,11 +138,21 @@ def _reusable_blocks(reuse, site, prec):
     Batch is exactly the axis serving buckets vary, so a donor plan from
     another bucket at the same resolution shares its tuned blocks and
     the new bucket skips the tuner entirely.
+
+    A kernel family that declares ``batch_dependent_tiles`` (its tuner
+    keys tiles on the batch axis too) drops the donor match down to the
+    EXACT shape including batch: handing one bucket's batch-tuned block
+    to another bucket would freeze a stale tile into the new plan.
     """
     d = reuse.get(site.name) if reuse is not None else None
     if (d is None or not d.fused or d.kind != site.kind
-            or d.precision != prec
-            or tuple(d.shape[1:]) != tuple(decision_shape(site)[1:])):
+            or d.precision != prec):
+        return None
+    shape = decision_shape(site)
+    if getattr(impl, "batch_dependent_tiles", False):
+        if tuple(d.shape) != tuple(shape):
+            return None
+    elif tuple(d.shape[1:]) != tuple(shape[1:]):
         return None
     return dict(d.blocks)
 
@@ -151,7 +174,7 @@ def _decide(site, params, *, enabled, autotune, interpret, precision,
     if impl.vmem_bytes(site) > impl.vmem_budget:
         return SiteDecision(site.name, site.kind, False, "vmem",
                             shape=shape, precision=prec)
-    blocks = _reusable_blocks(reuse, site, prec)
+    blocks = _reusable_blocks(reuse, site, prec, impl)
     reused = blocks is not None
     if not reused:
         blocks = impl.tune(site, autotune=autotune, interpret=interpret)
@@ -159,11 +182,74 @@ def _decide(site, params, *, enabled, autotune, interpret, precision,
                         precision=prec, reused=reused)
 
 
+# ---------------------------------------------------------------------------
+# producer->consumer epilogue assignment (the int8 dataflow)
+# ---------------------------------------------------------------------------
+
+def assign_epilogues(program, params, decisions):
+    """One pass over consecutive (producer, consumer) site pairs.
+
+    A consumer *wants* an int8 input when it is a fused int8 site whose
+    kernel family consumes quantized activations (``KernelImpl.
+    takes_q``) — or a structural conv whose params are quantized (the
+    ``conv2d_int8`` path).  A producer *can* emit one when it is a fused
+    int8 site whose kernel implements the act-quant epilogue
+    (``KernelImpl.emits_q``) — or a structural quantized conv, whose
+    emission XLA fuses into the conv+BN computation.  When both hold,
+    the producer gets an ``Epilogue(out_dtype="int8")`` with the
+    residual policy the pair needs: ``"post-add"`` when the producer
+    itself is residual (its fp add runs first, quantization after),
+    ``"keep-fp"`` when the consumer is residual (its fp add needs the
+    unquantized activation alongside), ``"none"`` otherwise — the pure
+    1 byte/element boundary.
+
+    Returns ``(epilogues, q_in)``: the site-name -> Epilogue map (which
+    includes structural producers) and the set of consumer names whose
+    input arrives quantized.
+    """
+    from repro.core.program import Epilogue, params_at
+    from repro.kernels.registry import get_kernel
+
+    def _quantized_conv(site):
+        if site.kind != "conv_bn" or not site.param_path:
+            return False
+        p = params_at(params, site.param_path)
+        return isinstance(p, dict) and "qconv" in p
+
+    def _fused_int8(site):
+        d = decisions.get(site.name)
+        return d is not None and d.fused and d.precision == "int8"
+
+    def _consumes_q(site):
+        if site.kind == "conv_bn":
+            return _quantized_conv(site)
+        return _fused_int8(site) and getattr(
+            get_kernel(site.kind, "int8"), "takes_q", False)
+
+    def _emits_q(site):
+        if site.kind == "conv_bn":
+            return _quantized_conv(site)
+        return _fused_int8(site) and getattr(
+            get_kernel(site.kind, "int8"), "emits_q", False)
+
+    epilogues: dict[str, object] = {}
+    q_in: set[str] = set()
+    for prod, cons in zip(program.sites, program.sites[1:]):
+        if not (_consumes_q(cons) and _emits_q(prod)):
+            continue
+        residual = ("post-add" if prod.residual
+                    else "keep-fp" if cons.residual else "none")
+        epilogues[prod.name] = Epilogue("int8", "dynamic", residual)
+        q_in.add(cons.name)
+    return epilogues, q_in
+
+
 def plan_program(program, params, *, fuse_dsconv: bool = True,
                  fuse_mbconv: bool = True, fuse_msa: bool = True,
                  autotune: bool = True, interpret: bool | None = None,
                  precision: str = "auto",
-                 reuse: FusionPlan | None = None) -> FusionPlan:
+                 reuse: FusionPlan | None = None,
+                 epilogues: bool = True) -> FusionPlan:
     """Freeze per-site routing for a lowered ``core.program.Program``.
 
     ``precision``: "auto" (default) matches each site's params — fp32
@@ -177,7 +263,16 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     Sites whose per-sample geometry matches a fused donor decision
     inherit its block choices without consulting the tuner — their
     decisions carry ``reused=True``.  Sites with no safe donor (other
-    resolution, precision mismatch, donor fell back) tune normally.
+    resolution, precision mismatch, donor fell back, or an exact-batch
+    mismatch for a ``batch_dependent_tiles`` kernel family) tune
+    normally.
+
+    ``epilogues`` (default on) runs the producer->consumer pass
+    (``assign_epilogues``) after the per-site decisions: producers of
+    fused int8 consumers get an int8 ``Epilogue`` so the executed
+    program delivers 1 byte/element activation boundaries (residual
+    adds stay fp).  ``False`` keeps the legacy consumer-side-quantize
+    dataflow — an A/B lever the serving executor cache keys on.
 
     Runs outside jit: autotune sweeps (when ``autotune=True`` and the
     cache is cold) time the real kernels on synthetic inputs here, never
@@ -197,14 +292,25 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
             enabled=enabled.get(site.kind, True),  # new kinds default on
             autotune=autotune, interpret=interpret, precision=precision,
             reuse=reuse)
-    return FusionPlan(decisions=decisions, interpret=interpret)
+    ep_map: dict[str, object] = {}
+    if epilogues:
+        ep_map, q_in = assign_epilogues(program, params, decisions)
+        for name, d in decisions.items():
+            ep = ep_map.get(name)
+            arrives_q = name in q_in
+            if ep is not None or arrives_q:
+                decisions[name] = dataclasses.replace(
+                    d, epilogue=ep, q_in=arrives_q)
+    return FusionPlan(decisions=decisions, interpret=interpret,
+                      epilogues=ep_map)
 
 
 def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
                fuse_dsconv: bool = True, fuse_mbconv: bool = True,
                fuse_msa: bool = True, autotune: bool = True,
                interpret: bool | None = None,
-               precision: str = "auto") -> FusionPlan:
+               precision: str = "auto",
+               epilogues: bool = True) -> FusionPlan:
     """Back-compat entry point: lower the config, then plan it.
 
     Equivalent to ``plan_program(lower(cfg, batch=..., image_size=...),
@@ -216,7 +322,7 @@ def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
     return plan_program(program, params, fuse_dsconv=fuse_dsconv,
                         fuse_mbconv=fuse_mbconv, fuse_msa=fuse_msa,
                         autotune=autotune, interpret=interpret,
-                        precision=precision)
+                        precision=precision, epilogues=epilogues)
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +413,12 @@ def _site_accounting(kind, shape, precision):
     elif kind == "msa":
         BH, N, D, n_branches = shape[:4]
         unf, fus = _msa_bytes(BH, N, D)
-        launches = (2 * n_branches, 1)             # old per-branch 2-pass
+        # FIX8: the multi-scale aggregation convs run the grouped int8
+        # Pallas kernel (kernels/group_conv) — one fused launch per
+        # scale next to the single attention-core launch; at fp they
+        # remain XLA convs (uncounted, like the reference path's)
+        fused_launches = n_branches if precision == "int8" else 1
+        launches = (2 * n_branches, fused_launches)  # old per-branch 2-pass
     else:
         # registered non-builtin kind: no analytic byte model yet —
         # count one launch either way, contribute zero bytes rather
@@ -316,19 +427,61 @@ def _site_accounting(kind, shape, precision):
     return unf, fus, _weight_bytes(kind, shape, precision), launches
 
 
-def site_traffic(site, *, precision: str = "fp") -> dict:
+def _delivered_bytes(kind, shape, fused, unf, fus, q_in, epilogue):
+    """Activation bytes the executed program ACTUALLY moves at this
+    site, derived from the epilogue assignments (not the steady-state
+    assumption): the input boundary is 1 byte/element only when the
+    producer's epilogue emitted it (``q_in``); the output boundary is
+    what this site's own epilogue writes — int8 (1), fp (4), or both
+    (5: the residual-fp correction).  Conv kinds only; the MSA core
+    accounting (and unknown kinds) is precision-independent and passes
+    through the analytic number.
+    """
+    if not fused or kind not in ("mbconv", "dsconv"):
+        return fus if fused else unf
+    B, H, W, C, _, F, stride = shape
+    xn = B * H * W * C
+    # same output geometry as _mbconv_bytes/_dsconv_bytes respectively
+    outn = (B * (H // stride) * (W // stride) * F if kind == "mbconv"
+            else B * H * W * F)
+    in_b = xn * (1 if q_in else 4)
+    if epilogue is None or not epilogue.emits_q:
+        out_b = outn * 4
+    else:
+        out_b = outn * (1 + (4 if epilogue.keeps_fp else 0))
+    return in_b + out_b
+
+
+def site_traffic(site, *, precision: str = "fp", q_in: bool = False) -> dict:
     """Analytic HBM/launch accounting straight from a ``Site`` — the
     registry-side twin of ``plan_report`` rows, used to assert the two
-    derivations (IR geometry vs frozen decision shapes) cannot drift."""
+    derivations (IR geometry vs frozen decision shapes) cannot drift.
+
+    The delivered column reads the site's OWN ``epilogue`` field (use a
+    plan-annotated program, ``Program.with_epilogues``) plus ``q_in``
+    for the input side, since the input boundary's dtype lives on the
+    producer's epilogue."""
+    shape = decision_shape(site)
     unf, fus, w_bytes, launches = _site_accounting(
-        site.kind, decision_shape(site), precision)
+        site.kind, shape, precision)
+    ep = site.epilogue if site.epilogue.emits_q else None
     return {"site": site.name, "kind": site.kind, "hbm_unfused": unf,
             "hbm_fused": fus, "hbm_w": w_bytes,
+            "hbm_delivered": _delivered_bytes(site.kind, shape, True, unf,
+                                              fus, q_in, ep),
             "launches_ref": launches[0], "launches_fused": launches[1]}
 
 
 def plan_report(plan: FusionPlan) -> list[dict]:
-    """Per-site analytic HBM bytes (unfused vs fused) + launch counts."""
+    """Per-site analytic HBM bytes (unfused vs fused) + launch counts.
+
+    ``hbm_fused`` stays the steady-state analytic number (1 byte/element
+    int8 fused-site input, fp32 out); ``hbm_delivered`` is what the
+    executed program moves given the plan's epilogue assignments — the
+    two agree within the residual-fp correction once producer-side
+    emission covers the chain, which is exactly what
+    ``benchmarks/e2e_latency.py`` gates.
+    """
     rows = []
     for d in plan.decisions.values():
         unf, fus, w_bytes, launches = _site_accounting(d.kind, d.shape,
@@ -341,6 +494,10 @@ def plan_report(plan: FusionPlan) -> list[dict]:
             "saving_x": unf / fus if d.fused and fus else 1.0,
             "hbm_w": w_bytes,
             "hbm_total": hbm_fused + w_bytes,
+            "hbm_delivered": _delivered_bytes(d.kind, d.shape, d.fused,
+                                              unf, fus, d.q_in, d.epilogue),
+            "q_in": d.q_in,
+            "epilogue": d.epilogue,
             "launches_ref": launches[0],
             "launches_fused": launches[1] if d.fused else launches[0],
         })

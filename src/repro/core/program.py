@@ -38,8 +38,52 @@ from repro.core.efficientvit import (
     B1, EfficientViTConfig, OpRecord, _act, conv_bn_act, dsconv, mbconv)
 from repro.core.relu_attention import MSAConfig, msa
 
-__all__ = ["Site", "Program", "lower", "execute", "manifest",
-           "FUSIBLE_KINDS", "params_at"]
+__all__ = ["Epilogue", "EPILOGUE_FP", "Site", "Program", "lower", "execute",
+           "manifest", "FUSIBLE_KINDS", "params_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Typed producer-side output descriptor of one ``Site``.
+
+    The precision boundary of the int8 dataflow lives HERE, between
+    producer and consumer, not inside each kernel: when the fusion
+    planner's producer->consumer pass (``core.fusion.plan_program``)
+    assigns ``out_dtype="int8"``, the producer emits the quantized
+    activation itself (in-kernel for the Pallas megakernels, XLA-fused
+    for structural convs) and the consumer never pays the extra fp32
+    HBM read + standalone quantize that the pre-epilogue pipeline did.
+
+    ``scale``     act-quant scale source: ``"none"`` (fp output) or
+                  ``"dynamic"`` (per-batch-element symmetric absmax —
+                  identical to the reference per-tensor scheme at
+                  batch 1, within quantization noise otherwise).
+    ``residual``  residual policy:
+                  ``"none"``     pure int8 emission — the fp activation
+                                 never materializes past the kernel;
+                  ``"post-add"`` the site's OWN residual add runs fp;
+                                 quantization applies after it (XLA,
+                                 fused into the add);
+                  ``"keep-fp"``  the CONSUMER's residual add needs the
+                                 fp activation — the producer emits
+                                 both fp and int8 (the residual-fp
+                                 correction in the HBM accounting).
+    """
+    out_dtype: str = "fp32"    # "fp32" | "int8"
+    scale: str = "none"        # "none" | "dynamic"
+    residual: str = "none"     # "none" | "post-add" | "keep-fp"
+
+    @property
+    def emits_q(self) -> bool:
+        return self.out_dtype == "int8"
+
+    @property
+    def keeps_fp(self) -> bool:
+        """The fp activation also crosses the site boundary."""
+        return self.out_dtype == "fp32" or self.residual != "none"
+
+
+EPILOGUE_FP = Epilogue()
 
 # Structural kinds ``execute`` interprets inline; every OTHER kind is
 # fusible — it plans through the kernel registry, so a newly registered
@@ -69,6 +113,9 @@ class Site:
     residual: bool = False     # out = x + op(x)
     act: bool = False          # trailing Hardswish (conv_bn / fc sites)
     attrs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    epilogue: Epilogue = EPILOGUE_FP   # producer-side output descriptor
+    #                          (assigned by core.fusion.plan_program's
+    #                          producer->consumer pass; lower() emits fp)
 
     @property
     def local_name(self) -> str:
@@ -101,6 +148,22 @@ class Program:
         planned without touching this module."""
         return tuple(s for s in self.sites
                      if s.kind not in STRUCTURAL_KINDS)
+
+    def with_epilogues(self, plan) -> "Program":
+        """The program annotated with the plan's epilogue assignments.
+
+        Returns a NEW program whose sites carry their assigned
+        ``Epilogue`` (``core.fusion.plan_program``'s producer->consumer
+        pass); consumers of the epilogue *field* — the serving executor
+        cache, the delivered-HBM accounting in ``core.fusion``, the
+        cycle model — read it from here so the dtype each boundary
+        actually delivers is inspectable from the program itself.
+        """
+        eps = getattr(plan, "epilogues", None) or {}
+        sites = tuple(
+            dataclasses.replace(s, epilogue=eps[s.name]) if s.name in eps
+            else s for s in self.sites)
+        return Program(self.cfg, self.batch, self.image_size, sites)
 
 
 def params_at(params, path: Tuple[Any, ...]):
@@ -238,27 +301,42 @@ def _fc(p, h):
     return jnp.einsum("bc,cf->bf", h, p["w"].astype(h.dtype))
 
 
-def _dispatch(site: Site, p, y, plan, cfg, attention_fn):
+def _dispatch(site: Site, p, y, plan, cfg, attention_fn, kernel_ep):
     """Fusible site: registry kernel when the plan says so, else reference.
 
     Mirrors the legacy dispatch contract: conv sites fall back when their
-    decision is absent or unfused; MSA sites route through the ``msa``
-    shim so ``plan.default_fuse`` applies to unknown names, an explicitly
-    overridden ``attention_fn`` wins over the plan, and an int8-fused
-    decision keeps its W8A8 projections even under an overridden
-    attention core.  Kinds beyond the built-ins resolve through the
-    registry: ``apply`` when fused, the impl's ``ref`` otherwise.
+    decision is absent or unfused; unplanned MSA sites route through the
+    ``msa`` shim so ``plan.default_fuse`` applies to unknown names, an
+    explicitly overridden ``attention_fn`` wins over the plan, and an
+    int8-fused decision keeps its W8A8 projections even under an
+    overridden attention core.  Kinds beyond the built-ins resolve
+    through the registry: ``apply`` when fused, the impl's ``ref``
+    otherwise.  ``y`` may be a ``QTensor`` from the producer's epilogue
+    (only ever assigned to fused int8 consumers); ``kernel_ep`` is the
+    in-kernel part of this site's own epilogue (``None`` for fp output
+    or a post-add policy, which ``execute`` applies after the residual).
     """
+    from repro.core.quantization import act_fp
+
+    d = plan.get(site.name) if plan is not None else None
+    # the kwarg is only passed when an epilogue is actually assigned, so
+    # registered impls predating the epilogue contract stay compatible
+    ep_kw = {} if kernel_ep is None else {"epilogue": kernel_ep}
     if site.kind == "msa":
+        if attention_fn is None and d is not None and d.fused:
+            from repro.kernels.registry import get_kernel
+            impl = get_kernel(site.kind, d.precision)
+            return impl.apply(p, y, site, d, interpret=plan.interpret,
+                              **ep_kw)
         mcfg = MSAConfig(site.in_shape[-1], site.attrs["head_dim"],
                          site.attrs["scales"], cfg.dtype)
         kw = {} if attention_fn is None else {"attention_fn": attention_fn}
-        return msa(p, y, mcfg, plan=plan, site=site.name, **kw)
-    d = plan.get(site.name) if plan is not None else None
+        return msa(p, act_fp(y), mcfg, plan=plan, site=site.name, **kw)
     if d is not None and d.fused:
         from repro.kernels.registry import get_kernel
         impl = get_kernel(site.kind, d.precision)
-        return impl.apply(p, y, site, d, interpret=plan.interpret)
+        return impl.apply(p, y, site, d, interpret=plan.interpret, **ep_kw)
+    y = act_fp(y)
     if site.kind == "dsconv":
         return dsconv(p, y, stride=site.stride)
     if site.kind == "mbconv":
@@ -273,24 +351,49 @@ def execute(program: Program, params, x, *, plan=None, attention_fn=None):
     ``plan`` is an optional ``core.fusion.FusionPlan`` (built by
     ``core.fusion.plan_program`` over the same ``Program``) routing
     fusible sites through the registry's Pallas megakernels at the
-    precision each decision carries.  ``plan=None`` runs the reference
-    ops — byte-identical to the pre-IR ``efficientvit()`` forward.
+    precision each decision carries, and carrying the producer->consumer
+    ``Epilogue`` assignments that make producers emit int8 activations
+    for fused int8 consumers (``QTensor`` boundaries; residual adds stay
+    fp per each epilogue's residual policy).  ``plan=None`` runs the
+    reference ops — byte-identical to the pre-IR ``efficientvit()``
+    forward.  An explicit ``attention_fn`` override disables epilogue
+    emission (the int8 dataflow only runs on the default fused path).
     """
+    from repro.core.quantization import QTensor, act_fp, quantize_act
+
     cfg = program.cfg
+    epilogues = (getattr(plan, "epilogues", None) or {}) \
+        if attention_fn is None else {}
     y = x
     for site in program.sites:
         p = params_at(params, site.param_path) if site.param_path else None
+        ep = epilogues.get(site.name)
         if site.kind == "conv_bn":
             y = conv_bn_act(p, y, stride=site.stride, act=site.act)
+            if ep is not None and ep.emits_q:
+                # structural producer: XLA fuses the act-quant into the
+                # conv/BN epilogue — the boundary tensor is int8
+                y = quantize_act(y, keep_fp=ep.residual != "none")
         elif site.kind == "gap":
-            y = jnp.mean(y, axis=(1, 2))
+            y = jnp.mean(act_fp(y), axis=(1, 2))
         elif site.kind == "fc":
-            y = _fc(p, y)
+            y = _fc(p, act_fp(y))
             if site.act:
                 y = _act(y)
         else:
-            out = _dispatch(site, p, y, plan, cfg, attention_fn)
-            y = y + out if site.residual else out
+            # the kernel only runs the epilogue itself for non-residual
+            # sites; a residual producer's quantize applies post-add
+            kernel_ep = ep if (ep is not None and ep.emits_q
+                               and not site.residual) else None
+            out = _dispatch(site, p, y, plan, cfg, attention_fn, kernel_ep)
+            if site.residual:
+                s = act_fp(y) + act_fp(out)
+                if ep is not None and ep.emits_q:   # "post-add" policy
+                    y = quantize_act(s, keep_fp=True)
+                else:
+                    y = s
+            else:
+                y = out     # QTensor when the kernel ran its epilogue
     return y
 
 

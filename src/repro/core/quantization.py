@@ -18,11 +18,64 @@ the fp32 and FIX8 networks share one code path.
 """
 from __future__ import annotations
 
+from typing import NamedTuple, Optional
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.layers.norms import bn_fold_scale_bias
+
+
+class QTensor(NamedTuple):
+    """A quantized activation crossing a producer->consumer site boundary.
+
+    The carrier of the int8 dataflow (``core.program.Epilogue``): the
+    producer's epilogue emits ``q`` (int8) with its per-batch-element
+    symmetric ``scale`` so the consumer kernel never re-reads the fp32
+    activation from HBM to quantize it.  ``fp`` is the fp activation and
+    is only populated when the epilogue's residual-policy demands it
+    (the consumer's residual add must run in full precision, or the
+    producer's own residual add already produced it).
+    """
+    q: jax.Array                      # int8, same shape as the activation
+    scale: jax.Array                  # fp32 () or (B,) per-batch scales
+    fp: Optional[jax.Array] = None    # fp activation (residual policy)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def scale_col(self):
+        """Scale broadcastable against the leading batch axis: (B, 1...)."""
+        s = jnp.asarray(self.scale, jnp.float32).reshape(-1)
+        return jnp.broadcast_to(s, (self.q.shape[0],))
+
+
+def act_fp(y):
+    """The fp view of an activation: QTensor -> its kept fp tensor."""
+    if isinstance(y, QTensor):
+        if y.fp is None:
+            raise ValueError(
+                "QTensor without a kept fp activation reached a consumer "
+                "that needs full precision — epilogue assignment bug")
+        return y.fp
+    return y
+
+
+def quantize_act(x, *, keep_fp: bool = False, bits: int = 8) -> QTensor:
+    """Producer-side activation quantization: per-batch-element symmetric
+    absmax (identical to ``quantize_tensor``'s per-tensor scheme at
+    batch 1, which is what keeps the fused int8 chain bit-exact vs the
+    reference there).  ``keep_fp`` carries the fp tensor alongside for a
+    downstream residual add."""
+    qmax = 2 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=tuple(range(1, x.ndim)))
+    scale = jnp.maximum(absmax, 1e-8) / qmax          # (B,)
+    col = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+    q = jnp.clip(jnp.round(xf / col), -qmax - 1, qmax).astype(jnp.int8)
+    return QTensor(q, scale, x if keep_fp else None)
 
 
 def quantize_tensor(x, axis=None, bits: int = 8):
@@ -91,8 +144,19 @@ def quantize_conv_bn(p, eps: float = 1e-5):
 
 def conv2d_int8(qp, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
     """FIX8 conv: dynamic per-tensor act quant, int8 conv, int32 accumulate,
-    fp32 dequant + bias.  Mirrors layers.conv.conv2d semantics."""
-    xq, sx = quantize_tensor(x)
+    fp32 dequant + bias.  Mirrors layers.conv.conv2d semantics.
+
+    ``x`` may be a ``QTensor`` emitted by the producer's epilogue — the
+    activation quantization is then skipped entirely (its per-batch
+    scales broadcast through the dequant), which is the int8-dataflow
+    route for structural quantized convs (e.g. ``head.conv``)."""
+    if isinstance(x, QTensor):
+        xq = x.q
+        sx = x.scale_col().reshape(-1, 1, 1, 1)
+        out_dtype = x.fp.dtype if x.fp is not None else jnp.float32
+    else:
+        xq, sx = quantize_tensor(x)
+        out_dtype = x.dtype
     acc = lax.conv_general_dilated(
         xq, qp["q"],
         window_strides=(stride, stride), padding=padding,
@@ -101,7 +165,7 @@ def conv2d_int8(qp, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
         preferred_element_type=jnp.int32,
     )
     y = acc.astype(jnp.float32) * (sx * qp["scale"][None, None, None, :])
-    return (y + qp["bias"][None, None, None, :]).astype(x.dtype)
+    return (y + qp["bias"][None, None, None, :]).astype(out_dtype)
 
 
 def matmul_int8(x, qw, w_scale):

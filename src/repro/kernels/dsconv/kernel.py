@@ -23,7 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import default_interpret, tpu_compiler_params
-from repro.kernels.quant import requantize_i8
+from repro.kernels.quant import requantize_i8, xs_per_batch
 
 
 def _dsconv_kernel(x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, o_ref,
@@ -161,14 +161,14 @@ def dsconv_fused_int8(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
     Fp = pw_q.shape[1]
     nf = Fp // bf
     xp = jnp.pad(x_q, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    xs = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
+    xs = xs_per_batch(x_scale, B)
 
     out = pl.pallas_call(
         functools.partial(_dsconv_int8_kernel, stride=stride, act=act),
         grid=(B, nf),
         in_specs=[
             pl.BlockSpec((1, H + 2, W + 2, C), lambda b, j: (b, 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
             pl.BlockSpec((3, 3, C), lambda b, j: (0, 0, 0)),
             pl.BlockSpec((1, C), lambda b, j: (0, 0)),
             pl.BlockSpec((1, C), lambda b, j: (0, 0)),
@@ -188,3 +188,100 @@ def dsconv_fused_int8(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
     )(xp, xs, dw_q, dw_s.reshape(1, C), dw_b.reshape(1, C), pw_q, pw_sp,
       pw_bp)
     return out[..., :F]
+
+
+# ---------------------------------------------------------------------------
+# FIX8 producer-epilogue variant: the kernel emits the int8 activation
+# ---------------------------------------------------------------------------
+
+def _dsconv_int8_emit_kernel(x_ref, xs_ref, dww_ref, dws_ref, dwb_ref,
+                             pww_ref, pws_ref, pwb_ref, *refs,
+                             stride: int, act: bool, keep_fp: bool):
+    oq_ref, os_ref = refs[0], refs[1]
+    ofp_ref = refs[2] if keep_fp else None
+    Hp, Wp, C = x_ref.shape[1], x_ref.shape[2], x_ref.shape[3]
+    H, W = Hp - 2, Wp - 2
+    Ho, Wo = H // stride, W // stride
+
+    # VPU stage + in-kernel requant: identical arithmetic to
+    # _dsconv_int8_kernel's j == 0 branch
+    xp = x_ref[0].astype(jnp.int32)
+    acc = jnp.zeros((H, W, C), jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            acc += xp[dy:dy + H, dx:dx + W, :] \
+                * dww_ref[dy, dx].astype(jnp.int32)[None, None, :]
+    y = acc.astype(jnp.float32) * (xs_ref[0, 0] * dws_ref[0])[None, None, :] \
+        + dwb_ref[0][None, None, :]
+    if stride > 1:
+        y = y[stride - 1::stride, stride - 1::stride, :]
+    if act:
+        y = jax.nn.hard_swish(y)
+    dq, s_dw = requantize_i8(y.reshape(Ho * Wo, C))
+
+    # MXU stage over the FULL c_out extent, then the act-quant epilogue
+    acc2 = jax.lax.dot_general(dq, pww_ref[...], (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    out = acc2.astype(jnp.float32) * (s_dw * pws_ref[0])[None, :] \
+        + pwb_ref[0][None, :]
+    if keep_fp:
+        ofp_ref[0] = out.reshape(Ho, Wo, -1)
+    q, s_out = requantize_i8(out)
+    oq_ref[0] = q.reshape(Ho, Wo, -1)
+    os_ref[0, 0] = s_out
+
+
+def dsconv_fused_int8_emit(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b,
+                           *, stride: int = 1, act: bool = True,
+                           keep_fp: bool = False,
+                           interpret: bool | None = None):
+    """FIX8 DSConv with the producer-side act-quant epilogue fused in.
+
+    Same inputs as ``dsconv_fused_int8``; returns ``(q, scales)`` — q:
+    (B, Ho, Wo, F) int8, scales: (B,) per-batch-element — or
+    ``(q, scales, out_fp)`` when ``keep_fp``.  Bit-identical to
+    quantizing ``dsconv_fused_int8``'s output per batch element: the
+    epilogue quantizes the same fp32 projection in-kernel before it
+    leaves VMEM.
+    """
+    interpret = default_interpret(interpret)
+    B, H, W, C = x_q.shape
+    F = pw_q.shape[1]
+    assert x_q.dtype == jnp.int8 and pw_q.dtype == jnp.int8
+    assert H % stride == 0 and W % stride == 0
+    Ho, Wo = H // stride, W // stride
+    xp = jnp.pad(x_q, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    xs = xs_per_batch(x_scale, B)
+
+    out_shape = [jax.ShapeDtypeStruct((B, Ho, Wo, F), jnp.int8),
+                 jax.ShapeDtypeStruct((B, 1), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, Ho, Wo, F), lambda b: (b, 0, 0, 0)),
+                 pl.BlockSpec((1, 1), lambda b: (b, 0))]
+    if keep_fp:
+        out_shape.append(jax.ShapeDtypeStruct((B, Ho, Wo, F), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, Ho, Wo, F), lambda b: (b, 0, 0, 0)))
+
+    outs = pl.pallas_call(
+        functools.partial(_dsconv_int8_emit_kernel, stride=stride, act=act,
+                          keep_fp=keep_fp),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H + 2, W + 2, C), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((3, 3, C), lambda b: (0, 0, 0)),
+            pl.BlockSpec((1, C), lambda b: (0, 0)),
+            pl.BlockSpec((1, C), lambda b: (0, 0)),
+            pl.BlockSpec((C, F), lambda b: (0, 0)),
+            pl.BlockSpec((1, F), lambda b: (0, 0)),
+            pl.BlockSpec((1, F), lambda b: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xp, xs, dw_q, dw_s.reshape(1, C), dw_b.reshape(1, C), pw_q,
+      pw_s.reshape(1, F), pw_b.reshape(1, F))
+    if keep_fp:
+        return outs[0], outs[1].reshape(B), outs[2]
+    return outs[0], outs[1].reshape(B)

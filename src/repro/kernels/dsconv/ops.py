@@ -15,10 +15,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import fold_bn_into_conv
+from repro.core.quantization import QTensor, fold_bn_into_conv, quantize_act
 from repro.kernels.autotune import autotune, shape_key
 from repro.kernels.compat import default_interpret
-from repro.kernels.dsconv.kernel import dsconv_fused, dsconv_fused_int8
+from repro.kernels.dsconv.kernel import (
+    dsconv_fused, dsconv_fused_int8, dsconv_fused_int8_emit)
 from repro.kernels.dsconv.ref import dsconv_int8_ref, dsconv_ref
 from repro.kernels.registry import KernelBase, register
 
@@ -117,13 +118,39 @@ def dsconv_op_int8(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
                              interpret=interpret)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "act", "keep_fp", "interpret"))
+def dsconv_op_int8_emit(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
+                        stride: int = 1, act: bool = True,
+                        keep_fp: bool = False,
+                        interpret: bool | None = None):
+    B, H, W, C = x_q.shape
+    F = pw_q.shape[-1]
+    # full-c_out emit step: fp32 projection + int8 out block (+ fp32 out
+    # under keep-fp) beyond what the c_out-tiled byte model counts
+    outn = (H // stride) * (W // stride) * F
+    emit_extra = outn * (5 + (4 if keep_fp else 0))
+    if dsconv_vmem_bytes(H, W, C, stride, dtype="i8") + emit_extra \
+            > VMEM_BUDGET_BYTES:
+        out = dsconv_int8_ref(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s,
+                              pw_b, stride=stride, act=act)
+        qt = quantize_act(out, keep_fp=keep_fp)
+        return ((qt.q, qt.scale, qt.fp) if keep_fp else (qt.q, qt.scale))
+    return dsconv_fused_int8_emit(x_q, x_scale, dw_q, dw_s, dw_b, pw_q,
+                                  pw_s, pw_b, stride=stride, act=act,
+                                  keep_fp=keep_fp, interpret=interpret)
+
+
 def dsconv_apply_int8(params, x, *, stride: int = 1, block_f: int = 128,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, epilogue=None):
     """Quantized {'dw','pw'} pair (``qconv`` subblocks) -> FIX8 kernel.
 
-    The input is quantized here with the whole-tensor absmax the
-    reference ``conv2d_int8`` uses (bit-identical first stage); the DW
-    output is requantized in-kernel.
+    ``x`` is the fp activation — quantized here with the whole-tensor
+    absmax the reference ``conv2d_int8`` uses (bit-identical first
+    stage) — or a producer-emitted ``QTensor`` (no quantize, no fp32
+    HBM read).  An int8 ``epilogue`` makes this kernel emit its own
+    output quantized in-kernel (``QTensor`` return).  The DW output is
+    requantized in-kernel either way.
     """
     from repro.core.quantization import quantize_tensor
 
@@ -131,11 +158,23 @@ def dsconv_apply_int8(params, x, *, stride: int = 1, block_f: int = 128,
     qp = params["pw"]["qconv"]
     dw_q = qd["q"][:, :, 0, :]         # (3,3,1,C) -> (3,3,C)
     pw_q = qp["q"][0, 0]               # (1,1,C,F) -> (C,F)
-    x_q, x_scale = quantize_tensor(x)
-    out = dsconv_op_int8(x_q, x_scale, dw_q, qd["scale"], qd["bias"],
-                         pw_q, qp["scale"], qp["bias"], stride=stride,
-                         act=True, block_f=block_f, interpret=interpret)
-    return out.astype(x.dtype)
+    if isinstance(x, QTensor):
+        x_q, x_scale = x.q, x.scale
+        out_dtype = x.fp.dtype if x.fp is not None else jnp.float32
+    else:
+        x_q, x_scale = quantize_tensor(x)
+        out_dtype = x.dtype
+    args = (x_q, x_scale, dw_q, qd["scale"], qd["bias"], pw_q, qp["scale"],
+            qp["bias"])
+    if epilogue is not None and epilogue.emits_q:
+        keep_fp = epilogue.residual == "keep-fp"
+        outs = dsconv_op_int8_emit(*args, stride=stride, act=True,
+                                   keep_fp=keep_fp, interpret=interpret)
+        fp = outs[2].astype(out_dtype) if keep_fp else None
+        return QTensor(outs[0], outs[1], fp)
+    out = dsconv_op_int8(*args, stride=stride, act=True, block_f=block_f,
+                         interpret=interpret)
+    return out.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -159,24 +198,32 @@ class DsconvKernel(KernelBase):
                           interpret=interpret, dtype=self.dtype)
         return {"block_f": bf}
 
-    def apply(self, params, x, site, decision=None, *, interpret=None):
+    def apply(self, params, x, site, decision=None, *, interpret=None,
+              epilogue=None):
         blocks = decision.blocks if decision is not None else {}
         return dsconv_apply(params, x, stride=site.stride,
                             block_f=blocks.get("block_f", 128),
                             interpret=interpret)
 
-    def ref(self, params, x, site, **kw):
+    def ref(self, params, x, site, *, epilogue=None, **kw):
         from repro.core.efficientvit import dsconv
-        return dsconv(params, x, stride=site.stride)
+        out = dsconv(params, x, stride=site.stride)
+        if epilogue is not None and epilogue.emits_q:
+            return quantize_act(out, keep_fp=epilogue.residual == "keep-fp")
+        return out
 
 
 @register
 class DsconvInt8Kernel(DsconvKernel):
-    """(dsconv, int8): FIX8 twin with in-kernel requantization."""
+    """(dsconv, int8): FIX8 twin with in-kernel requantization and
+    QTensor boundaries on both sides (the int8 dataflow)."""
     precision, dtype = "int8", "i8"
+    takes_q = True
+    emits_q = True
 
-    def apply(self, params, x, site, decision=None, *, interpret=None):
+    def apply(self, params, x, site, decision=None, *, interpret=None,
+              epilogue=None):
         blocks = decision.blocks if decision is not None else {}
         return dsconv_apply_int8(params, x, stride=site.stride,
                                  block_f=blocks.get("block_f", 128),
-                                 interpret=interpret)
+                                 interpret=interpret, epilogue=epilogue)

@@ -40,11 +40,15 @@ def dsconv_int8_ref(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
     int32 depthwise MACs, fp32 dequant + Hardswish, dynamic symmetric
     requantization per batch element, int32 pointwise GEMM — the
     ``core.quantization.conv2d_int8`` chain with the kernel's
-    per-batch-element inter-stage scale.
+    per-batch-element inter-stage scale.  ``x_scale`` may be a scalar
+    or per-batch (B,) scales (the producer-epilogue convention).
     """
     from repro.core.quantization import quantize_tensor
+    from repro.kernels.quant import xs_per_batch_vec
 
-    def one(xi):                                    # (H, W, C) int8
+    sx_b = xs_per_batch_vec(x_scale, x_q.shape[0])
+
+    def one(xi, x_scale):                           # (H, W, C) int8
         H, W, C = xi.shape
         xp = jnp.pad(xi, ((1, 1), (1, 1), (0, 0))).astype(jnp.int32)
         acc = jnp.zeros((H, W, C), jnp.int32)
@@ -64,4 +68,4 @@ def dsconv_int8_ref(x_q, x_scale, dw_q, dw_s, dw_b, pw_q, pw_s, pw_b, *,
         return acc2.astype(jnp.float32) * (s_dw * pw_s)[None, None, :] \
             + pw_b[None, None, :]
 
-    return jax.vmap(one)(x_q)
+    return jax.vmap(one)(x_q, sx_b)

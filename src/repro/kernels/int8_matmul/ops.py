@@ -1,14 +1,17 @@
 """Jitted wrappers around the Pallas W8A8 GEMM.
 
 ``linear_w8a8`` quantizes activations on the fly (dynamic per-tensor
-absmax) or, when a calibrated static ``x_scale`` from
-``core.quantization.calibrate_act_scale`` is supplied, skips the
-activation reduction entirely — the serving-time fast path.
+absmax), consumes a producer-emitted ``QTensor`` directly (the int8
+dataflow: no activation quantize at all), or, when a calibrated static
+``x_scale`` from ``core.quantization.calibrate_act_scale`` is supplied,
+skips the activation reduction entirely — the serving-time fast path.
 
 ``conv1x1_w8a8`` runs a quantized 1x1 convolution (a ``qconv`` dict from
 ``core.quantization.quantize_efficientvit``) as the int8 GEMM with the
 per-output-channel weight scales folded into the dequant epilogue — the
-route the fusion plan uses for MSA QKV/output projections.
+route the fusion plan uses for MSA QKV/output projections.  An int8
+``epilogue`` makes it the producer: the GEMM quantizes its own output
+in-kernel (``int8_matmul_emit``) and returns a ``QTensor``.
 """
 from __future__ import annotations
 
@@ -17,8 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import quantize_tensor, quantize_with_scale
-from repro.kernels.int8_matmul.kernel import int8_matmul
+from repro.core.quantization import (
+    QTensor, quantize_tensor, quantize_with_scale)
+from repro.kernels.int8_matmul.kernel import int8_matmul, int8_matmul_emit
 from repro.kernels.registry import register
 from repro.kernels.relu_attn.ops import MsaKernel
 
@@ -26,38 +30,84 @@ from repro.kernels.relu_attn.ops import MsaKernel
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def linear_w8a8(x, w_q, w_scale, *, x_scale=None,
                 interpret: bool | None = None):
-    """x: (..., K) fp; w_q: (K, N) int8; w_scale: (N,) -> (..., N) fp32.
+    """x: (..., K) fp — or a ``QTensor`` whose per-batch scales expand to
+    per-row GEMM scales; w_q: (K, N) int8; w_scale: (N,) -> (..., N)
+    fp32.
 
     ``x_scale=None``: dynamic per-tensor activation quantization (absmax
     recomputed every call).  Passing a calibrated static ``x_scale``
-    skips the absmax reduction and clips to the calibrated range.
+    skips the absmax reduction and clips to the calibrated range.  A
+    ``QTensor`` input skips quantization entirely (producer epilogue).
     """
-    lead = x.shape[:-1]
-    K = x.shape[-1]
-    x2 = x.reshape(-1, K)
-    if x_scale is None:
-        x_q, x_scale = quantize_tensor(x2)
+    if isinstance(x, QTensor):
+        lead = x.q.shape[:-1]
+        K = x.q.shape[-1]
+        x_q = x.q.reshape(-1, K)
+        rows = x_q.shape[0] // x.q.shape[0]
+        x_scale = jnp.repeat(x.scale_col(), rows)    # per-row scales
     else:
-        x_scale = jnp.asarray(x_scale, jnp.float32)
-        x_q = quantize_with_scale(x2, x_scale)
+        lead = x.shape[:-1]
+        K = x.shape[-1]
+        x2 = x.reshape(-1, K)
+        if x_scale is None:
+            x_q, x_scale = quantize_tensor(x2)
+        else:
+            x_scale = jnp.asarray(x_scale, jnp.float32)
+            x_q = quantize_with_scale(x2, x_scale)
     out = int8_matmul(x_q, w_q, x_scale, w_scale, interpret=interpret)
     return out.reshape(*lead, -1)
 
 
-def conv1x1_w8a8(qp, x, *, x_scale=None, interpret: bool | None = None):
+@functools.partial(jax.jit,
+                   static_argnames=("rows_per_group", "keep_fp", "interpret"))
+def _linear_w8a8_emit(x_q, x_scale, w_q, w_scale, bias, *,
+                      rows_per_group: int, keep_fp: bool,
+                      interpret: bool | None = None):
+    return int8_matmul_emit(x_q, w_q, x_scale, w_scale,
+                            rows_per_group=rows_per_group, bias=bias,
+                            keep_fp=keep_fp, interpret=interpret)
+
+
+def conv1x1_w8a8(qp, x, *, x_scale=None, interpret: bool | None = None,
+                 epilogue=None):
     """FIX8 1x1 conv as an int8 GEMM.  qp: {'q' (1,1,C,F) int8, 'scale'
-    (F,), 'bias' (F,)} from ``quantize_efficientvit``; x: (B, H, W, C).
+    (F,), 'bias' (F,)} from ``quantize_efficientvit``; x: (B, H, W, C)
+    fp — or a producer-emitted ``QTensor``.
 
     Same arithmetic as ``core.quantization.conv2d_int8`` on a 1x1
     ungrouped conv — int32 accumulation, per-output-channel dequant —
-    but through the Pallas MXU kernel instead of ``lax.conv``.
+    but through the Pallas MXU kernel instead of ``lax.conv``.  With an
+    int8 ``epilogue`` the GEMM emits the quantized output itself
+    (bias folded in before the in-kernel absmax) and returns a
+    ``QTensor`` with per-batch-element scales.
     """
-    B, H, W, C = x.shape
+    qt = isinstance(x, QTensor)
+    B, H, W, C = (x.q if qt else x).shape
     w_q = qp["q"].reshape(C, -1)
-    out = linear_w8a8(x.reshape(-1, C), w_q, qp["scale"], x_scale=x_scale,
-                      interpret=interpret)
-    out = out + qp["bias"][None, :]
-    return out.reshape(B, H, W, -1).astype(x.dtype)
+    out_dtype = (x.fp.dtype if qt and x.fp is not None
+                 else jnp.float32 if qt else x.dtype)
+    if epilogue is not None and epilogue.emits_q:
+        if qt:
+            x_q = x.q.reshape(-1, C)
+            xs = jnp.repeat(x.scale_col(), H * W)
+        else:
+            x_q, xs = quantize_tensor(x.reshape(-1, C)) if x_scale is None \
+                else (quantize_with_scale(x.reshape(-1, C),
+                                          jnp.asarray(x_scale, jnp.float32)),
+                      jnp.asarray(x_scale, jnp.float32))
+        keep_fp = epilogue.residual == "keep-fp"
+        outs = _linear_w8a8_emit(x_q, xs, w_q, qp["scale"], qp["bias"],
+                                 rows_per_group=H * W, keep_fp=keep_fp,
+                                 interpret=interpret)
+        F = w_q.shape[1]
+        fp = (outs[2].reshape(B, H, W, F).astype(out_dtype) if keep_fp
+              else None)
+        return QTensor(outs[0].reshape(B, H, W, F), outs[1], fp)
+    xin = x if qt else x.reshape(-1, C)
+    out = linear_w8a8(xin, w_q, qp["scale"],
+                      x_scale=None if qt else x_scale, interpret=interpret)
+    out = out.reshape(-1, w_q.shape[1]) + qp["bias"][None, :]
+    return out.reshape(B, H, W, -1).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +119,12 @@ class MsaInt8Kernel(MsaKernel):
     """(msa, int8): the fp fused module with QKV/output projections
     routed through the Pallas W8A8 GEMM above (per-output-channel weight
     scales in the dequant epilogue) — exactly the FIX8 route the fusion
-    plan assigns to ``quantize_efficientvit`` trees."""
+    plan assigns to ``quantize_efficientvit`` trees.  Takes producer-
+    emitted ``QTensor`` inputs straight into the QKV GEMM and emits its
+    own output through the projection GEMM's act-quant epilogue; the
+    multi-scale aggregation convs run the grouped int8 kernel
+    (kernels/group_conv) instead of reference ``conv2d_int8``."""
     precision, dtype = "int8", "i8"
     int8_proj = True
+    takes_q = True
+    emits_q = True

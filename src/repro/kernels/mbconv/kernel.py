@@ -28,7 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.autotune import pad_to_multiple
 from repro.kernels.compat import default_interpret, tpu_compiler_params
-from repro.kernels.quant import requantize_i8
+from repro.kernels.quant import requantize_i8, xs_per_batch
 
 
 def _mbconv_kernel(x_ref, w1_ref, b1_ref, dww_ref, dwb_ref, w2_ref, b2_ref,
@@ -169,7 +169,8 @@ def mbconv_fused_int8(x_q, x_scale, w1_q, s1, b1, dw_q, s_dw, dw_b,
                       w2_q, s2, b2, *, stride: int = 1, block_f: int = 128,
                       interpret: bool | None = None):
     """FIX8 MBConv megakernel.  x_q: (B, H, W, C) int8 (activations already
-    quantized with per-tensor ``x_scale``); w1_q: (C, M) int8; dw_q:
+    quantized with per-tensor — or per-batch-element, when emitted by a
+    producer epilogue — ``x_scale``); w1_q: (C, M) int8; dw_q:
     (3, 3, M) int8; w2_q: (M, F) int8; s*: per-output-channel fp32 weight
     scales; b*: fp32 biases (BN folded).
 
@@ -193,14 +194,14 @@ def mbconv_fused_int8(x_q, x_scale, w1_q, s1, b1, dw_q, s_dw, dw_b,
     b2p, _ = pad_to_multiple(b2.reshape(1, F), 1, bf)
     Fp = w2p.shape[1]
     nf = Fp // bf
-    xs = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
+    xs = xs_per_batch(x_scale, B)
 
     out = pl.pallas_call(
         functools.partial(_mbconv_int8_kernel, stride=stride),
         grid=(B, nf),
         in_specs=[
             pl.BlockSpec((1, H, W, C), lambda b, j: (b, 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
             pl.BlockSpec((C, M), lambda b, j: (0, 0)),
             pl.BlockSpec((1, M), lambda b, j: (0, 0)),
             pl.BlockSpec((1, M), lambda b, j: (0, 0)),
@@ -224,3 +225,119 @@ def mbconv_fused_int8(x_q, x_scale, w1_q, s1, b1, dw_q, s_dw, dw_b,
     )(x_q, xs, w1_q, s1.reshape(1, M), b1.reshape(1, M), dw_q,
       s_dw.reshape(1, M), dw_b.reshape(1, M), w2p, s2p, b2p)
     return out[..., :F]
+
+
+# ---------------------------------------------------------------------------
+# FIX8 producer-epilogue variant: the kernel emits the int8 activation
+# ---------------------------------------------------------------------------
+
+def _mbconv_int8_emit_kernel(x_ref, xs_ref, w1_ref, s1_ref, b1_ref,
+                             dww_ref, dws_ref, dwb_ref, w2_ref, s2_ref,
+                             b2_ref, *refs, stride: int, keep_fp: bool):
+    oq_ref, os_ref = refs[0], refs[1]
+    ofp_ref = refs[2] if keep_fp else None
+    midq_scratch = refs[-1]
+    H, W, C = x_ref.shape[1], x_ref.shape[2], x_ref.shape[3]
+    M = midq_scratch.shape[2]
+    Ho, Wo = H // stride, W // stride
+
+    # MXU stage 1 + VPU stage + in-kernel requant: identical arithmetic
+    # to _mbconv_int8_kernel's j == 0 branch
+    xq = x_ref[0].reshape(H * W, C)
+    acc = jax.lax.dot_general(xq, w1_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    mid = acc.astype(jnp.float32) * (xs_ref[0, 0] * s1_ref[0])[None, :] \
+        + b1_ref[0][None, :]
+    mid = jax.nn.hard_swish(mid)
+    mq, s_mid = requantize_i8(mid)
+    midq_scratch[...] = jnp.zeros((H + 2, W + 2, M), jnp.int8)
+    midq_scratch[1:H + 1, 1:W + 1, :] = mq.reshape(H, W, M)
+    mp = midq_scratch[...].astype(jnp.int32)
+    acc2 = jnp.zeros((H, W, M), jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            acc2 += mp[dy:dy + H, dx:dx + W, :] \
+                * dww_ref[dy, dx].astype(jnp.int32)[None, None, :]
+    dw = acc2.astype(jnp.float32) * (s_mid * dws_ref[0])[None, None, :] \
+        + dwb_ref[0][None, None, :]
+    if stride > 1:
+        dw = dw[stride - 1::stride, stride - 1::stride, :]
+    dw = jax.nn.hard_swish(dw)
+    dq, s_dw = requantize_i8(dw.reshape(Ho * Wo, M))
+
+    # MXU stage 2 over the FULL c_out extent (the epilogue's per-batch
+    # absmax needs the whole projection before anything is written)
+    acc3 = jax.lax.dot_general(dq, w2_ref[...], (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    out = acc3.astype(jnp.float32) * (s_dw * s2_ref[0])[None, :] \
+        + b2_ref[0][None, :]
+    if keep_fp:
+        ofp_ref[0] = out.reshape(Ho, Wo, -1)
+    # the act-quant epilogue: exactly what the consumer used to run in
+    # XLA after a round-trip through HBM, now fused into the producer
+    q, s_out = requantize_i8(out)
+    oq_ref[0] = q.reshape(Ho, Wo, -1)
+    os_ref[0, 0] = s_out
+
+
+def mbconv_fused_int8_emit(x_q, x_scale, w1_q, s1, b1, dw_q, s_dw, dw_b,
+                           w2_q, s2, b2, *, stride: int = 1,
+                           keep_fp: bool = False,
+                           interpret: bool | None = None):
+    """FIX8 MBConv with the producer-side act-quant epilogue fused in.
+
+    Same inputs as ``mbconv_fused_int8``; returns ``(q, scales)`` —
+    q: (B, Ho, Wo, F) int8, scales: (B,) fp32 per-batch-element — or
+    ``(q, scales, out_fp)`` when ``keep_fp`` (the epilogue's "keep-fp"
+    residual policy: the consumer's residual add needs the fp tensor
+    alongside).  The quantized output is bit-identical to running
+    ``mbconv_fused_int8`` and quantizing its result per batch element,
+    because the epilogue quantizes the very same fp32 projection —
+    in-kernel, over the full c_out extent, before it ever leaves VMEM.
+    """
+    interpret = default_interpret(interpret)
+    B, H, W, C = x_q.shape
+    M = w1_q.shape[1]
+    F = w2_q.shape[1]
+    assert x_q.dtype == jnp.int8 and w1_q.dtype == jnp.int8
+    assert H % stride == 0 and W % stride == 0
+    Ho, Wo = H // stride, W // stride
+    xs = xs_per_batch(x_scale, B)
+
+    out_shape = [jax.ShapeDtypeStruct((B, Ho, Wo, F), jnp.int8),
+                 jax.ShapeDtypeStruct((B, 1), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, Ho, Wo, F), lambda b: (b, 0, 0, 0)),
+                 pl.BlockSpec((1, 1), lambda b: (b, 0))]
+    if keep_fp:
+        out_shape.append(jax.ShapeDtypeStruct((B, Ho, Wo, F), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, Ho, Wo, F), lambda b: (b, 0, 0, 0)))
+
+    outs = pl.pallas_call(
+        functools.partial(_mbconv_int8_emit_kernel, stride=stride,
+                          keep_fp=keep_fp),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((C, M), lambda b: (0, 0)),
+            pl.BlockSpec((1, M), lambda b: (0, 0)),
+            pl.BlockSpec((1, M), lambda b: (0, 0)),
+            pl.BlockSpec((3, 3, M), lambda b: (0, 0, 0)),
+            pl.BlockSpec((1, M), lambda b: (0, 0)),
+            pl.BlockSpec((1, M), lambda b: (0, 0)),
+            pl.BlockSpec((M, F), lambda b: (0, 0)),
+            pl.BlockSpec((1, F), lambda b: (0, 0)),
+            pl.BlockSpec((1, F), lambda b: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((H + 2, W + 2, M), jnp.int8)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x_q, xs, w1_q, s1.reshape(1, M), b1.reshape(1, M), dw_q,
+      s_dw.reshape(1, M), dw_b.reshape(1, M), w2_q, s2.reshape(1, F),
+      b2.reshape(1, F))
+    if keep_fp:
+        return outs[0], outs[1].reshape(B), outs[2]
+    return outs[0], outs[1].reshape(B)

@@ -18,10 +18,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import fold_bn_into_conv
+from repro.core.quantization import QTensor, fold_bn_into_conv, quantize_act
 from repro.kernels.autotune import autotune, shape_key
 from repro.kernels.compat import default_interpret
-from repro.kernels.mbconv.kernel import mbconv_fused, mbconv_fused_int8
+from repro.kernels.mbconv.kernel import (
+    mbconv_fused, mbconv_fused_int8, mbconv_fused_int8_emit)
 from repro.kernels.mbconv.ref import mbconv_int8_ref, mbconv_ref
 from repro.kernels.registry import KernelBase, register
 
@@ -134,15 +135,45 @@ def mbconv_op_int8(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b, w2_q, s2,
                              interpret=interpret)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "keep_fp", "interpret"))
+def mbconv_op_int8_emit(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b, w2_q,
+                        s2, b2, *, stride: int = 1, keep_fp: bool = False,
+                        interpret: bool | None = None):
+    B, H, W, C = x_q.shape
+    M = w1_q.shape[1]
+    F = w2_q.shape[1]
+    # the emit kernel runs the FULL c_out extent in one grid step and
+    # additionally holds the fp32 projection (quantized in-kernel), the
+    # int8 output block, and — under keep-fp — the fp32 output block,
+    # none of which the c_out-tiled byte model counts
+    outn = (H // stride) * (W // stride) * F
+    emit_extra = outn * (5 + (4 if keep_fp else 0))
+    if mbconv_vmem_bytes(H, W, C, M, stride, dtype="i8") + emit_extra \
+            > VMEM_BUDGET_BYTES:
+        out = mbconv_int8_ref(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b,
+                              w2_q, s2, b2, stride=stride)
+        qt = quantize_act(out, keep_fp=keep_fp)
+        return ((qt.q, qt.scale, qt.fp) if keep_fp else (qt.q, qt.scale))
+    return mbconv_fused_int8_emit(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s,
+                                  dw_b, w2_q, s2, b2, stride=stride,
+                                  keep_fp=keep_fp, interpret=interpret)
+
+
 def mbconv_apply_int8(params, x, *, stride: int = 1,
                       block_f: int | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, epilogue=None):
     """Quantized EfficientViT {'pw1','dw','pw2'} block (each a ``qconv``
     from ``quantize_efficientvit``) -> FIX8 megakernel.
 
-    The input activation is quantized here with the same whole-tensor
-    absmax the reference ``conv2d_int8`` uses, so the first stage is
-    bit-identical; inter-stage requantization happens in-kernel.
+    ``x`` is either the fp activation — quantized here with the same
+    whole-tensor absmax the reference ``conv2d_int8`` uses, so the first
+    stage is bit-identical — or a ``QTensor`` already emitted by the
+    producer's epilogue (no quantize, no fp32 HBM read).  An int8
+    ``epilogue`` makes THIS kernel the producer: it returns a
+    ``QTensor`` quantized in-kernel, with the fp tensor alongside under
+    the "keep-fp" residual policy.  Inter-stage requantization always
+    happens in-kernel.
     """
     from repro.core.quantization import quantize_tensor
 
@@ -152,16 +183,27 @@ def mbconv_apply_int8(params, x, *, stride: int = 1,
     w1_q = q1["q"][0, 0]               # (1,1,C,M) -> (C,M)
     dw_q = qd["q"][:, :, 0, :]         # (3,3,1,M) -> (3,3,M)
     w2_q = q2["q"][0, 0]               # (1,1,M,F) -> (M,F)
+    if isinstance(x, QTensor):
+        x_q, x_scale = x.q, x.scale
+        out_dtype = x.fp.dtype if x.fp is not None else jnp.float32
+    else:
+        x_q, x_scale = quantize_tensor(x)
+        out_dtype = x.dtype
+    args = (x_q, x_scale, w1_q, q1["scale"], q1["bias"], dw_q, qd["scale"],
+            qd["bias"], w2_q, q2["scale"], q2["bias"])
+    if epilogue is not None and epilogue.emits_q:
+        keep_fp = epilogue.residual == "keep-fp"
+        outs = mbconv_op_int8_emit(*args, stride=stride, keep_fp=keep_fp,
+                                   interpret=interpret)
+        fp = outs[2].astype(out_dtype) if keep_fp else None
+        return QTensor(outs[0], outs[1], fp)
     if block_f is None:
-        block_f = tune_block_f(x.shape, w1_q.shape[1], w2_q.shape[1],
+        block_f = tune_block_f(x_q.shape, w1_q.shape[1], w2_q.shape[1],
                                stride=stride, allow_sweep=False,
                                interpret=interpret, dtype="i8")
-    x_q, x_scale = quantize_tensor(x)
-    out = mbconv_op_int8(x_q, x_scale, w1_q, q1["scale"], q1["bias"],
-                         dw_q, qd["scale"], qd["bias"], w2_q, q2["scale"],
-                         q2["bias"], stride=stride, block_f=block_f,
+    out = mbconv_op_int8(*args, stride=stride, block_f=block_f,
                          interpret=interpret)
-    return out.astype(x.dtype)
+    return out.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -186,24 +228,32 @@ class MbconvKernel(KernelBase):
                           dtype=self.dtype)
         return {"block_f": bf}
 
-    def apply(self, params, x, site, decision=None, *, interpret=None):
+    def apply(self, params, x, site, decision=None, *, interpret=None,
+              epilogue=None):
         blocks = decision.blocks if decision is not None else {}
         return mbconv_apply(params, x, stride=site.stride,
                             block_f=blocks.get("block_f"),
                             interpret=interpret)
 
-    def ref(self, params, x, site, **kw):
+    def ref(self, params, x, site, *, epilogue=None, **kw):
         from repro.core.efficientvit import mbconv
-        return mbconv(params, x, stride=site.stride)
+        out = mbconv(params, x, stride=site.stride)
+        if epilogue is not None and epilogue.emits_q:
+            return quantize_act(out, keep_fp=epilogue.residual == "keep-fp")
+        return out
 
 
 @register
 class MbconvInt8Kernel(MbconvKernel):
-    """(mbconv, int8): FIX8 twin — int8 scratches, in-kernel requant."""
+    """(mbconv, int8): FIX8 twin — int8 scratches, in-kernel requant,
+    QTensor boundaries on both sides (the int8 dataflow)."""
     precision, dtype = "int8", "i8"
+    takes_q = True
+    emits_q = True
 
-    def apply(self, params, x, site, decision=None, *, interpret=None):
+    def apply(self, params, x, site, decision=None, *, interpret=None,
+              epilogue=None):
         blocks = decision.blocks if decision is not None else {}
         return mbconv_apply_int8(params, x, stride=site.stride,
                                  block_f=blocks.get("block_f"),
-                                 interpret=interpret)
+                                 interpret=interpret, epilogue=epilogue)

@@ -46,11 +46,16 @@ def mbconv_int8_ref(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b, w2_q, s2,
     Mirrors the reference quantized chain (``core.quantization.
     conv2d_int8`` per stage: int32 accumulation, fp32 dequant, Hardswish,
     dynamic symmetric requantization) with the kernel's per-batch-element
-    inter-stage activation scales, via vmap over the batch.
+    inter-stage activation scales, via vmap over the batch.  ``x_scale``
+    may be a per-tensor scalar or per-batch (B,) scales (the producer-
+    epilogue convention).
     """
     from repro.core.quantization import quantize_tensor
+    from repro.kernels.quant import xs_per_batch_vec
 
-    def one(xi):                                     # (H, W, C) int8
+    sx_b = xs_per_batch_vec(x_scale, x_q.shape[0])
+
+    def one(xi, x_scale):                            # (H, W, C) int8
         H, W, C = xi.shape
         M = w1_q.shape[1]
         acc = jnp.einsum("hwc,cm->hwm", xi.astype(jnp.int32),
@@ -76,4 +81,4 @@ def mbconv_int8_ref(x_q, x_scale, w1_q, s1, b1, dw_q, dw_s, dw_b, w2_q, s2,
         return acc3.astype(jnp.float32) * (s_dw * s2)[None, None, :] \
             + b2[None, None, :]
 
-    return jax.vmap(one)(x_q)
+    return jax.vmap(one)(x_q, sx_b)

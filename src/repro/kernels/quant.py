@@ -10,9 +10,27 @@ the reference chain at batch 1.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core.quantization import quantize_tensor
 
 
 def requantize_i8(x, bits: int = 8):
     """x fp32 -> (int8 values, fp32 scalar scale), symmetric per-block."""
     return quantize_tensor(x, axis=None, bits=bits)
+
+
+def xs_per_batch(x_scale, batch: int):
+    """The producer-epilogue activation-scale convention, one definition
+    for every consumer kernel: a per-tensor scalar or per-batch-element
+    (B,) scales -> a (B, 1) fp32 column feeding a per-batch BlockSpec
+    (scalars broadcast, so both conventions share one kernel)."""
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(-1, 1)
+    return jnp.broadcast_to(xs, (batch, 1))
+
+
+def xs_per_batch_vec(x_scale, batch: int):
+    """Same convention as a (B,) vector — the vmap axis the jnp oracles
+    consume."""
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(-1)
+    return jnp.broadcast_to(xs, (batch,))

@@ -11,45 +11,67 @@ every fused execution path registers a ``KernelImpl`` under a
 
 Built-in registrations (loaded lazily from the kernel packages):
 
-    ("dsconv", "fp")   kernels/dsconv/ops.py     DW+PW megakernel
-    ("dsconv", "int8") kernels/dsconv/ops.py     FIX8, in-kernel requant
-    ("mbconv", "fp")   kernels/mbconv/ops.py     PW+DW+PW megakernel
-    ("mbconv", "int8") kernels/mbconv/ops.py     FIX8, in-kernel requant
-    ("msa",    "fp")   kernels/relu_attn/ops.py  single-launch MSA module
-    ("msa",    "int8") kernels/int8_matmul/ops.py  + W8A8 projections
+    ("dsconv", "fp")       kernels/dsconv/ops.py     DW+PW megakernel
+    ("dsconv", "int8")     kernels/dsconv/ops.py     FIX8, in-kernel requant
+    ("mbconv", "fp")       kernels/mbconv/ops.py     PW+DW+PW megakernel
+    ("mbconv", "int8")     kernels/mbconv/ops.py     FIX8, in-kernel requant
+    ("msa",    "fp")       kernels/relu_attn/ops.py  single-launch MSA module
+    ("msa",    "int8")     kernels/int8_matmul/ops.py  + W8A8 projections
+    ("group_agg", "int8")  kernels/group_conv/ops.py  MSA multi-scale
+                           aggregation (depthwise s x s + grouped 1x1)
+
+## The epilogue contract (the int8 dataflow)
+
+``apply`` takes an optional ``epilogue`` (a ``core.program.Epilogue``
+with ``out_dtype="int8"``): the kernel then quantizes its own output
+in-kernel (per-batch-element symmetric absmax) and returns a
+``core.quantization.QTensor`` — plus the fp tensor when the epilogue's
+residual policy is ``"keep-fp"``.  Impl capability flags tell the
+planner's producer->consumer pass (``core.fusion.assign_epilogues``)
+what each family supports:
+
+    takes_q   ``apply`` accepts a ``QTensor`` input (skips the
+              consumer-side activation quantize entirely)
+    emits_q   ``apply`` implements the int8 act-quant epilogue
+
+``batch_dependent_tiles`` declares that ``tune`` keys its block choices
+on the batch axis; ``plan_program(..., reuse=)`` then only accepts
+exact-batch donors for this family instead of the per-sample-geometry
+match.
 
 ## Registering a new kernel (worked example)
 
-The ROADMAP calls for a grouped int8 kernel folding the MSA multi-scale
-aggregation convs (depthwise s x s + grouped 1x1) into the fused launch.
-With the registry that is additive:
+``kernels/group_conv/ops.py`` is the worked example, grown from the
+ROADMAP item it closes: the grouped int8 kernel for the MSA multi-scale
+aggregation convs (depthwise s x s + grouped 1x1, one Pallas launch per
+scale — the FIX8 msa module calls it instead of falling back to the
+reference ``conv2d_int8``).  The additive recipe it followed:
 
-1. write the Pallas kernel + wrapper, e.g.
-   ``kernels/group_conv/ops.py`` with ``group_agg_apply_int8(params, x,
-   site, decision)``;
+1. write the Pallas kernel + wrapper (``kernels/group_conv/kernel.py``
+   + ``ops.py`` with ``group_agg_apply_int8(params, x, ...)``);
 2. register it there (an int8-only kind is fine — ``get_probe`` falls
    back to whatever precision the kind ships)::
 
        @register
        class GroupAggInt8Kernel(KernelBase):
            kind, precision, dtype = "group_agg", "int8", "i8"
+           takes_q = True
            def site_precision(self, params): ...
-           def vmem_bytes(self, site, dtype=None): ...
-           def tune(self, site, *, autotune=True, interpret=None): ...
            def apply(self, params, x, site, decision=None, *,
-                     interpret=None): ...
+                     interpret=None, epilogue=None): ...
            def ref(self, params, x, site, **kw): ...   # fallback path
 
-3. emit a ``Site(kind="group_agg", ...)`` for the aggregation stage in
-   ``core.program.lower`` (or fold it into the msa site's apply) and add
-   the module to ``_BUILTIN_MODULES`` below.
+3. emit a ``Site(kind="group_agg", ...)`` in ``core.program.lower``
+   (or, as here, fold it into the msa site's apply) and add the module
+   to ``_BUILTIN_MODULES`` below.
 
 No changes to ``build_plan``, ``execute``, the benchmarks or the cycle
 model: any non-structural ``Site`` kind is fusible, the planner's
 generic loop resolves the impl by key (unknown kinds default to
 enabled), ``execute`` runs ``apply`` when the decision fuses and the
 impl's ``ref`` otherwise, and the drift-gate tests pin the launch-count
-consequences explicitly.  ``tests/test_program.py::
+consequences explicitly (``core.fusion.EXPECTED_B1_FUSED_LAUNCHES_INT8``
+moved 22 -> 29 when group_agg landed).  ``tests/test_program.py::
 test_registry_new_kernel_plans_and_executes`` exercises this flow
 end-to-end with a dummy kind.
 """
@@ -71,11 +93,17 @@ class KernelImpl(Protocol):
     dtype tag ("f32" | "i8") used for VMEM sizing and autotune cache
     keys; ``vmem_budget`` is the per-launch budget ``vmem_bytes`` is
     checked against (``VMEM_UNLIMITED`` for streamed kernels).
+    ``takes_q``/``emits_q`` are the int8-dataflow capability flags the
+    epilogue-assignment pass consults; ``batch_dependent_tiles`` scopes
+    donor-plan block reuse to exact-batch matches.
     """
     kind: str
     precision: str
     dtype: str
     vmem_budget: float
+    takes_q: bool
+    emits_q: bool
+    batch_dependent_tiles: bool
 
     def site_precision(self, params) -> str:
         """Precision the site's param subtree carries: fp | int8 | mixed."""
@@ -98,14 +126,21 @@ class KernelImpl(Protocol):
         ...
 
     def apply(self, params, x, site, decision=None, *,
-              interpret: bool | None = None):
+              interpret: bool | None = None, epilogue=None):
         """Run the fused kernel on one site.  ``decision`` (a
         ``core.fusion.SiteDecision``) supplies block sizes; ``None``
-        means defaults."""
+        means defaults.  ``x`` may be a ``core.quantization.QTensor``
+        when the impl declares ``takes_q``; an int8 ``epilogue`` (only
+        ever passed when the impl declares ``emits_q``) makes the
+        kernel quantize its own output and return a ``QTensor``."""
         ...
 
-    def ref(self, params, x, site, **kw):
-        """The site's reference-path computation (parity oracle)."""
+    def ref(self, params, x, site, *, epilogue=None, **kw):
+        """The site's reference-path computation (parity oracle).
+        Takes fp input; with an int8 ``epilogue`` it mirrors the
+        producer-side emission as an XLA-level ``quantize_act`` of the
+        reference output — the oracle the epilogue parity tests diff
+        kernels against."""
         ...
 
 
@@ -138,11 +173,15 @@ def resolve_conv_precision(site_prec: str, requested: str
 
 class KernelBase:
     """Default ``KernelImpl`` behavior: conv-style precision policy, no
-    VMEM constraint, no tunable blocks.  Impls override what differs."""
+    VMEM constraint, no tunable blocks, no int8-dataflow capabilities.
+    Impls override what differs."""
     kind = ""
     precision = "fp"
     dtype = "f32"
     vmem_budget = VMEM_UNLIMITED
+    takes_q = False               # apply accepts QTensor inputs
+    emits_q = False               # apply implements the int8 epilogue
+    batch_dependent_tiles = False  # tune keys blocks on the batch axis
 
     def site_precision(self, params) -> str:
         return conv_block_precision(params)
@@ -156,7 +195,8 @@ class KernelBase:
     def tune(self, site, *, autotune=True, interpret=None):
         return {}
 
-    def apply(self, params, x, site, decision=None, *, interpret=None):
+    def apply(self, params, x, site, decision=None, *, interpret=None,
+              epilogue=None):
         raise NotImplementedError(type(self).__name__)
 
     def ref(self, params, x, site, **kw):
@@ -173,6 +213,7 @@ _BUILTIN_MODULES = (
     "repro.kernels.mbconv.ops",
     "repro.kernels.relu_attn.ops",
     "repro.kernels.int8_matmul.ops",
+    "repro.kernels.group_conv.ops",
 )
 _builtins_loaded = False
 

@@ -110,7 +110,7 @@ def msa_batched_attention(qkv, n_heads: int, head_dim: int, *,
 def msa_fused_apply(params, x, n_heads: int, head_dim: int, *,
                     block_n: int = MSA_DEFAULT_BLOCK_N,
                     interpret: bool | None = None,
-                    int8_proj: bool = False):
+                    int8_proj: bool = False, epilogue=None):
     """One EfficientViT MSA module, attention core fused to ONE launch.
 
     params: the module's {'qkv','aggreg','proj','proj_bn'} tree (fp32 or
@@ -118,23 +118,44 @@ def msa_fused_apply(params, x, n_heads: int, head_dim: int, *,
     QKV/output projections through the Pallas W8A8 GEMM — only honored
     when both projections are actually quantized, so a mixed tree keeps
     its projections on the reference conv path.
+
+    The int8 dataflow runs through here at FIX8: ``x`` may be a
+    producer-emitted ``QTensor`` (consumed directly by the QKV GEMM),
+    the multi-scale aggregation branches run the grouped int8 Pallas
+    kernel (one launch per scale — no more reference ``conv2d_int8``
+    fallback), and an int8 ``epilogue`` makes the output projection
+    GEMM emit the quantized module output itself.
     """
+    from repro.core.quantization import QTensor, act_fp, quantize_act
     from repro.core.relu_attention import _conv_any
     from repro.layers.conv import pwconv
     from repro.layers.norms import batchnorm
 
-    B, H, W, _ = x.shape
+    qt = isinstance(x, QTensor)
+    B, H, W, _ = (x.q if qt else x).shape
+    dtype = (x.fp.dtype if qt and x.fp is not None
+             else jnp.float32 if qt else x.dtype)
     int8 = (int8_proj and "qconv" in params["qkv"]
             and "qconv" in params["proj"])
     if int8:
         from repro.kernels.int8_matmul.ops import conv1x1_w8a8
         qkv = conv1x1_w8a8(params["qkv"]["qconv"], x, interpret=interpret)
     else:
-        qkv = _conv_any(params["qkv"], x)             # (B,H,W,3*total)
+        qkv = _conv_any(params["qkv"],
+                        act_fp(x) if qt else x)        # (B,H,W,3*total)
+    agg_int8 = int8 and all("qconv" in a["dw"] and "qconv" in a["pw"]
+                            for a in params["aggreg"])
     multi = [qkv]
-    for agg in params["aggreg"]:
-        a = _conv_any(agg["dw"], qkv, groups=qkv.shape[-1])
-        multi.append(_conv_any(agg["pw"], a, groups=3 * n_heads))
+    if agg_int8 and params["aggreg"]:
+        from repro.kernels.group_conv.ops import group_agg_apply_int8
+        qkv_qt = quantize_act(qkv)         # ONE quantize feeds every scale
+        for agg in params["aggreg"]:
+            multi.append(group_agg_apply_int8(agg, qkv_qt,
+                                              interpret=interpret))
+    else:
+        for agg in params["aggreg"]:
+            a = _conv_any(agg["dw"], qkv, groups=qkv.shape[-1])
+            multi.append(_conv_any(agg["pw"], a, groups=3 * n_heads))
     stack = jnp.stack(multi)                          # (S,B,H,W,3*total)
     S = stack.shape[0]
     total = n_heads * head_dim
@@ -142,10 +163,10 @@ def msa_fused_apply(params, x, n_heads: int, head_dim: int, *,
         stack.reshape(S, B, H * W, 3 * total), n_heads, head_dim,
         block_n=block_n, interpret=interpret)         # one launch
     out = jnp.moveaxis(o.reshape(S, B, H, W, total), 0, -2)
-    out = out.reshape(B, H, W, S * total).astype(x.dtype)
+    out = out.reshape(B, H, W, S * total).astype(dtype)
     if int8:
         return conv1x1_w8a8(params["proj"]["qconv"], out,
-                            interpret=interpret)
+                            interpret=interpret, epilogue=epilogue)
     if "qconv" in params["proj"]:
         return _conv_any(params["proj"], out)  # BN folded by quantization
     return batchnorm(params["proj_bn"], pwconv(params["proj"], out))
@@ -179,18 +200,25 @@ class MsaKernel(KernelBase):
                           allow_sweep=autotune, interpret=interpret)
         return {"block_n": bn}
 
-    def apply(self, params, x, site, decision=None, *, interpret=None):
+    def apply(self, params, x, site, decision=None, *, interpret=None,
+              epilogue=None):
         blocks = decision.blocks if decision is not None else {}
         return msa_fused_apply(params, x, site.attrs["heads"],
                                site.attrs["head_dim"],
                                block_n=blocks.get("block_n",
                                                   MSA_DEFAULT_BLOCK_N),
                                interpret=interpret,
-                               int8_proj=self.int8_proj)
+                               int8_proj=self.int8_proj,
+                               epilogue=epilogue)
 
-    def ref(self, params, x, site, *, attention_fn=None, **kw):
+    def ref(self, params, x, site, *, attention_fn=None, epilogue=None,
+            **kw):
+        from repro.core.quantization import quantize_act
         from repro.core.relu_attention import MSAConfig, msa
         mcfg = MSAConfig(x.shape[-1], site.attrs["head_dim"],
                          site.attrs["scales"])
         akw = {} if attention_fn is None else {"attention_fn": attention_fn}
-        return msa(params, x, mcfg, **akw)
+        out = msa(params, x, mcfg, **akw)
+        if epilogue is not None and epilogue.emits_q:
+            return quantize_act(out, keep_fp=epilogue.residual == "keep-fp")
+        return out

@@ -46,14 +46,25 @@ class ExecutorKey:
     batch: int        # bucket size (the compiled batch dimension)
     resolution: int   # square image size
     precision: str    # requested plan precision: "auto" | "fp" | "int8"
+    epilogues: bool = True   # producer-side int8 emission assigned by the
+    #                          plan (the int8 dataflow); False compiles the
+    #                          legacy consumer-side-quantize pipeline, so
+    #                          both dataflows can be cached side by side
 
 
 class Executor:
-    """One compiled (program, plan, jitted forward) for a fixed shape."""
+    """One compiled (program, plan, jitted forward) for a fixed shape.
+
+    ``program`` is the plan-annotated lowering (``Program.
+    with_epilogues``): its sites carry the ``Epilogue`` each boundary
+    actually delivers, which is what the serving benchmarks and the
+    delivered-HBM accounting introspect.
+    """
 
     def __init__(self, key: ExecutorKey, program, plan):
         self.key = key
-        self.program = program
+        self.program = program.with_epilogues(plan) if plan is not None \
+            else program
         self.plan = plan
         self._fn = jax.jit(lambda p, x: execute(program, p, x, plan=plan))
         self.calls = 0
@@ -94,7 +105,8 @@ class ExecutorCache:
                  precision: str = "auto", use_plan: bool = True,
                  autotune: bool = True, interpret: bool | None = None,
                  capacity: int | None = None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 epilogues: bool = True):
         assert buckets and all(b >= 1 for b in buckets), buckets
         self.params = params
         self.cfg = cfg
@@ -104,6 +116,7 @@ class ExecutorCache:
         self.autotune = autotune
         self.interpret = interpret
         self.capacity = capacity
+        self.epilogues = epilogues
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._lru: "collections.OrderedDict[ExecutorKey, Executor]" = \
             collections.OrderedDict()
@@ -132,7 +145,8 @@ class ExecutorCache:
 
     # -- the cache -------------------------------------------------------
     def get(self, batch: int, resolution: int) -> Executor:
-        key = ExecutorKey(int(batch), int(resolution), self.precision)
+        key = ExecutorKey(int(batch), int(resolution), self.precision,
+                          self.epilogues)
         ex = self._lru.get(key)
         if ex is not None:
             self._lru.move_to_end(key)
@@ -163,7 +177,8 @@ class ExecutorCache:
             plan = plan_program(program, self.params,
                                 autotune=self.autotune,
                                 interpret=self.interpret,
-                                precision=self.precision, reuse=donor)
+                                precision=self.precision, reuse=donor,
+                                epilogues=key.epilogues)
             self.telemetry.count("plans_built")
             reused = sum(d.reused for d in plan.decisions.values())
             if reused:

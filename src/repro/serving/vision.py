@@ -60,6 +60,9 @@ class VisionServeConfig:
     buckets: tuple | None = None   # None -> powers of 2 up to microbatch
     capacity: int | None = None    # executor-cache LRU capacity (None =
     #                                unbounded)
+    epilogues: bool = True    # producer-side int8 emission (the int8
+    #                           dataflow); False serves the legacy
+    #                           consumer-side-quantize pipeline (A/B)
 
 
 class VisionEngine:
@@ -82,7 +85,8 @@ class VisionEngine:
         self.cache = ExecutorCache(
             params, cfg, buckets=buckets, precision=serve_cfg.precision,
             use_plan=serve_cfg.use_plan, autotune=serve_cfg.autotune,
-            capacity=serve_cfg.capacity, telemetry=self.telemetry)
+            capacity=serve_cfg.capacity, telemetry=self.telemetry,
+            epilogues=serve_cfg.epilogues)
         # primary executor built eagerly: plan construction (autotune
         # sweeps included) happens here, outside the request loop, and
         # .program / .plan keep their pre-runtime meaning

@@ -18,8 +18,8 @@ from repro.core.efficientvit import (
     B1, B1_SMOKE, efficientvit, init_efficientvit, layer_manifest,
     total_macs)
 from repro.core.fusion import (
-    EXPECTED_B1_FUSED_LAUNCHES, build_plan, launch_counts, plan_program,
-    plan_report, site_traffic)
+    EXPECTED_B1_FUSED_LAUNCHES, EXPECTED_B1_FUSED_LAUNCHES_INT8, build_plan,
+    launch_counts, plan_program, plan_report, site_traffic)
 from repro.core.program import FUSIBLE_KINDS, execute, lower, manifest, params_at
 from repro.core.quantization import quantize_efficientvit
 from repro.kernels import registry
@@ -79,14 +79,21 @@ def test_plan_report_matches_site_traffic(precision, tmp_autotune_cache):
         params = quantize_efficientvit(params)
     plan = plan_program(program, params, autotune=False)
     rows = {r["site"]: r for r in plan_report(plan)}
-    for site in program.fusible():
+    # the delivered column reads epilogues off the ANNOTATED program
+    # (the executor-cache view) — plus the producer's epilogue for q_in
+    annotated = program.with_epilogues(plan)
+    prev = {cur.name: prv for prv, cur in
+            zip(annotated.sites, annotated.sites[1:])}
+    for site in annotated.fusible():
         d = plan.get(site.name)
-        want = site_traffic(site, precision=d.precision)
+        q_in = prev[site.name].epilogue.emits_q
+        want = site_traffic(site, precision=d.precision, q_in=q_in)
         got = rows[site.name]
         for k in ("hbm_unfused", "hbm_w", "launches_ref"):
             assert got[k] == want[k], (site.name, k)
         if got["fused"]:
             assert got["hbm_fused"] == want["hbm_fused"]
+            assert got["hbm_delivered"] == want["hbm_delivered"]
             assert got["launches_fused"] == want["launches_fused"]
 
 
@@ -110,17 +117,22 @@ def test_execute_is_the_forward(tmp_autotune_cache):
 # ---------------------------------------------------------------------------
 
 def test_b1_fused_launch_drift_gate(tmp_autotune_cache):
-    """22 fused launches at B1/224 in BOTH precisions.  If a lowering or
-    planner change moves this, update EXPECTED_B1_FUSED_LAUNCHES (and
-    the EXPERIMENTS.md narrative) explicitly — this test failing is the
-    drift alarm, not an inconvenience to silence."""
+    """22 fused launches at B1/224 fp and 29 at int8 (the grouped
+    aggregation kernel adds one launch per scale per fused MSA module).
+    If a lowering or planner change moves either, update
+    EXPECTED_B1_FUSED_LAUNCHES / _INT8 (and the EXPERIMENTS.md
+    narrative) explicitly — this test failing is the drift alarm, not
+    an inconvenience to silence."""
     program = lower(B1, batch=1)
     assert len(program.fusible()) == EXPECTED_B1_FUSED_LAUNCHES
     params = init_efficientvit(jax.random.PRNGKey(4), B1)
-    for tree in (params, quantize_efficientvit(params)):
+    expected = {"fp": EXPECTED_B1_FUSED_LAUNCHES,
+                "int8": EXPECTED_B1_FUSED_LAUNCHES_INT8}
+    for prec, tree in (("fp", params),
+                       ("int8", quantize_efficientvit(params))):
         plan = plan_program(program, tree, autotune=False)
         lc = launch_counts(plan)
-        assert lc["fused"] == EXPECTED_B1_FUSED_LAUNCHES, lc
+        assert lc["fused"] == expected[prec], (prec, lc)
         assert lc["reference"] > lc["fused"]
 
 
@@ -135,8 +147,17 @@ def test_registry_builtin_registrations():
             assert (kind, prec) in have
             impl = registry.get_kernel(kind, prec)
             assert impl.kind == kind and impl.precision == prec
+    # the grouped MSA aggregation kernel ships int8-only (the ROADMAP
+    # worked example, landed); the probe resolves it without an fp twin
+    assert ("group_agg", "int8") in have
+    assert registry.get_probe("group_agg").precision == "int8"
     with pytest.raises(KeyError, match="no kernel registered"):
-        registry.get_kernel("group_agg", "int8")
+        registry.get_kernel("group_agg", "fp")
+    # int8-dataflow capability flags on the FIX8 impls
+    for kind in ("dsconv", "mbconv", "msa"):
+        impl = registry.get_kernel(kind, "int8")
+        assert impl.takes_q and impl.emits_q
+        assert not registry.get_kernel(kind, "fp").emits_q
 
 
 def test_registry_new_kernel_slots_in():
