@@ -1,0 +1,364 @@
+"""Chaos replay: every fault class injected against the serving runtime.
+
+Each scenario arms a ``serving.faults.FaultPlan`` at one injection
+point, replays a small request trace on a manual clock through the real
+runtime (``ExecutorCache`` + ``MicroBatchScheduler`` on ``B1_SMOKE``),
+and asserts the designed response — not merely "no crash":
+
+    control             no faults armed: zero shed / retries / degrade,
+                        fp logits match the unbatched reference
+    compile.transient   one executor build crash; the failure is
+                        negative-cached (probed within TTL), the retry
+                        after TTL rebuilds healthy — no degradation
+    autotune            one sweep crash; PlanError blames the site, the
+                        ladder demotes exactly that site (reason
+                        "fault") and traffic completes on the level-1
+                        plan
+    kernel.launch       a persistently failing fused launch; the ladder
+                        demotes the blamed site, then bottoms out on
+                        the reference interpreter — whose output is
+                        bit-identical to ``execute(plan=None)``
+    epilogue.numerics   silent NaN corruption of int8 output; finalize
+                        detects it, pins the bucket to fp, and the
+                        pinned plan's logits are bit-identical to the
+                        reference interpreter on the same batch
+    queue.overload      admission bound + injected overload: excess
+                        requests shed with ``CapacityExceeded``, the
+                        admitted ones complete
+    deadline            hard ``timeout_ms`` expiry in queue: expired
+                        requests shed with ``DeadlineExceeded`` before
+                        occupying a batch slot, live ones complete
+
+Global invariants, checked over every scenario:
+  * every submitted request terminates in exactly ONE of
+    {completed, shed, failed}; none lost, none duplicated;
+  * shed requests carry a typed error (DeadlineExceeded /
+    CapacityExceeded), completed ones carry finite logits;
+  * every fault class fired at least once and every budget is spent
+    (``FaultPlan.exhausted``) — the chaos schedule provably ran.
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.errors import (
+    CapacityExceeded, DeadlineExceeded, ExecutorError, ReproError)
+from repro.core.efficientvit import B1_SMOKE, init_efficientvit
+from repro.core.program import execute, lower
+from repro.core.quantization import quantize_efficientvit
+from repro.serving.executors import ExecutorCache
+from repro.serving.faults import FaultPlan, FaultSpec
+from repro.serving.scheduler import ManualClock, MicroBatchScheduler, Request
+from repro.serving.telemetry import Telemetry
+
+BUCKETS = (1, 2, 4)
+RES = 32
+
+
+def make_requests(n, res=RES, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, image=rng.standard_normal(
+        (res, res, 3)).astype(np.float32), **kw) for i in range(n)]
+
+
+def runtime(params, *, precision="auto", faults=None, clock=None,
+            neg_ttl_s=1.0, **sched_kw):
+    """(telemetry, cache, scheduler, clock) sharing one manual clock."""
+    clock = clock if clock is not None else ManualClock()
+    tel = Telemetry()
+    cache = ExecutorCache(params, B1_SMOKE, buckets=BUCKETS,
+                          precision=precision, autotune=False,
+                          telemetry=tel, faults=faults,
+                          neg_ttl_s=neg_ttl_s, clock=clock)
+    sched = MicroBatchScheduler(cache, params, telemetry=tel, clock=clock,
+                                faults=faults, **sched_kw)
+    return tel, cache, sched, clock
+
+
+def drain(sched, clock, max_rounds=64, tick_s=0.05):
+    """Step/finalize until every request is terminal; the clock ticks
+    between rounds so backoff windows and negative-cache TTLs expire."""
+    for _ in range(max_rounds):
+        if not sched.outstanding():
+            return
+        sched.step(drain=True)
+        sched.finalize()
+        clock.advance(tick_s)
+    raise AssertionError(
+        f"scheduler failed to drain: {sched.outstanding()} outstanding")
+
+
+def probe_vs_reference(cache, params, bucket, res, seed=99):
+    """Bitwise gate: the (possibly degraded) executor's output vs the
+    jitted reference interpreter (plan=None) on the SAME batch — batch
+    composition feeds int8 per-tensor activation scales, so same-input
+    comparison is the only fair one."""
+    ex = cache.get(bucket, res)
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal(
+        (bucket, res, res, 3)).astype(np.float32))
+    got = np.asarray(ex(params, x))
+    program = lower(B1_SMOKE, batch=bucket, image_size=res)
+    ref = np.asarray(jax.jit(
+        lambda p, v: execute(program, p, v, plan=None))(params, x))
+    return got, ref
+
+
+def check_partition(name, reqs):
+    """The no-lost / no-duplicated / exactly-one-terminal-state gate."""
+    states = {"completed": 0, "shed": 0, "failed": 0}
+    assert len({r.rid for r in reqs}) == len(reqs), f"{name}: rid collision"
+    for r in reqs:
+        assert r.status in states, \
+            f"{name}: request {r.rid} non-terminal ({r.status})"
+        states[r.status] += 1
+        if r.status == "completed":
+            assert r.logits is not None and np.all(np.isfinite(r.logits)), \
+                f"{name}: request {r.rid} completed without finite logits"
+            assert r.error is None or r.retries, (name, r.rid)
+        else:
+            assert isinstance(r.error, ReproError), \
+                f"{name}: {r.status} request {r.rid} lacks a typed error"
+    assert sum(states.values()) == len(reqs)
+    return states
+
+
+# -- scenarios -------------------------------------------------------------
+
+def scenario_control(params, n):
+    faults = FaultPlan()          # idle plan: must alter nothing
+    tel, cache, sched, clock = runtime(params, faults=faults)
+    reqs = make_requests(n, deadline_ms=10.0)
+    for r in reqs:
+        sched.submit(r)
+        clock.advance(0.002)
+        sched.step()
+    drain(sched, clock)
+    for c in ("shed", "failed", "retries", "degraded", "pinned_fp",
+              "dispatch_failures"):
+        assert tel.counters.get(c, 0) == 0, (c, tel.counters)
+    # fp parity vs the unbatched eager reference
+    for r in reqs:
+        prog = lower(B1_SMOKE, batch=1, image_size=RES)
+        ref = np.asarray(execute(prog, params, r.image[None]))[0]
+        err = float(np.max(np.abs(r.logits - ref)))
+        assert err < 1e-3, (r.rid, err)
+    return dict(name="control", point="(none)", faults=faults, tel=tel,
+                reqs=reqs, note="no-fault replay unchanged; fp parity ok")
+
+
+def scenario_compile_transient(params, n):
+    faults = FaultPlan(FaultSpec("executor.compile", times=1,
+                                 note="transient serve-time compile crash"))
+    tel, cache, sched, clock = runtime(params, faults=faults,
+                                       neg_ttl_s=0.5)
+    reqs = make_requests(n)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)        # first dispatch: build fails, parks retry
+    assert tel.counters.get("executor_build_failed") == 1
+    # probe the negative cache within TTL: typed error, no rebuild
+    try:
+        cache.get(BUCKETS[-1], RES)
+        raise AssertionError("negative cache failed to answer")
+    except ExecutorError:
+        pass
+    assert tel.counters.get("negative_cache_hit") == 1
+    assert tel.counters.get("executor_build_failed") == 1   # no 2nd build
+    clock.advance(0.6)            # past TTL + past backoff
+    sched.step()
+    sched.finalize()
+    drain(sched, clock)
+    states = check_partition("compile_transient", reqs)
+    assert states["completed"] == n, states
+    assert tel.counters.get("retries", 0) >= 1
+    assert cache.degradation(BUCKETS[-1], RES) is None, \
+        "transient failure must not move the ladder"
+    return dict(name="compile_transient", point="executor.compile",
+                faults=faults, tel=tel, reqs=reqs,
+                note="neg-cached, retried after TTL, no degradation")
+
+
+def scenario_autotune(params, n):
+    faults = FaultPlan(FaultSpec("autotune", times=1,
+                                 note="crashed block-size sweep"))
+    tel, cache, sched, clock = runtime(params, faults=faults)
+    reqs = make_requests(n)
+    with faults:                  # hook the autotuner
+        for r in reqs:
+            sched.submit(r)
+        drain(sched, clock)
+    states = check_partition("autotune", reqs)
+    assert states["completed"] == n, states
+    state = cache.degradation(BUCKETS[-1], RES)
+    assert state is not None and state.level == 1 and state.demoted, state
+    site = next(iter(state.demoted))
+    ex = cache.get(BUCKETS[-1], RES)
+    d = ex.plan.decisions[site]
+    assert not d.fused and d.reason == "fault", (site, d)
+    return dict(name="autotune_fault", point="autotune", faults=faults,
+                tel=tel, reqs=reqs,
+                note=f"PlanError blamed {site}; demoted (reason=fault), "
+                     f"rest of the plan stays fused")
+
+
+def scenario_launch(params, n):
+    # discover a real fused site to blame, on a clean runtime
+    probe = ExecutorCache(params, B1_SMOKE, buckets=BUCKETS,
+                          autotune=False, telemetry=Telemetry())
+    site = probe.get(BUCKETS[-1], RES).fused_sites[0]
+    # 3 failures walk the full ladder: retry same -> demote site ->
+    # reference interpreter (level 2, no fused sites left to fault)
+    faults = FaultPlan(FaultSpec("kernel.launch", times=3, site=site,
+                                 note="persistent fused-launch failure"))
+    tel, cache, sched, clock = runtime(params, faults=faults)
+    reqs = make_requests(n)
+    for r in reqs:
+        sched.submit(r)
+    drain(sched, clock)
+    states = check_partition("kernel_launch", reqs)
+    assert states["completed"] == n, states
+    state = cache.degradation(BUCKETS[-1], RES)
+    assert state is not None and state.level == 2, state
+    ex = cache.get(BUCKETS[-1], RES)
+    assert ex.plan is None and not ex.fused_sites
+    got, ref = probe_vs_reference(cache, params, BUCKETS[-1], RES)
+    assert np.array_equal(got, ref), \
+        "level-2 executor must be the reference interpreter, bit-exact"
+    return dict(name="launch_fault", point="kernel.launch", faults=faults,
+                tel=tel, reqs=reqs,
+                note=f"ladder: fused -> {site} demoted -> reference "
+                     f"interpreter (bit-exact vs plan=None)")
+
+
+def scenario_numerics(qparams, n):
+    faults = FaultPlan(FaultSpec("epilogue.numerics", times=1,
+                                 note="silent int8 epilogue blow-up"))
+    tel, cache, sched, clock = runtime(qparams, precision="int8",
+                                       faults=faults)
+    reqs = make_requests(n)
+    for r in reqs:
+        sched.submit(r)
+    drain(sched, clock)
+    states = check_partition("numerics", reqs)
+    assert states["completed"] == n, states
+    state = cache.degradation(BUCKETS[-1], RES)
+    assert state is not None and state.pinned_fp, state
+    assert tel.counters.get("pinned_fp") == 1
+    got, ref = probe_vs_reference(cache, qparams, BUCKETS[-1], RES)
+    assert np.array_equal(got, ref), \
+        "fp-pinned executor must match the reference interpreter bit-exact"
+    return dict(name="numerics_int8", point="epilogue.numerics",
+                faults=faults, tel=tel, reqs=reqs,
+                note="NaN caught at finalize; bucket pinned to fp "
+                     "(bit-exact vs reference); served batch finite")
+
+
+def scenario_overload(params, n):
+    faults = FaultPlan(FaultSpec("queue.overload", times=1,
+                                 note="load spike beyond the bound"))
+    depth = max(2, n // 2)
+    tel, cache, sched, clock = runtime(params, faults=faults,
+                                       max_queue_depth=depth)
+    reqs = make_requests(n)
+    admitted = sum(sched.submit(r) for r in reqs)
+    drain(sched, clock)
+    states = check_partition("overload", reqs)
+    assert states["shed"] == n - admitted and states["shed"] >= 2, states
+    assert states["completed"] == admitted, states
+    shed = [r for r in reqs if r.status == "shed"]
+    assert all(isinstance(r.error, CapacityExceeded) for r in shed)
+    assert tel.counters.get("shed_capacity") == len(shed)
+    return dict(name="overload_shed", point="queue.overload", faults=faults,
+                tel=tel, reqs=reqs,
+                note=f"bound {depth}: {len(shed)} shed typed "
+                     f"CapacityExceeded, {admitted} served")
+
+
+def scenario_deadline(params, n):
+    faults = FaultPlan()
+    tel, cache, sched, clock = runtime(params, faults=faults)
+    # the early half of the trace carries a 5 ms hard SLA and sits
+    # queued past it (too few to fill a bucket, no soft deadline to
+    # flush them); the late half arrives with headroom and must be
+    # served
+    tight = make_requests(min(n // 2, BUCKETS[-1] - 1), timeout_ms=5.0)
+    loose = make_requests(n - len(tight), seed=7, timeout_ms=10_000.0)
+    for r in loose:
+        r.rid += 1000
+    for r in tight:
+        sched.submit(r)
+        sched.step()              # not due, bucket not full: queued
+    clock.advance(0.05)           # blow the 5 ms SLA while queued
+    sched.step()                  # sweep happens BEFORE batch formation
+    for r in loose:
+        sched.submit(r)
+    drain(sched, clock)
+    states = check_partition("deadline", tight + loose)
+    assert all(r.status == "shed" and isinstance(r.error, DeadlineExceeded)
+               for r in tight), [(r.rid, r.status) for r in tight]
+    assert all(r.status == "completed" for r in loose)
+    assert tel.counters.get("shed_deadline") == len(tight)
+    return dict(name="deadline_shed", point="(timeout_ms)", faults=faults,
+                tel=tel, reqs=tight + loose,
+                note=f"{len(tight)} expired in queue, shed typed "
+                     f"DeadlineExceeded without occupying a slot")
+
+
+# -- driver ----------------------------------------------------------------
+
+def run(smoke: bool = False):
+    n = 4 if smoke else 8
+    params = init_efficientvit(jax.random.PRNGKey(0), B1_SMOKE)
+    qparams = quantize_efficientvit(params)
+
+    print(f"# chaos bench — {B1_SMOKE.name} @ {RES}px, buckets {BUCKETS}, "
+          f"{n} requests/scenario, manual clock")
+    results = [
+        scenario_control(params, n),
+        scenario_compile_transient(params, n),
+        scenario_autotune(params, n),
+        scenario_launch(params, n),
+        scenario_numerics(qparams, n),
+        scenario_overload(params, n + 2),
+        scenario_deadline(params, n),
+    ]
+
+    head = (f"{'scenario':<18} {'fault point':<18} {'inj':>3} "
+            f"{'done':>4} {'shed':>4} {'fail':>4}  outcome")
+    print("\n## fault matrix")
+    print(head)
+    print("-" * len(head))
+    injected_points = set()
+    for r in results:
+        states = check_partition(r["name"], r["reqs"])
+        fired = sum(r["faults"].fired.values())
+        injected_points.update(r["faults"].fired)
+        assert r["faults"].exhausted, \
+            (r["name"], "unspent fault budget", r["faults"].specs)
+        print(f"{r['name']:<18} {r['point']:<18} {fired:>3} "
+              f"{states['completed']:>4} {states['shed']:>4} "
+              f"{states['failed']:>4}  {r['note']}")
+
+    from repro.serving.faults import FAULT_POINTS
+    missing = set(FAULT_POINTS) - injected_points
+    assert not missing, f"fault classes never injected: {missing}"
+    total = sum(len(r["reqs"]) for r in results)
+    print(f"\nall {total} requests across {len(results)} scenarios "
+          f"terminated in exactly one of completed/shed/failed; "
+          f"all {len(FAULT_POINTS)} fault classes injected; "
+          f"every fault budget spent")
+    return results
+
+
+def main():
+    run(smoke="--smoke" in sys.argv[1:])
+
+
+if __name__ == "__main__":
+    main()

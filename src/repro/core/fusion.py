@@ -58,6 +58,7 @@ class SiteDecision:
     fused: bool
     reason: str            # "ok" | "vmem" | "quantized" | "not-quantized"
     #                        | "mixed" | "disabled"
+    #                        | "fault" (demoted by the degradation ladder)
     blocks: Mapping[str, int] = dataclasses.field(default_factory=dict)
     shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D, S, C)
     precision: str = "fp"  # "fp" | "int8" — which kernel family runs
@@ -249,7 +250,8 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
                  autotune: bool = True, interpret: bool | None = None,
                  precision: str = "auto",
                  reuse: FusionPlan | None = None,
-                 epilogues: bool = True) -> FusionPlan:
+                 epilogues: bool = True,
+                 demote=()) -> FusionPlan:
     """Freeze per-site routing for a lowered ``core.program.Program``.
 
     ``precision``: "auto" (default) matches each site's params — fp32
@@ -267,6 +269,17 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     mismatch for a ``batch_dependent_tiles`` kernel family) tune
     normally.
 
+    ``demote``: site names forced to the reference path with reason
+    ``"fault"`` — the serving degradation ladder's lever: after a fused
+    launch or plan failure blamed on one site, the executor rebuilds
+    its plan with exactly that site demoted (``"vmem"``-style) while
+    every other site stays fused.
+
+    A failure inside one site's decision (an autotune sweep crash, a
+    registry probe raising) is re-raised as a typed
+    ``common.errors.PlanError`` naming the site, so the serving layer
+    can blame — and demote — exactly the offending site.
+
     ``epilogues`` (default on) runs the producer->consumer pass
     (``assign_epilogues``) after the per-site decisions: producers of
     fused int8 consumers get an int8 ``Epilogue`` so the executed
@@ -278,6 +291,7 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     cache is cold) time the real kernels on synthetic inputs here, never
     at trace time.
     """
+    from repro.common.errors import PlanError, ReproError
     from repro.core.program import params_at
     from repro.kernels.compat import default_interpret
 
@@ -285,13 +299,25 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     interpret = default_interpret(interpret)
     enabled = {"dsconv": fuse_dsconv, "mbconv": fuse_mbconv,
                "msa": fuse_msa}
+    demote = frozenset(demote)
     decisions: dict[str, SiteDecision] = {}
     for site in program.fusible():
-        decisions[site.name] = _decide(
-            site, params_at(params, site.param_path),
-            enabled=enabled.get(site.kind, True),  # new kinds default on
-            autotune=autotune, interpret=interpret, precision=precision,
-            reuse=reuse)
+        if site.name in demote:
+            decisions[site.name] = SiteDecision(
+                site.name, site.kind, False, "fault",
+                shape=decision_shape(site))
+            continue
+        try:
+            decisions[site.name] = _decide(
+                site, params_at(params, site.param_path),
+                enabled=enabled.get(site.kind, True),  # new kinds default
+                autotune=autotune, interpret=interpret,
+                precision=precision, reuse=reuse)
+        except Exception as e:
+            site_name = getattr(e, "site", None) if isinstance(
+                e, ReproError) else None
+            raise PlanError(f"planning {site.name} failed: {e}",
+                            site=site_name or site.name) from e
     ep_map: dict[str, object] = {}
     if epilogues:
         ep_map, q_in = assign_epilogues(program, params, decisions)

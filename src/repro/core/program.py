@@ -34,6 +34,7 @@ from typing import Any, Mapping, Tuple
 
 import jax.numpy as jnp
 
+from repro.common.errors import LoweringError
 from repro.core.efficientvit import (
     B1, EfficientViTConfig, OpRecord, _act, conv_bn_act, dsconv, mbconv)
 from repro.core.relu_attention import MSAConfig, msa
@@ -205,21 +206,25 @@ def _validate_geometry(sites: Tuple[Site, ...], size: int) -> None:
     surfacing as a conv shape error deep inside a jitted executor: each
     site consumes exactly what its predecessor produced, residual sites
     are shape-preserving, and no spatial extent collapses to zero.
+
+    Violations raise ``LoweringError`` (a ``ValueError`` subclass, for
+    pre-existing callers) naming the offending site, so the serving
+    layer's fault handling can type-dispatch on it and blame the site.
     """
     prev = None
     for s in sites:
         if any(dim <= 0 for dim in s.out_shape):
-            raise ValueError(
+            raise LoweringError(
                 f"site {s.name}: out_shape {s.out_shape} has a "
-                f"non-positive dim at image_size={size}")
+                f"non-positive dim at image_size={size}", site=s.name)
         if prev is not None and s.in_shape != prev.out_shape:
-            raise ValueError(
+            raise LoweringError(
                 f"geometry break at {prev.name} -> {s.name}: "
-                f"{prev.out_shape} != {s.in_shape}")
+                f"{prev.out_shape} != {s.in_shape}", site=s.name)
         if s.residual and s.in_shape != s.out_shape:
-            raise ValueError(
+            raise LoweringError(
                 f"residual site {s.name} is not shape-preserving: "
-                f"{s.in_shape} -> {s.out_shape}")
+                f"{s.in_shape} -> {s.out_shape}", site=s.name)
         prev = s
 
 
@@ -230,9 +235,9 @@ def _lower(cfg: EfficientViTConfig, batch: int,
     size = image_size or cfg.image_size
     B = batch
     if B < 1:
-        raise ValueError(f"batch must be >= 1, got {B}")
+        raise LoweringError(f"batch must be >= 1, got {B}")
     if size % 32:
-        raise ValueError(
+        raise LoweringError(
             f"image_size={size}: EfficientViT downsamples by 2 five "
             f"times (stem, S1, S2, S3.down, S4.down), so serving "
             f"resolutions must be multiples of 32 (192/224/256/...)")

@@ -29,17 +29,28 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["autotune", "shape_key", "pad_to_multiple", "cache_path",
-           "clear_memory_cache", "SWEEP_COUNT"]
+           "clear_memory_cache", "set_fault_hook", "SWEEP_COUNT"]
 
 # in-memory cache: {cache_key: choice-dict}; mirrors the on-disk file
 _MEM: dict[str, dict] = {}
 _DISK_LOADED: set[str] = set()
+
+# failure-injection hook (serving.faults.FaultPlan.install): called as
+# hook(kind, key) at the top of every autotune() consultation, so chaos
+# tests can make a sweep crash deterministically.  None in production.
+_FAULT_HOOK: Callable[[str, Sequence], None] | None = None
+
+
+def set_fault_hook(hook: Callable[[str, Sequence], None] | None) -> None:
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
 
 # number of timed sweeps this process has run (tests assert cache hits
 # by checking this does not grow on a reload)
@@ -60,32 +71,62 @@ def clear_memory_cache() -> None:
     _DISK_LOADED.clear()
 
 
+def _read_cache_file(path: str) -> dict:
+    """Parse the cache file into {key: choice-dict}, tolerating damage.
+
+    A corrupt or truncated file (killed process mid-write before atomic
+    replace existed, disk damage, hand edits) must cost a warning and a
+    re-tune, never a crash: a poisoned cache would otherwise take down
+    every later process on this machine.  Malformed entries are dropped
+    individually so one bad row doesn't discard a whole valid cache.
+    """
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        warnings.warn(
+            f"autotune cache {path!r} is corrupt ({e!r}); ignoring it — "
+            f"affected shapes will re-tune and the next save rewrites "
+            f"the file atomically", RuntimeWarning, stacklevel=3)
+        return {}
+    if not isinstance(raw, dict):
+        warnings.warn(
+            f"autotune cache {path!r} holds {type(raw).__name__}, not a "
+            f"dict; ignoring it", RuntimeWarning, stacklevel=3)
+        return {}
+    bad = [k for k, v in raw.items() if not isinstance(v, dict)]
+    if bad:
+        warnings.warn(
+            f"autotune cache {path!r}: dropping {len(bad)} malformed "
+            f"entries (first: {bad[0]!r})", RuntimeWarning, stacklevel=3)
+    return {k: v for k, v in raw.items() if isinstance(v, dict)}
+
+
 def _load_disk(path: str) -> None:
     if path in _DISK_LOADED:
         return
     _DISK_LOADED.add(path)
-    try:
-        with open(path) as f:
-            _MEM.update(json.load(f))
-    except (OSError, ValueError):
-        pass
+    _MEM.update(_read_cache_file(path))
 
 
 def _save_disk(path: str) -> None:
     try:
         # merge under the current disk state so concurrent processes
         # tuning different shapes don't drop each other's entries
-        merged: dict[str, dict] = {}
-        try:
-            with open(path) as f:
-                merged.update(json.load(f))
-        except (OSError, ValueError):
-            pass
+        merged = _read_cache_file(path)
         merged.update(_MEM)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # atomic publish: write a private temp file, fsync it, then
+        # rename over the target — a process killed at ANY point leaves
+        # either the old complete cache or the new complete cache on
+        # disk, never a truncated file later runs would choke on
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             json.dump(merged, f, indent=1, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     except OSError:
         pass  # read-only FS: keep the in-memory cache only
@@ -146,6 +187,8 @@ def autotune(kind: str, key: Sequence, candidates: Sequence[dict],
     """
     global SWEEP_COUNT
     assert candidates, "autotune needs at least one candidate"
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK(kind, key)
     path = cache_path()
     _load_disk(path)
     ck = _key(kind, key)

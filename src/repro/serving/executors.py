@@ -23,22 +23,44 @@ An ``Executor`` is one fully specialized pipeline for an
 with optional capacity eviction, exposes ``warmup`` (pre-compile the
 expected working set before traffic arrives) and reports cache behavior
 (hits / misses / plan reuse / evictions) into a shared ``Telemetry``.
+
+## Fault tolerance
+
+Serve-time compiles can fail (and, under a ``serving.faults.FaultPlan``,
+are *made* to fail), so the cache is hardened:
+
+  * a failed ``lower`` -> ``plan`` -> ``jit`` build never leaves a
+    half-built entry — nothing is inserted until the build succeeds,
+    a failed entry's donor plan is never published, and a warmed entry
+    whose compile crashes is evicted;
+  * build failures are **negative-cached** for ``neg_ttl_s`` seconds:
+    a hot failing bucket raises a cheap typed ``ExecutorError`` on every
+    request instead of re-running the whole compile pipeline each time;
+  * each key carries a **degradation ladder** (``DegradeState``): level
+    0 is the normal fused plan, ``degrade(site=...)`` replans with the
+    blamed site demoted to the reference path (``"vmem"``-style, reason
+    ``"fault"``), a further ``degrade`` drops to the reference IR
+    interpreter (``plan=None``), and ``pin_fp`` rebuilds the plan at
+    forced-fp precision — the response to an int8 numerics blow-up.
+    Degraded keys stop donating plans and rebuild on next use.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Tuple
+import time
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.common.errors import ExecutorError, ReproError
 from repro.core.efficientvit import EfficientViTConfig
 from repro.core.fusion import plan_program
 from repro.core.program import execute, lower
 from repro.serving.telemetry import Telemetry
 
-__all__ = ["ExecutorKey", "Executor", "ExecutorCache"]
+__all__ = ["ExecutorKey", "Executor", "ExecutorCache", "DegradeState"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +74,26 @@ class ExecutorKey:
     #                          both dataflows can be cached side by side
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradeState:
+    """Where one executor key sits on the graceful-degradation ladder.
+
+    ``level`` 0 = fully fused; 1 = the ``demoted`` sites replanned onto
+    the reference path, everything else still fused; 2 = the whole key
+    runs the reference IR interpreter (``plan=None`` semantics).
+    ``pinned_fp`` forces the plan to ``precision="fp"`` — for a
+    quantized tree every int8 kernel demotes to reference, which is the
+    correctness-preserving response to an int8 numerics blow-up.
+    """
+    level: int = 0
+    demoted: frozenset = frozenset()
+    pinned_fp: bool = False
+
+    @property
+    def degraded(self) -> bool:
+        return self.level > 0 or self.pinned_fp
+
+
 class Executor:
     """One compiled (program, plan, jitted forward) for a fixed shape.
 
@@ -59,9 +101,17 @@ class Executor:
     with_epilogues``): its sites carry the ``Epilogue`` each boundary
     actually delivers, which is what the serving benchmarks and the
     delivered-HBM accounting introspect.
+
+    ``degraded`` is the key's ``DegradeState`` (None = healthy);
+    ``faults`` is an optional ``serving.faults.FaultPlan`` consulted at
+    dispatch: "kernel.launch" faults only fire on executors that
+    actually launch fused kernels, and "epilogue.numerics" corruption
+    only on executors running fused int8 sites — so a degraded rebuild
+    genuinely escapes the failure it degraded away from.
     """
 
-    def __init__(self, key: ExecutorKey, program, plan):
+    def __init__(self, key: ExecutorKey, program, plan, *,
+                 faults=None, degraded: Optional[DegradeState] = None):
         self.key = key
         self.program = program.with_epilogues(plan) if plan is not None \
             else program
@@ -69,12 +119,29 @@ class Executor:
         self._fn = jax.jit(lambda p, x: execute(program, p, x, plan=plan))
         self.calls = 0
         self.warmed = False
+        self.faults = faults
+        self.degraded = degraded
+        decisions = plan.decisions.values() if plan is not None else ()
+        self.fused_sites = tuple(d.name for d in decisions if d.fused)
+        self._runs_int8 = any(d.fused and d.precision == "int8"
+                              for d in decisions)
 
     def __call__(self, params, x):
         """Dispatch the compiled forward.  Asynchronous: the result is a
         device array; nothing blocks the host until someone reads it."""
         self.calls += 1
-        return self._fn(params, x)
+        if self.faults is not None and self.fused_sites:
+            self.faults.fire(
+                "kernel.launch", batch=self.key.batch,
+                resolution=self.key.resolution,
+                precision=self.key.precision, sites=self.fused_sites)
+        out = self._fn(params, x)
+        if self.faults is not None and self._runs_int8:
+            out = self.faults.corrupt(
+                "epilogue.numerics", out, batch=self.key.batch,
+                resolution=self.key.resolution,
+                precision=self.key.precision)
+        return out
 
     def warm(self, params) -> "Executor":
         """Trigger compilation (and the first-device-touch costs) on a
@@ -98,6 +165,10 @@ class ExecutorCache:
     for every later bucket at that resolution: their ``plan_program``
     call inherits tuned block choices site-by-site (``reuse=``) instead
     of re-consulting the autotuner.
+
+    ``faults`` / ``neg_ttl_s`` / ``clock`` are the fault-tolerance
+    knobs (see the module docstring); all default to inert, so a cache
+    built the pre-fault way behaves identically.
     """
 
     def __init__(self, params, cfg: EfficientViTConfig, *,
@@ -106,7 +177,8 @@ class ExecutorCache:
                  autotune: bool = True, interpret: bool | None = None,
                  capacity: int | None = None,
                  telemetry: Telemetry | None = None,
-                 epilogues: bool = True):
+                 epilogues: bool = True,
+                 faults=None, neg_ttl_s: float = 1.0, clock=None):
         assert buckets and all(b >= 1 for b in buckets), buckets
         self.params = params
         self.cfg = cfg
@@ -118,9 +190,14 @@ class ExecutorCache:
         self.capacity = capacity
         self.epilogues = epilogues
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.faults = faults
+        self.neg_ttl_s = float(neg_ttl_s)
+        self.clock = clock if clock is not None else time.monotonic
         self._lru: "collections.OrderedDict[ExecutorKey, Executor]" = \
             collections.OrderedDict()
         self._donor_plans: dict[int, object] = {}   # resolution -> plan
+        self._neg: dict[ExecutorKey, tuple[float, ReproError]] = {}
+        self._degrade: dict[ExecutorKey, DegradeState] = {}
 
     # -- bucket policy ---------------------------------------------------
     def bucket_for(self, n: int) -> int:
@@ -144,16 +221,41 @@ class ExecutorCache:
         return out
 
     # -- the cache -------------------------------------------------------
+    def _key(self, batch: int, resolution: int) -> ExecutorKey:
+        return ExecutorKey(int(batch), int(resolution), self.precision,
+                           self.epilogues)
+
     def get(self, batch: int, resolution: int) -> Executor:
-        key = ExecutorKey(int(batch), int(resolution), self.precision,
-                          self.epilogues)
+        key = self._key(batch, resolution)
         ex = self._lru.get(key)
         if ex is not None:
             self._lru.move_to_end(key)
             self.telemetry.count("executor_hit")
             return ex
+        neg = self._neg.get(key)
+        if neg is not None:
+            expiry, cause = neg
+            if self.clock() < expiry:
+                # hot failing bucket: answer from the negative cache
+                # instead of re-running the whole compile pipeline
+                self.telemetry.count("negative_cache_hit")
+                err = ExecutorError(
+                    f"executor {key} failed recently (negative-cached "
+                    f"for {self.neg_ttl_s:g}s): {cause}", key=key,
+                    site=getattr(cause, "site", None))
+                raise err from cause
+            del self._neg[key]
         self.telemetry.count("executor_miss")
-        ex = self._build(key)
+        try:
+            ex = self._build(key)
+        except ReproError as e:
+            self._note_build_failure(key, e)
+            raise
+        except Exception as e:  # non-typed crash inside lower/plan/jit
+            err = ExecutorError(f"executor build failed for {key}: {e}",
+                                key=key)
+            self._note_build_failure(key, err)
+            raise err from e
         self._lru[key] = ex
         while self.capacity is not None and len(self._lru) > self.capacity:
             evicted_key, _ = self._lru.popitem(last=False)
@@ -168,24 +270,94 @@ class ExecutorCache:
         requests: smallest cached bucket >= n."""
         return self.get(self.bucket_for(n), resolution)
 
+    def _note_build_failure(self, key: ExecutorKey,
+                            err: ReproError) -> None:
+        """Record a failed build: count it and negative-cache the key.
+
+        Nothing was inserted into the LRU (insertion happens only after
+        a successful build) and the donor plan is only published on
+        success, so there is no half-built state to roll back — only
+        the short-TTL negative entry to write.
+        """
+        self.telemetry.count("executor_build_failed")
+        if self.neg_ttl_s > 0:
+            self._neg[key] = (self.clock() + self.neg_ttl_s, err)
+
     def _build(self, key: ExecutorKey) -> Executor:
+        if self.faults is not None:
+            self.faults.fire("executor.compile", batch=key.batch,
+                             resolution=key.resolution,
+                             precision=key.precision)
+        state = self._degrade.get(key)
         program = lower(self.cfg, batch=key.batch,
                         image_size=key.resolution)
         plan = None
-        if self.use_plan:
+        if self.use_plan and not (state is not None and state.level >= 2):
+            precision = "fp" if (state is not None and state.pinned_fp) \
+                else self.precision
             donor = self._donor_plans.get(key.resolution)
             plan = plan_program(program, self.params,
                                 autotune=self.autotune,
                                 interpret=self.interpret,
-                                precision=self.precision, reuse=donor,
-                                epilogues=key.epilogues)
+                                precision=precision, reuse=donor,
+                                epilogues=key.epilogues,
+                                demote=(state.demoted if state is not None
+                                        else ()))
             self.telemetry.count("plans_built")
             reused = sum(d.reused for d in plan.decisions.values())
             if reused:
                 self.telemetry.count("plan_sites_reused", reused)
-            if donor is None:
+            # degraded plans never become donors: their demotions and
+            # forced precision must not leak into healthy buckets
+            if donor is None and (state is None or not state.degraded):
                 self._donor_plans[key.resolution] = plan
-        return Executor(key, program, plan)
+        return Executor(key, program, plan, faults=self.faults,
+                        degraded=state)
+
+    # -- the degradation ladder ------------------------------------------
+    def degradation(self, batch: int, resolution: int
+                    ) -> Optional[DegradeState]:
+        """The key's ladder state (None = healthy, never degraded)."""
+        return self._degrade.get(self._key(batch, resolution))
+
+    def _apply_degrade(self, key: ExecutorKey, state: DegradeState,
+                       counter: str) -> DegradeState:
+        self._degrade[key] = state
+        # evict the current executor (and any negative entry) so the
+        # next get() rebuilds at the new ladder level immediately
+        self._lru.pop(key, None)
+        self._neg.pop(key, None)
+        self.telemetry.count(counter)
+        return state
+
+    def degrade(self, batch: int, resolution: int, *,
+                site: str | None = None) -> DegradeState:
+        """Move one key down the ladder after a fused-launch / compile
+        failure: demote the blamed ``site`` first (everything else
+        stays fused); with no site to blame — or when the demoted plan
+        failed too — fall to the reference IR interpreter."""
+        key = self._key(batch, resolution)
+        state = self._degrade.get(key, DegradeState())
+        if site is not None and state.level == 0:
+            state = dataclasses.replace(
+                state, level=1, demoted=state.demoted | {site})
+        elif site is not None and state.level == 1 \
+                and site not in state.demoted:
+            state = dataclasses.replace(
+                state, demoted=state.demoted | {site})
+        else:
+            state = dataclasses.replace(state, level=2)
+        return self._apply_degrade(key, state, "degraded")
+
+    def pin_fp(self, batch: int, resolution: int) -> DegradeState:
+        """Pin one key's plan to forced-fp precision (degraded-mode
+        flag) — the response to detected int8 NaN/overflow: on a
+        quantized tree every int8 kernel demotes to the reference path,
+        so correctness survives while the key stays compiled."""
+        key = self._key(batch, resolution)
+        state = dataclasses.replace(
+            self._degrade.get(key, DegradeState()), pinned_fp=True)
+        return self._apply_degrade(key, state, "pinned_fp")
 
     # -- introspection / lifecycle --------------------------------------
     def keys(self) -> Tuple[ExecutorKey, ...]:
@@ -198,8 +370,16 @@ class ExecutorCache:
     def warmup(self, resolutions, buckets=None) -> "ExecutorCache":
         """Pre-build and compile the expected working set (every (bucket,
         resolution) pair) before traffic arrives, so no request pays a
-        lowering/planning/compile stall."""
+        lowering/planning/compile stall.  An entry whose warm-time
+        compile crashes is evicted (no half-built executor stays cached)
+        before the error propagates."""
         for res in resolutions:
             for b in (buckets if buckets is not None else self.buckets):
-                self.get(b, res).warm(self.params)
+                ex = self.get(b, res)
+                try:
+                    ex.warm(self.params)
+                except Exception:
+                    self._lru.pop(ex.key, None)
+                    self.telemetry.count("executor_build_failed")
+                    raise
         return self

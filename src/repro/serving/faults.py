@@ -1,0 +1,160 @@
+"""Failure injection for the serving runtime.
+
+The paper's engine is *reconfigurable* so one accelerator survives
+heterogeneous operation demands; the software analogue is a runtime
+that reconfigures under failure instead of dying.  To test that
+reconfiguration — the retry/backoff path, the executor degradation
+ladder, the fp pin on int8 numerics blow-ups, load shedding — every
+failure mode must be reproducible on demand.  A ``FaultPlan`` is that
+reproducibility: a deterministic schedule of typed faults at named
+injection points, threaded through ``ExecutorCache`` / ``Executor`` /
+``MicroBatchScheduler`` (and hooked into the autotuner), consumed by
+``tests/test_fault_tolerance.py`` and ``benchmarks/chaos_bench.py``.
+
+Injection points (``FAULT_POINTS``) and what firing one does:
+
+    "executor.compile"    raises ``ExecutorError`` inside the executor
+                          build (lower -> plan -> jit) — a serve-time
+                          compile crash
+    "autotune"            raises ``PlanError`` inside ``kernels.
+                          autotune.autotune`` (install the hook with
+                          ``plan.install()``) — a crashed/stalled sweep;
+                          the planner wraps it with the offending site
+    "kernel.launch"       raises ``KernelLaunchError`` at executor
+                          dispatch, naming an offending fused site —
+                          a VMEM-exhausted / failed Pallas launch
+    "epilogue.numerics"   corrupts the executor's output with NaN (no
+                          raise — the failure is *silent*, exactly like
+                          a real int8 epilogue blow-up; the scheduler's
+                          finalize-time guard must catch it)
+    "queue.overload"      raises ``CapacityExceeded`` at admission —
+                          a load spike beyond what the bound models
+
+Faults are *budgeted*: each ``FaultSpec`` fires ``times`` times and
+then disarms, so transient-vs-persistent failures are modeled by the
+budget, and a chaos replay provably injects every class (``fired``)
+and provably stops (``exhausted``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import jax.numpy as jnp
+
+from repro.common.errors import (
+    CapacityExceeded, ExecutorError, KernelLaunchError, PlanError)
+
+__all__ = ["FAULT_POINTS", "FaultSpec", "FaultPlan"]
+
+FAULT_POINTS = ("executor.compile", "autotune", "kernel.launch",
+                "epilogue.numerics", "queue.overload")
+
+_ERROR_FOR_POINT = {
+    "executor.compile": ExecutorError,
+    "autotune": PlanError,
+    "kernel.launch": KernelLaunchError,
+    "queue.overload": CapacityExceeded,
+}
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scheduled fault: fire ``times`` times at ``point``.
+
+    ``match`` filters on the injection context (e.g. ``{"resolution":
+    64}`` or ``{"precision": "int8"}``) — ``None`` matches every firing
+    of the point.  ``site`` names the offending IR site carried on a
+    ``kernel.launch`` error (default: the executor's first fused site).
+    """
+    point: str
+    times: int = 1
+    match: Optional[Mapping] = None
+    site: Optional[str] = None
+    note: str = ""
+
+    def __post_init__(self):
+        if self.point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {self.point!r}; "
+                             f"known: {FAULT_POINTS}")
+
+    def matches(self, ctx: Mapping) -> bool:
+        return self.match is None or all(
+            ctx.get(k) == v for k, v in self.match.items())
+
+
+class FaultPlan:
+    """A deterministic fault schedule + its firing record.
+
+    Pass one to ``ExecutorCache(faults=...)`` / ``MicroBatchScheduler
+    (faults=...)``; call ``install()`` (or use the plan as a context
+    manager) to also hook the autotuner.  An idle plan — no specs, or
+    all budgets spent — never alters behavior: every ``fire`` is a
+    no-op, which is what the no-fault drift gates run against.
+    """
+
+    def __init__(self, *specs: FaultSpec):
+        self.specs = list(specs)
+        self.fired: dict[str, int] = {}
+
+    # -- schedule state --------------------------------------------------
+    def armed(self, point: str, **ctx) -> Optional[FaultSpec]:
+        """The first spec at ``point`` with budget left that matches."""
+        for spec in self.specs:
+            if spec.point == point and spec.times > 0 and spec.matches(ctx):
+                return spec
+        return None
+
+    @property
+    def exhausted(self) -> bool:
+        """Every scheduled fault has fired its full budget."""
+        return all(s.times == 0 for s in self.specs)
+
+    def _consume(self, spec: FaultSpec) -> None:
+        spec.times -= 1
+        self.fired[spec.point] = self.fired.get(spec.point, 0) + 1
+
+    # -- injection -------------------------------------------------------
+    def fire(self, point: str, **ctx) -> None:
+        """Raise the point's typed error if a matching spec is armed."""
+        spec = self.armed(point, **ctx)
+        if spec is None:
+            return
+        self._consume(spec)
+        msg = (f"injected fault at {point} (ctx={ctx})"
+               + (f": {spec.note}" if spec.note else ""))
+        if point == "kernel.launch":
+            sites = ctx.get("sites") or ()
+            site = spec.site if spec.site is not None else \
+                (sites[0] if sites else None)
+            raise KernelLaunchError(msg, site=site)
+        raise _ERROR_FOR_POINT[point](msg, site=spec.site)
+
+    def corrupt(self, point: str, out, **ctx):
+        """Silent-corruption points: return ``out`` with NaN written
+        into it if a matching spec is armed, else ``out`` unchanged."""
+        spec = self.armed(point, **ctx)
+        if spec is None:
+            return out
+        self._consume(spec)
+        return out.at[..., 0].set(jnp.nan)
+
+    # -- autotuner hook --------------------------------------------------
+    def install(self) -> "FaultPlan":
+        """Hook the autotuner so "autotune" faults fire inside sweeps."""
+        from repro.kernels import autotune
+
+        autotune.set_fault_hook(
+            lambda kind, key: self.fire("autotune", kind=kind))
+        return self
+
+    def uninstall(self) -> None:
+        from repro.kernels import autotune
+
+        autotune.set_fault_hook(None)
+
+    def __enter__(self) -> "FaultPlan":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()

@@ -19,6 +19,28 @@ requests and stamps completion latency into telemetry.
 Wall-clock is injectable (``clock=``): the serving benchmark replays
 recorded traces on a manual clock, so queue-wait and deadline behavior
 are deterministic and testable.
+
+## Fault tolerance
+
+The scheduler guarantees every submitted request terminates in exactly
+ONE of three states (``Request.status``), with ``Request.error`` typed
+(``repro.common.errors``) for the two failure outcomes:
+
+    "completed"  logits delivered;
+    "shed"       never served: admission bound hit (CapacityExceeded)
+                 or the hard per-request deadline expired while queued
+                 (DeadlineExceeded) — an expired request is swept out
+                 *before* batch formation, so it never occupies a slot;
+    "failed"     served ``max_retries`` times and every attempt raised.
+
+Failed dispatches (executor build errors, fused-launch faults, negative
+-cache hits) retry with exponential backoff; from the second failure on
+the executor cache's degradation ladder moves (the blamed site demoted,
+then the reference interpreter), and a ``NumericsError`` — finalize
+detects NaN/Inf in delivered logits — pins the bucket's plan to fp
+immediately.  All of it is surfaced through ``Telemetry``: ``shed`` /
+``retries`` / ``failed`` / ``degraded`` / ``pinned_fp`` counters plus
+per-bucket error counts.
 """
 from __future__ import annotations
 
@@ -30,6 +52,9 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.errors import (
+    CapacityExceeded, DeadlineExceeded, ExecutorError, NumericsError,
+    ReproError)
 from repro.serving.executors import ExecutorCache
 from repro.serving.telemetry import Telemetry
 
@@ -41,12 +66,23 @@ __all__ = ["Request", "BucketedPolicy", "FixedMicrobatchPolicy",
 class Request:
     """One classification request: an (H, W, 3) image + optional deadline
     (milliseconds after arrival) by which it should be dispatched even if
-    its bucket has not filled."""
+    its bucket has not filled.
+
+    ``deadline_ms`` is the *soft* target — it triggers a tail flush so
+    the request dispatches by then.  ``timeout_ms`` is the *hard* SLA:
+    once it expires the result is worthless, so the scheduler sheds the
+    request (``status="shed"``, ``error=DeadlineExceeded``) instead of
+    spending a batch slot on it.
+    """
     rid: int
     image: object
     deadline_ms: Optional[float] = None
+    timeout_ms: Optional[float] = None   # hard deadline; None = never shed
     arrival: float = 0.0                 # stamped by submit()
     logits: Optional[np.ndarray] = None  # filled by finalize()
+    status: str = "pending"              # pending | completed | shed | failed
+    error: Optional[ReproError] = None   # typed cause for shed/failed
+    retries: int = 0                     # failed dispatch attempts so far
 
     @property
     def resolution(self) -> int:
@@ -113,31 +149,83 @@ class MicroBatchScheduler:
         sched.finalize()       # req.logits populated
 
     or one-shot: ``sched.serve(requests) -> (n, num_classes)``.
+
+    Fault-tolerance knobs (all inert by default):
+    ``max_queue_depth`` bounds total admission (beyond it, submits shed
+    with ``CapacityExceeded``); ``max_retries`` / ``backoff_ms`` /
+    ``backoff_base`` shape the retry-with-exponential-backoff policy
+    for failed dispatches; ``faults`` is a ``serving.faults.FaultPlan``
+    consulted at admission (the "queue.overload" point).
     """
 
     def __init__(self, cache: ExecutorCache, params, *,
                  policy=None, telemetry: Telemetry | None = None,
-                 clock=None):
+                 clock=None, max_queue_depth: int | None = None,
+                 max_retries: int = 4, backoff_ms: float = 10.0,
+                 backoff_base: float = 2.0, faults=None):
         self.cache = cache
         self.params = params
         self.policy = policy if policy is not None else BucketedPolicy()
         self.telemetry = (telemetry if telemetry is not None
                           else cache.telemetry)
         self.clock = clock if clock is not None else time.monotonic
+        self.max_queue_depth = max_queue_depth
+        self.max_retries = int(max_retries)
+        self.backoff_ms = float(backoff_ms)
+        self.backoff_base = float(backoff_base)
+        self.faults = faults
         self._queues: dict[int, collections.deque] = {}
         self._pending: list = []     # (device_out, requests, bucket_key)
+        self._retry: list = []       # (not_before, resolution, requests)
+
+    # -- terminal states (the no-lost / no-duplicated invariant) ---------
+    def _shed(self, req: Request, err: ReproError) -> None:
+        assert req.status == "pending", (req.rid, req.status)
+        req.status, req.error = "shed", err
+        self.telemetry.count("shed")
+        self.telemetry.count(
+            "shed_deadline" if isinstance(err, DeadlineExceeded)
+            else "shed_capacity")
+
+    def _fail(self, req: Request, err: ReproError) -> None:
+        assert req.status == "pending", (req.rid, req.status)
+        req.status, req.error = "failed", err
+        self.telemetry.count("failed")
 
     # -- admission -------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Admit one request; returns False when it was shed instead
+        (bounded queue / overload fault), with ``req.error`` typed."""
         req.arrival = self.clock()
+        self.telemetry.count("submitted")
+        if self.faults is not None:
+            try:
+                self.faults.fire("queue.overload",
+                                 resolution=req.resolution)
+            except CapacityExceeded as e:
+                self._shed(req, e)
+                return False
+        if self.max_queue_depth is not None \
+                and self.queue_depth() >= self.max_queue_depth:
+            self._shed(req, CapacityExceeded(
+                f"admission queue full ({self.max_queue_depth}); "
+                f"request {req.rid} shed"))
+            return False
         self._queues.setdefault(req.resolution,
                                 collections.deque()).append(req)
-        self.telemetry.count("submitted")
+        return True
 
     def queue_depth(self, resolution: int | None = None) -> int:
         if resolution is not None:
             return len(self._queues.get(resolution, ()))
         return sum(len(q) for q in self._queues.values())
+
+    def outstanding(self) -> int:
+        """Requests not yet terminal: queued + awaiting retry + in
+        flight on the device."""
+        return (self.queue_depth()
+                + sum(len(reqs) for _, _, reqs in self._retry)
+                + sum(len(reqs) for _, reqs, _ in self._pending))
 
     # -- batch formation + dispatch -------------------------------------
     def _due(self, q) -> bool:
@@ -145,9 +233,62 @@ class MicroBatchScheduler:
         return any(r.deadline_ms is not None
                    and now >= r.arrival + r.deadline_ms / 1e3 for r in q)
 
+    def _expired(self, req: Request, now: float) -> bool:
+        return req.timeout_ms is not None \
+            and now > req.arrival + req.timeout_ms / 1e3
+
+    def _sweep_expired(self) -> int:
+        """Shed every queued/retry-parked request whose hard deadline
+        passed — BEFORE batch formation, so none occupies a slot."""
+        now = self.clock()
+        shed = 0
+        for res, q in self._queues.items():
+            keep = collections.deque()
+            for r in q:
+                if self._expired(r, now):
+                    self._shed(r, DeadlineExceeded(
+                        f"request {r.rid} expired after "
+                        f"{r.timeout_ms:g} ms in queue"))
+                    shed += 1
+                else:
+                    keep.append(r)
+            self._queues[res] = keep
+        retry = []
+        for not_before, res, reqs in self._retry:
+            live = []
+            for r in reqs:
+                if self._expired(r, now):
+                    self._shed(r, DeadlineExceeded(
+                        f"request {r.rid} expired after "
+                        f"{r.timeout_ms:g} ms (while backing off)"))
+                    shed += 1
+                else:
+                    live.append(r)
+            if live:
+                retry.append((not_before, res, live))
+        self._retry = retry
+        return shed
+
+    def _requeue_ripe_retries(self, drain: bool) -> None:
+        """Move retry groups whose backoff elapsed back to the FRONT of
+        their admission queue (they are the oldest requests)."""
+        now = self.clock()
+        parked = []
+        for not_before, res, reqs in self._retry:
+            if drain or now >= not_before:
+                q = self._queues.setdefault(res, collections.deque())
+                for r in reversed(reqs):
+                    q.appendleft(r)
+            else:
+                parked.append((not_before, res, reqs))
+        self._retry = parked
+
     def step(self, *, drain: bool = False) -> int:
         """Form and dispatch every ready batch; returns the number of
-        requests dispatched.  ``drain=True`` treats all queues as due."""
+        requests dispatched.  ``drain=True`` treats all queues as due
+        (and retries immediately, ignoring remaining backoff)."""
+        self._sweep_expired()
+        self._requeue_ripe_retries(drain)
         dispatched = 0
         for res, q in list(self._queues.items()):
             due = drain or self._due(q)
@@ -163,31 +304,96 @@ class MicroBatchScheduler:
     def _dispatch(self, resolution: int, reqs: List[Request],
                   bucket: int) -> None:
         now = self.clock()
+        key = (bucket, resolution, self.cache.precision)
+        try:
+            ex = self.cache.get(bucket, resolution)
+        except ReproError as e:
+            self._on_failure(resolution, reqs, key, e)
+            return
         imgs = np.stack([np.asarray(r.image, np.float32) for r in reqs])
         if bucket > len(reqs):
             pad = np.zeros((bucket - len(reqs),) + imgs.shape[1:],
                            imgs.dtype)
             imgs = np.concatenate([imgs, pad])
-        ex = self.cache.get(bucket, resolution)
-        out = ex(self.params, jnp.asarray(imgs))   # async, no host sync
-        key = (bucket, resolution, self.cache.precision)
+        try:
+            out = ex(self.params, jnp.asarray(imgs))  # async, no host sync
+        except ReproError as e:
+            self._on_failure(resolution, reqs, key, e)
+            return
         self.telemetry.record_dispatch(
             key, len(reqs), bucket,
-            queue_depth=len(self._queues[resolution]),
+            queue_depth=len(self._queues.get(resolution, ())),
             wait_ms=[(now - r.arrival) * 1e3 for r in reqs])
         self._pending.append((out, reqs, key))
+
+    # -- failure handling: retry/backoff + the degradation ladder --------
+    def _on_failure(self, resolution: int, reqs: List[Request], key,
+                    err: ReproError) -> None:
+        """One dispatch (or finalize) attempt failed for a whole group.
+
+        Attempt 1 of a *transient* error retries the same executor after
+        backoff; from attempt 2 on (or immediately for persistent
+        errors) the cache's degradation ladder moves — the blamed site
+        demoted, then the reference interpreter — and a numerics error
+        pins the bucket to fp at once.  Requests whose retry budget is
+        spent terminate as "failed"; the rest park in the retry buffer
+        with exponential backoff.
+        """
+        self.telemetry.count("dispatch_failures")
+        self.telemetry.record_error(key)
+        attempt = max(r.retries for r in reqs) + 1
+        for r in reqs:
+            r.retries = attempt
+        bucket = key[0]
+        if isinstance(err, NumericsError):
+            self.cache.pin_fp(bucket, resolution)
+        elif not err.transient or attempt >= 2:
+            self.cache.degrade(bucket, resolution,
+                               site=getattr(err, "site", None))
+        if attempt > self.max_retries:
+            for r in reqs:
+                self._fail(r, err)
+            return
+        self.telemetry.count("retries", len(reqs))
+        not_before = self.clock() + self.backoff_ms / 1e3 \
+            * self.backoff_base ** (attempt - 1)
+        self._retry.append((not_before, resolution, list(reqs)))
 
     # -- completion ------------------------------------------------------
     def finalize(self) -> int:
         """Block on outstanding dispatches (in dispatch order), scatter
         logits onto requests, stamp completion latency.  Returns the
-        number of requests completed."""
+        number of requests completed.
+
+        This is where async failures surface: a compile/launch error
+        raised at materialization, or non-finite logits (the int8
+        epilogue blow-up signature), routes the batch through the same
+        retry/degradation path as a dispatch failure — call ``step()``
+        again afterwards to re-dispatch (``outstanding()`` tells you
+        whether anything went back).
+        """
         done = 0
-        for out, reqs, key in self._pending:
-            arr = np.asarray(out)                  # sync on this chunk
+        pending, self._pending = self._pending, []
+        for out, reqs, key in pending:
+            try:
+                arr = np.asarray(out)              # sync on this chunk
+            except ReproError as e:
+                self._on_failure(key[1], reqs, key, e)
+                continue
+            except Exception as e:                 # untyped XLA crash
+                self._on_failure(key[1], reqs, key, ExecutorError(
+                    f"materializing executor {key} output failed: {e}"))
+                continue
+            if not np.all(np.isfinite(arr[:len(reqs)])):
+                self._on_failure(key[1], reqs, key, NumericsError(
+                    f"non-finite logits delivered by executor {key} "
+                    f"(int8 epilogue blow-up signature)", key=key))
+                continue
             t = self.clock()
             for i, r in enumerate(reqs):
+                assert r.status == "pending", (r.rid, r.status)
                 r.logits = arr[i]
+                r.status = "completed"
             self.telemetry.record_latency(
                 key, [(t - r.arrival) * 1e3 for r in reqs])
             done += len(reqs)
@@ -197,9 +403,16 @@ class MicroBatchScheduler:
 
     # -- one-shot --------------------------------------------------------
     def serve(self, requests: List[Request]) -> np.ndarray:
-        """Submit, drain, finalize; logits stacked in request order."""
+        """Submit, drain, finalize (looping until every request is
+        terminal — retries included); logits stacked in request order.
+        Raises the typed error of the first non-completed request if
+        any was shed or failed."""
         for r in requests:
             self.submit(r)
-        self.step(drain=True)
-        self.finalize()
+        while self.outstanding():
+            self.step(drain=True)
+            self.finalize()
+        bad = next((r for r in requests if r.status != "completed"), None)
+        if bad is not None:
+            raise bad.error
         return np.stack([r.logits for r in requests])

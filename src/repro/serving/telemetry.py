@@ -52,6 +52,7 @@ class BucketStats:
     dispatches: int = 0
     samples: int = 0          # real requests served
     padded: int = 0           # slots filled with zero-padding
+    errors: int = 0           # failed dispatch/finalize attempts
     queue_depth: collections.deque = dataclasses.field(default_factory=_ring)
     wait_ms: collections.deque = dataclasses.field(default_factory=_ring)
     latency_ms: collections.deque = dataclasses.field(default_factory=_ring)
@@ -67,6 +68,9 @@ class BucketStats:
             "dispatches": self.dispatches,
             "samples": self.samples,
             "padded": self.padded,
+            "errors": self.errors,
+            "error_rate": (self.errors / (self.dispatches + self.errors)
+                           if self.dispatches + self.errors else 0.0),
             "occupancy": self.occupancy,
             "queue_depth_p50": percentile(self.queue_depth, 0.5),
             "wait_ms_p50": percentile(self.wait_ms, 0.5),
@@ -111,6 +115,10 @@ class Telemetry:
 
     def record_latency(self, key, latencies_ms) -> None:
         self.bucket(key).latency_ms.extend(float(x) for x in latencies_ms)
+
+    def record_error(self, key) -> None:
+        """One failed dispatch/finalize attempt against this bucket."""
+        self.bucket(key).errors += 1
 
     # -- aggregate views -------------------------------------------------
     def total(self, field: str) -> int:

@@ -67,11 +67,13 @@ class VisionServeConfig:
 
 class VisionEngine:
     def __init__(self, params, cfg: EfficientViTConfig,
-                 serve_cfg: VisionServeConfig = VisionServeConfig()):
+                 serve_cfg: VisionServeConfig = VisionServeConfig(), *,
+                 faults=None):
         assert serve_cfg.policy in ("bucketed", "fixed"), serve_cfg.policy
         self.params = params
         self.cfg = cfg
         self.serve_cfg = serve_cfg
+        self.faults = faults  # serving.faults.FaultPlan (chaos testing)
         mb = serve_cfg.microbatch
         buckets = serve_cfg.buckets
         if buckets is None:
@@ -86,7 +88,7 @@ class VisionEngine:
             params, cfg, buckets=buckets, precision=serve_cfg.precision,
             use_plan=serve_cfg.use_plan, autotune=serve_cfg.autotune,
             capacity=serve_cfg.capacity, telemetry=self.telemetry,
-            epilogues=serve_cfg.epilogues)
+            epilogues=serve_cfg.epilogues, faults=faults)
         # primary executor built eagerly: plan construction (autotune
         # sweeps included) happens here, outside the request loop, and
         # .program / .plan keep their pre-runtime meaning
@@ -142,15 +144,21 @@ class VisionEngine:
         return np.asarray(jnp.argmax(self.logits(images), axis=-1))
 
     # -- request API (the serving runtime) ------------------------------
-    def scheduler(self, *, clock=None, policy=None) -> MicroBatchScheduler:
+    def scheduler(self, *, clock=None, policy=None,
+                  **kw) -> MicroBatchScheduler:
         """A continuous micro-batching scheduler bound to this engine's
-        executor cache, params and telemetry."""
+        executor cache, params and telemetry.  Extra keywords
+        (``max_queue_depth``, ``max_retries``, ``backoff_ms``, ...) pass
+        through to ``MicroBatchScheduler``; the engine's fault plan is
+        installed unless overridden."""
         if policy is None:
             policy = (FixedMicrobatchPolicy(self.serve_cfg.microbatch)
                       if self.serve_cfg.policy == "fixed"
                       else BucketedPolicy())
+        kw.setdefault("faults", self.faults)
         return MicroBatchScheduler(self.cache, self.params, policy=policy,
-                                   telemetry=self.telemetry, clock=clock)
+                                   telemetry=self.telemetry, clock=clock,
+                                   **kw)
 
     def serve(self, requests: list[Request]) -> np.ndarray:
         """Serve a list of ``scheduler.Request``s (mixed resolutions and

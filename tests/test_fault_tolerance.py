@@ -1,0 +1,452 @@
+"""Fault-tolerance layer: typed errors, hardened caches, the executor
+degradation ladder, and the scheduler's retry/shed/terminal-state
+guarantees (ISSUE 6).
+
+Device-heavy paths (real executor builds) are kept to a handful of
+cases; the scheduler's failure policy is swept property-style against a
+fake executor cache, which keeps hundreds of random fault schedules
+host-only and fast.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import sweep
+from repro.common.errors import (
+    CapacityExceeded, DeadlineExceeded, ExecutorError, KernelLaunchError,
+    LoweringError, NumericsError, PlanError, ReproError)
+from repro.core.efficientvit import B1_SMOKE, init_efficientvit
+from repro.core.fusion import plan_program
+from repro.core.program import lower
+from repro.kernels import autotune as autotune_mod
+from repro.serving.executors import ExecutorCache
+from repro.serving.faults import FAULT_POINTS, FaultPlan, FaultSpec
+from repro.serving.scheduler import (
+    ManualClock, MicroBatchScheduler, Request)
+from repro.serving.telemetry import Telemetry
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_efficientvit(jax.random.PRNGKey(0), B1_SMOKE)
+
+
+# -- the typed error hierarchy ---------------------------------------------
+
+def test_error_hierarchy():
+    for cls in (LoweringError, PlanError, ExecutorError, KernelLaunchError,
+                NumericsError, DeadlineExceeded, CapacityExceeded):
+        assert issubclass(cls, ReproError)
+    # LoweringError doubles as ValueError: callers (and existing tests)
+    # that catch the old bare ValueError geometry checks keep working
+    assert issubclass(LoweringError, ValueError)
+    assert issubclass(KernelLaunchError, ExecutorError)
+    assert issubclass(NumericsError, ExecutorError)
+    # transient => worth a same-plan retry; persistent => degrade
+    assert PlanError("x").transient and ExecutorError("x").transient
+    assert not NumericsError("x").transient
+    assert not LoweringError("x").transient
+    e = KernelLaunchError("boom", site="S3.evit0.msa", key=("k",))
+    assert e.site == "S3.evit0.msa" and e.key == ("k",)
+
+
+def test_lower_raises_typed_lowering_error():
+    with pytest.raises(LoweringError, match="multiples of 32"):
+        lower(B1_SMOKE, image_size=33)
+    with pytest.raises(LoweringError, match="batch"):
+        lower(B1_SMOKE, batch=0)
+    # and the old-style handler still catches it
+    with pytest.raises(ValueError):
+        lower(B1_SMOKE, image_size=31)
+
+
+def test_plan_error_blames_site(params):
+    program = lower(B1_SMOKE, batch=1, image_size=32)
+    plan = FaultPlan(FaultSpec("autotune", times=1))
+    with plan:
+        with pytest.raises(PlanError) as ei:
+            plan_program(program, params, autotune=False)
+    assert ei.value.site is not None
+    assert ei.value.site in {s.name for s in program.sites}
+    assert ei.value.site in str(ei.value)
+
+
+def test_plan_demote_forces_reference(params):
+    program = lower(B1_SMOKE, batch=1, image_size=32)
+    base = plan_program(program, params, autotune=False)
+    victim = next(d.name for d in base.decisions.values() if d.fused)
+    plan = plan_program(program, params, autotune=False, demote=(victim,))
+    d = plan.decisions[victim]
+    assert not d.fused and d.reason == "fault"
+    others = [n for n, dec in base.decisions.items()
+              if dec.fused and n != victim]
+    assert all(plan.decisions[n].fused for n in others), \
+        "demoting one site must not unfuse the rest"
+
+
+# -- fault plan mechanics --------------------------------------------------
+
+def test_fault_plan_budget_and_matching():
+    plan = FaultPlan(FaultSpec("kernel.launch", times=2,
+                               match={"resolution": 64}, site="S"))
+    plan.fire("kernel.launch", resolution=32)          # no match: no-op
+    with pytest.raises(KernelLaunchError) as ei:
+        plan.fire("kernel.launch", resolution=64)
+    assert ei.value.site == "S"
+    with pytest.raises(KernelLaunchError):
+        plan.fire("kernel.launch", resolution=64)
+    plan.fire("kernel.launch", resolution=64)          # budget spent
+    assert plan.exhausted and plan.fired == {"kernel.launch": 2}
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultSpec("no.such.point")
+
+
+def test_fault_plan_corrupt_is_silent():
+    plan = FaultPlan(FaultSpec("epilogue.numerics", times=1))
+    out = jnp.ones((2, 3))
+    bad = plan.corrupt("epilogue.numerics", out)
+    assert bool(jnp.isnan(bad).any())
+    again = plan.corrupt("epilogue.numerics", out)     # budget spent
+    assert not bool(jnp.isnan(again).any())
+
+
+# -- autotune cache robustness (satellite) ---------------------------------
+
+def test_autotune_corrupt_cache_warns_and_retunes(tmp_autotune_cache):
+    tmp_autotune_cache.write_text('{"truncated": ')   # mid-write kill
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        choice = autotune_mod.autotune("fam", ("k1",), [{"block": 8}])
+    assert choice == {"block": 8}
+    # a later successful sweep rewrites the file, valid again
+    autotune_mod.autotune("fam", ("k1",), [{"block": 8}],
+                          bench=lambda c: jnp.zeros(()))
+    on_disk = json.loads(tmp_autotune_cache.read_text())
+    assert on_disk == {"fam|k1": {"block": 8}}
+
+
+def test_autotune_drops_malformed_entries_individually(tmp_autotune_cache):
+    tmp_autotune_cache.write_text(json.dumps(
+        {"fam|good": {"block": 16}, "fam|bad": [1, 2, 3]}))
+    with pytest.warns(RuntimeWarning, match="malformed"):
+        choice = autotune_mod.autotune("fam", ("good",),
+                                       [{"block": 999}])
+    assert choice == {"block": 16}, "valid entry must survive a bad row"
+
+
+def test_autotune_save_is_atomic(tmp_autotune_cache):
+    autotune_mod.autotune("fam", ("k",), [{"block": 4}],
+                          bench=lambda c: jnp.zeros(()))
+    assert json.loads(tmp_autotune_cache.read_text())
+    leftovers = [f for f in os.listdir(tmp_autotune_cache.parent)
+                 if f.startswith(tmp_autotune_cache.name + ".tmp")]
+    assert not leftovers, "temp file must be renamed away"
+
+
+# -- hardened executor cache (satellite + ladder) --------------------------
+
+def _cache(params, *, faults=None, clock=None, neg_ttl_s=1.0, **kw):
+    return ExecutorCache(params, B1_SMOKE, buckets=(1, 2), autotune=False,
+                         faults=faults, clock=clock, neg_ttl_s=neg_ttl_s,
+                         telemetry=Telemetry(), **kw)
+
+
+def test_failed_build_leaves_no_half_built_entry(params):
+    faults = FaultPlan(FaultSpec("executor.compile", times=1))
+    clock = ManualClock()
+    cache = _cache(params, faults=faults, clock=clock)
+    with pytest.raises(ExecutorError):
+        cache.get(1, 32)
+    assert len(cache) == 0 and cache.keys() == ()
+    assert cache.telemetry.counters["executor_build_failed"] == 1
+
+
+def test_negative_cache_ttl(params):
+    faults = FaultPlan(FaultSpec("executor.compile", times=1))
+    clock = ManualClock()
+    cache = _cache(params, faults=faults, clock=clock, neg_ttl_s=2.0)
+    with pytest.raises(ExecutorError):
+        cache.get(1, 32)
+    # within TTL: typed answer from the negative cache, no rebuild
+    with pytest.raises(ExecutorError, match="negative-cached"):
+        cache.get(1, 32)
+    assert cache.telemetry.counters["negative_cache_hit"] == 1
+    assert cache.telemetry.counters["executor_build_failed"] == 1
+    clock.advance(2.5)             # TTL expired; fault budget spent
+    ex = cache.get(1, 32)
+    assert ex.plan is not None and len(cache) == 1
+
+
+def test_degradation_ladder_levels(params):
+    cache = _cache(params)
+    assert cache.degradation(1, 32) is None
+    s1 = cache.degrade(1, 32, site="stem.ds0")
+    assert s1.level == 1 and s1.demoted == frozenset({"stem.ds0"})
+    ex1 = cache.get(1, 32)
+    assert ex1.degraded == s1
+    assert ex1.plan.decisions["stem.ds0"].reason == "fault"
+    assert "stem.ds0" not in ex1.fused_sites and ex1.fused_sites
+    # same site blamed again -> nothing left to demote -> reference
+    s2 = cache.degrade(1, 32, site="stem.ds0")
+    assert s2.level == 2
+    ex2 = cache.get(1, 32)
+    assert ex2.plan is None and ex2.fused_sites == ()
+    assert cache.telemetry.counters["degraded"] == 2
+
+
+def test_pin_fp_and_degraded_plans_never_donate(params):
+    from repro.core.quantization import quantize_efficientvit
+    qparams = quantize_efficientvit(params)
+    cache = ExecutorCache(qparams, B1_SMOKE, buckets=(1, 2),
+                          precision="int8", autotune=False,
+                          telemetry=Telemetry())
+    st = cache.pin_fp(1, 32)
+    assert st.pinned_fp and st.degraded and st.level == 0
+    ex = cache.get(1, 32)          # degraded build: forced-fp plan
+    assert not any(d.precision == "int8"
+                   for d in ex.plan.decisions.values() if d.fused)
+    assert cache._donor_plans == {}, \
+        "a degraded plan must not become the resolution's donor"
+    ex2 = cache.get(2, 32)         # healthy key at the same resolution
+    assert any(d.fused and d.precision == "int8"
+               for d in ex2.plan.decisions.values()), \
+        "the fp pin must not leak into healthy buckets"
+
+
+# -- scheduler policy against a scriptable fake cache ----------------------
+
+class FakeExecutor:
+    def __init__(self, cache, bucket):
+        self.cache, self.bucket = cache, bucket
+
+    def __call__(self, params, x):
+        if self.cache.call_faults:
+            raise self.cache.call_faults.pop(0)
+        n = int(x.shape[0])
+        out = np.full((n, 4), float(self.bucket), np.float32)
+        if self.cache.nan_calls > 0:
+            self.cache.nan_calls -= 1
+            out[..., 0] = np.nan
+        return out
+
+
+class FakeCache:
+    """Quacks like ExecutorCache for the scheduler: scripted failures,
+    recorded degradations, instant host-only 'executors'."""
+
+    def __init__(self, *, buckets=(1, 2, 4), get_faults=(), call_faults=(),
+                 nan_calls=0):
+        self.buckets = tuple(buckets)
+        self.precision = "auto"
+        self.telemetry = Telemetry()
+        self.get_faults = list(get_faults)
+        self.call_faults = list(call_faults)
+        self.nan_calls = int(nan_calls)
+        self.degrades, self.pins = [], []
+
+    def get(self, batch, resolution):
+        if self.get_faults:
+            raise self.get_faults.pop(0)
+        return FakeExecutor(self, batch)
+
+    def degrade(self, batch, resolution, *, site=None):
+        self.degrades.append((batch, resolution, site))
+
+    def pin_fp(self, batch, resolution):
+        self.pins.append((batch, resolution))
+
+
+def _drain(sched, clock, max_rounds=64):
+    for _ in range(max_rounds):
+        if not sched.outstanding():
+            return
+        sched.step(drain=True)
+        sched.finalize()
+        clock.advance(0.1)
+    raise AssertionError(f"not drained: {sched.outstanding()} left")
+
+
+def _reqs(n, res=32, **kw):
+    return [Request(rid=i, image=np.zeros((res, res, 3), np.float32), **kw)
+            for i in range(n)]
+
+
+def test_scheduler_retry_then_success():
+    cache = FakeCache(get_faults=[ExecutorError("flaky build")])
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock, backoff_ms=10.0)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)                   # dispatch fails, parks retry
+    assert sched.outstanding() == 4 and sched.queue_depth() == 0
+    clock.advance(0.005)
+    sched.step()                             # backoff (10 ms) not elapsed
+    assert sched.queue_depth() == 0
+    clock.advance(0.01)
+    sched.step()
+    sched.finalize()
+    assert all(r.status == "completed" for r in reqs)
+    assert all(r.retries == 1 for r in reqs)
+    assert cache.telemetry.counters["retries"] == 4
+    assert cache.degrades == [], "one transient failure: no degrade yet"
+
+
+def test_scheduler_degrades_on_second_failure_and_site_blame():
+    cache = FakeCache(call_faults=[
+        KernelLaunchError("boom", site="S3.evit0.msa"),
+        KernelLaunchError("boom", site="S3.evit0.msa")])
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    _drain(sched, clock)
+    assert all(r.status == "completed" for r in reqs)
+    assert cache.degrades == [(4, 32, "S3.evit0.msa")]
+
+
+def test_scheduler_pins_fp_on_nan_logits():
+    cache = FakeCache(nan_calls=1)
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    _drain(sched, clock)
+    assert all(r.status == "completed" for r in reqs)
+    assert cache.pins == [(4, 32)]
+    assert all(np.all(np.isfinite(r.logits)) for r in reqs)
+    assert cache.telemetry.bucket((4, 32, "auto")).errors == 1
+
+
+def test_scheduler_exhausts_retries_into_failed():
+    cache = FakeCache(get_faults=[ExecutorError(f"f{i}") for i in range(9)])
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock, max_retries=2)
+    reqs = _reqs(2)
+    for r in reqs:
+        sched.submit(r)
+    _drain(sched, clock)
+    assert all(r.status == "failed" for r in reqs)
+    assert all(isinstance(r.error, ExecutorError) for r in reqs)
+    assert all(r.retries == 3 for r in reqs)   # initial + 2 retries
+
+
+def test_scheduler_capacity_shed():
+    cache = FakeCache()
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock(),
+                                max_queue_depth=2)
+    reqs = _reqs(5)
+    admitted = [sched.submit(r) for r in reqs]
+    assert admitted == [True, True, False, False, False]
+    shed = [r for r in reqs if r.status == "shed"]
+    assert len(shed) == 3
+    assert all(isinstance(r.error, CapacityExceeded) for r in shed)
+    assert cache.telemetry.counters["shed_capacity"] == 3
+
+
+def test_scheduler_deadline_shed_before_formation():
+    cache = FakeCache()
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock)
+    stale = _reqs(2, timeout_ms=5.0)
+    for r in stale:
+        sched.submit(r)
+    clock.advance(0.02)
+    fresh = _reqs(2, timeout_ms=1000.0)
+    for r in fresh:
+        r.rid += 100
+        sched.submit(r)
+    _drain(sched, clock)
+    assert all(r.status == "shed" and isinstance(r.error, DeadlineExceeded)
+               for r in stale)
+    assert all(r.status == "completed" for r in fresh)
+    assert cache.telemetry.counters["shed_deadline"] == 2
+
+
+def test_scheduler_serve_raises_typed_error_on_shed():
+    sched = MicroBatchScheduler(FakeCache(), None, clock=ManualClock(),
+                                max_queue_depth=1)
+    with pytest.raises(CapacityExceeded):
+        sched.serve(_reqs(3))
+
+
+@sweep(n_cases=40, seed=6)
+def test_scheduler_terminal_state_partition(rng):
+    """Random arrivals x timeouts x fault schedules: every request ends
+    in exactly one of completed/shed/failed; none lost or duplicated."""
+    n = int(rng.integers(1, 12))
+    faults = []
+    for _ in range(int(rng.integers(0, 4))):
+        kind = rng.choice(["get", "call"])
+        err = (ExecutorError("inj-get") if kind == "get"
+               else KernelLaunchError("inj-call", site="s"))
+        faults.append((kind, err))
+    cache = FakeCache(
+        get_faults=[e for k, e in faults if k == "get"],
+        call_faults=[e for k, e in faults if k == "call"],
+        nan_calls=int(rng.integers(0, 2)))
+    clock = ManualClock()
+    sched = MicroBatchScheduler(
+        cache, None, clock=clock,
+        max_queue_depth=(int(rng.integers(1, 16))
+                         if rng.random() < 0.3 else None),
+        max_retries=int(rng.integers(0, 4)),
+        backoff_ms=float(rng.choice([0.0, 5.0, 50.0])))
+    reqs = []
+    for i in range(n):
+        timeout = (None if rng.random() < 0.5
+                   else float(rng.choice([0.5, 20.0, 1e6])))
+        r = Request(rid=i, image=np.zeros((32, 32, 3), np.float32),
+                    timeout_ms=timeout,
+                    deadline_ms=(None if rng.random() < 0.5 else 10.0))
+        reqs.append(r)
+        sched.submit(r)
+        clock.advance(float(rng.random()) * 0.02)
+        if rng.random() < 0.7:
+            sched.step()
+        if rng.random() < 0.3:
+            sched.finalize()
+    _drain(sched, clock, max_rounds=128)
+    # the partition invariant
+    assert len({r.rid for r in reqs}) == n
+    states = {"completed": 0, "shed": 0, "failed": 0}
+    for r in reqs:
+        assert r.status in states, (r.rid, r.status)
+        states[r.status] += 1
+        if r.status == "completed":
+            assert r.logits is not None and np.all(np.isfinite(r.logits))
+        else:
+            assert isinstance(r.error, ReproError), (r.rid, r.error)
+    assert sum(states.values()) == n
+    tel = cache.telemetry.counters
+    assert tel.get("submitted", 0) == n
+    assert (tel.get("completed", 0) >= states["completed"]
+            and tel.get("shed", 0) == states["shed"]
+            and tel.get("failed", 0) == states["failed"])
+
+
+# -- end-to-end: idle fault layer changes nothing --------------------------
+
+def test_idle_fault_plan_is_inert(params):
+    idle = FaultPlan()
+    tel_a, tel_b = Telemetry(), Telemetry()
+    plain = ExecutorCache(params, B1_SMOKE, buckets=(1,), autotune=False,
+                          telemetry=tel_a)
+    chaos = ExecutorCache(params, B1_SMOKE, buckets=(1,), autotune=False,
+                          telemetry=tel_b, faults=idle)
+    x = jnp.zeros((1, 32, 32, 3))
+    a = np.asarray(plain.get(1, 32)(params, x))
+    b = np.asarray(chaos.get(1, 32)(params, x))
+    assert np.array_equal(a, b)
+    assert idle.fired == {} and idle.exhausted
+    assert "shed" not in tel_b.counters and "degraded" not in tel_b.counters
+
+
+def test_fault_points_cover_error_map():
+    from repro.serving.faults import _ERROR_FOR_POINT
+    assert set(_ERROR_FOR_POINT) | {"epilogue.numerics"} == set(FAULT_POINTS)
