@@ -28,6 +28,11 @@ and asserts the designed response — not merely "no crash":
     deadline            hard ``timeout_ms`` expiry in queue: expired
                         requests shed with ``DeadlineExceeded`` before
                         occupying a batch slot, live ones complete
+    device.dropout      (>= 2 devices) one mesh device dies mid-trace:
+                        the mesh shrinks and replans around it, the
+                        trace completes on the survivors, the ladder
+                        does not move; total loss of every device fails
+                        the trace typed ``MeshExhausted`` with no hang
 
 Global invariants, checked over every scenario:
   * every submitted request terminates in exactly ONE of
@@ -68,14 +73,15 @@ def make_requests(n, res=RES, seed=0, **kw):
 
 
 def runtime(params, *, precision="auto", faults=None, clock=None,
-            neg_ttl_s=1.0, **sched_kw):
+            neg_ttl_s=1.0, devices=None, **sched_kw):
     """(telemetry, cache, scheduler, clock) sharing one manual clock."""
     clock = clock if clock is not None else ManualClock()
     tel = Telemetry()
     cache = ExecutorCache(params, B1_SMOKE, buckets=BUCKETS,
                           precision=precision, autotune=False,
                           telemetry=tel, faults=faults,
-                          neg_ttl_s=neg_ttl_s, clock=clock)
+                          neg_ttl_s=neg_ttl_s, clock=clock,
+                          devices=devices)
     sched = MicroBatchScheduler(cache, params, telemetry=tel, clock=clock,
                                 faults=faults, **sched_kw)
     return tel, cache, sched, clock
@@ -96,9 +102,7 @@ def drain(sched, clock, max_rounds=64, tick_s=0.05):
 
 def probe_vs_reference(cache, params, bucket, res, seed=99):
     """Bitwise gate: the (possibly degraded) executor's output vs the
-    jitted reference interpreter (plan=None) on the SAME batch — batch
-    composition feeds int8 per-tensor activation scales, so same-input
-    comparison is the only fair one."""
+    jitted reference interpreter (plan=None) on the SAME batch."""
     ex = cache.get(bucket, res)
     x = jnp.asarray(np.random.default_rng(seed).standard_normal(
         (bucket, res, res, 3)).astype(np.float32))
@@ -310,6 +314,87 @@ def scenario_deadline(params, n):
                      f"DeadlineExceeded without occupying a slot")
 
 
+def scenario_device_dropout(params, n):
+    """One device dies mid-trace: the mesh shrinks around it, the trace
+    completes on the survivors, and post-failover occupancy recovers —
+    the degradation ladder does NOT move (replanning on the smaller
+    mesh IS the recovery)."""
+    devices = tuple(jax.devices())
+    victim = devices[-1].id
+    faults = FaultPlan(FaultSpec("device.dropout", times=1, device=victim,
+                                 note="device died mid-trace"))
+    tel, cache, sched, clock = runtime(params, faults=faults,
+                                       devices=devices, backoff_ms=0.0)
+    reqs = make_requests(n)
+    for r in reqs:
+        sched.submit(r)
+    drain(sched, clock)
+    states = check_partition("device_dropout", reqs)
+    assert states["completed"] == n, states
+    assert cache.health.dead_ids() == (victim,), cache.health.dead_ids()
+    assert cache.degradation(BUCKETS[-1], RES) is None, \
+        "device loss must not move the degradation ladder"
+    assert tel.counters.get("device_lost") == 1
+    assert tel.counters.get("mesh_shrunk") == 1
+    assert tel.devices[victim].lost
+    # occupancy recovers: a post-failover wave serves entirely on the
+    # survivors, full slots, no further faults
+    before = {d.id: tel.devices[d.id].samples for d in devices
+              if d.id in tel.devices and d.id != victim}
+    more = make_requests(n, seed=5)
+    for r in more:
+        r.rid += 2000
+        sched.submit(r)
+    drain(sched, clock)
+    check_partition("device_dropout/recovery", more)
+    assert all(r.status == "completed" for r in more)
+    gained = [did for did, s in before.items()
+              if tel.devices[did].samples > s]
+    assert gained, "survivors served no post-failover traffic"
+    # fp parity vs the unbatched eager reference survives the failover
+    prog = lower(B1_SMOKE, batch=1, image_size=RES)
+    for r in more[:2]:
+        ref = np.asarray(execute(prog, params, r.image[None]))[0]
+        err = float(np.max(np.abs(r.logits - ref)))
+        assert err < 1e-3, (r.rid, err)
+    return dict(name="device_dropout", point="device.dropout",
+                faults=faults, tel=tel, reqs=reqs + more,
+                note=f"dev{victim} lost; mesh "
+                     f"{len(devices)}->{cache.health.n_alive}; trace + "
+                     f"recovery wave completed on survivors, ladder idle")
+
+
+def scenario_mesh_loss(params, n):
+    """Every device dies: requests terminate failed with a typed
+    ``MeshExhausted`` — a clean shed-everything, provably no hang."""
+    from repro.common.errors import MeshExhausted
+    devices = tuple(jax.devices())
+    faults = FaultPlan(*[FaultSpec("device.dropout", times=1, device=d.id,
+                                   note="total mesh loss")
+                         for d in devices])
+    tel, cache, sched, clock = runtime(params, faults=faults,
+                                       devices=devices, backoff_ms=0.0)
+    reqs = make_requests(n)
+    for r in reqs:
+        sched.submit(r)
+    drain(sched, clock)           # must terminate — drain itself is the
+    #                               no-hang gate (bounded rounds)
+    states = check_partition("mesh_loss", reqs)
+    assert states["failed"] == n, states
+    assert all(isinstance(r.error, MeshExhausted) for r in reqs)
+    assert cache.mesh_exhausted and cache.health.n_alive == 0
+    # a straggler after total loss fails fast on the typed error too
+    late = make_requests(1, seed=9)[0]
+    late.rid = 9999
+    sched.submit(late)
+    drain(sched, clock)
+    assert late.status == "failed" and isinstance(late.error, MeshExhausted)
+    return dict(name="mesh_loss", point="device.dropout", faults=faults,
+                tel=tel, reqs=reqs + [late],
+                note=f"all {len(devices)} devices lost; {n}+1 requests "
+                     f"failed typed MeshExhausted, scheduler drained clean")
+
+
 # -- driver ----------------------------------------------------------------
 
 def run(smoke: bool = False):
@@ -317,8 +402,10 @@ def run(smoke: bool = False):
     params = init_efficientvit(jax.random.PRNGKey(0), B1_SMOKE)
     qparams = quantize_efficientvit(params)
 
+    multi_device = len(jax.devices()) >= 2
     print(f"# chaos bench — {B1_SMOKE.name} @ {RES}px, buckets {BUCKETS}, "
-          f"{n} requests/scenario, manual clock")
+          f"{n} requests/scenario, manual clock, "
+          f"{len(jax.devices())} device(s)")
     results = [
         scenario_control(params, n),
         scenario_compile_transient(params, n),
@@ -328,6 +415,14 @@ def run(smoke: bool = False):
         scenario_overload(params, n + 2),
         scenario_deadline(params, n),
     ]
+    if multi_device:
+        results += [
+            scenario_device_dropout(params, n),
+            scenario_mesh_loss(params, n),
+        ]
+    else:
+        print("(single device: device.dropout scenarios skipped — run "
+              "under XLA_FLAGS=--xla_force_host_platform_device_count=N)")
 
     head = (f"{'scenario':<18} {'fault point':<18} {'inj':>3} "
             f"{'done':>4} {'shed':>4} {'fail':>4}  outcome")
@@ -346,12 +441,15 @@ def run(smoke: bool = False):
               f"{states['failed']:>4}  {r['note']}")
 
     from repro.serving.faults import FAULT_POINTS
-    missing = set(FAULT_POINTS) - injected_points
+    required = set(FAULT_POINTS)
+    if not multi_device:
+        required -= {"device.dropout"}   # needs >= 2 devices to shrink
+    missing = required - injected_points
     assert not missing, f"fault classes never injected: {missing}"
     total = sum(len(r["reqs"]) for r in results)
     print(f"\nall {total} requests across {len(results)} scenarios "
           f"terminated in exactly one of completed/shed/failed; "
-          f"all {len(FAULT_POINTS)} fault classes injected; "
+          f"all {len(required)} required fault classes injected; "
           f"every fault budget spent")
     return results
 

@@ -22,7 +22,15 @@ messages.  The hierarchy mirrors the pipeline stages a request crosses:
                            the ladder pins the bucket to fp instead
       DeadlineExceeded   the request's hard deadline passed while it was
                          queued — shed, never occupies a batch slot
+                         (also the watchdog's verdict on a hung batch)
       CapacityExceeded   admission-queue bound hit — shed at submit
+
+Per-device fault domains (``serving.sharding``) add two leaves under
+``ExecutorError``: ``DeviceLostError`` blames one mesh device for a
+failed launch (transient — the mesh shrinks and the request retries on
+the survivors, the degradation ladder does NOT move), and
+``MeshExhausted`` is the terminal no-devices-left state (persistent —
+requests fail immediately instead of burning their retry budget).
 
 ``transient`` steers the scheduler's retry policy: transient errors get
 a same-level retry with exponential backoff before the degradation
@@ -33,8 +41,8 @@ telemetry and for site-targeted demotion.
 from __future__ import annotations
 
 __all__ = ["ReproError", "LoweringError", "PlanError", "ExecutorError",
-           "KernelLaunchError", "NumericsError", "DeadlineExceeded",
-           "CapacityExceeded"]
+           "KernelLaunchError", "NumericsError", "DeviceLostError",
+           "MeshExhausted", "DeadlineExceeded", "CapacityExceeded"]
 
 
 class ReproError(Exception):
@@ -68,6 +76,27 @@ class KernelLaunchError(ExecutorError):
 
 class NumericsError(ExecutorError):
     """Non-finite values detected in an executor's output."""
+    transient = False
+
+
+class DeviceLostError(KernelLaunchError):
+    """A launch failed and the blame lands on one mesh device.
+
+    ``device`` is the lost device's id.  Transient: the health registry
+    marks the device dead, the mesh shrinks around it, and the request
+    retries on the survivors — the degradation ladder does not move.
+    """
+
+    def __init__(self, message: str = "", *, device: int | None = None,
+                 **kw):
+        super().__init__(message, **kw)
+        self.device = device
+
+
+class MeshExhausted(ExecutorError):
+    """Every device in the fault domain is dead — nothing left to shrink
+    to.  Persistent: requests fail immediately rather than burning their
+    retry budget against an empty mesh."""
     transient = False
 
 

@@ -143,8 +143,15 @@ def quantize_conv_bn(p, eps: float = 1e-5):
 
 
 def conv2d_int8(qp, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
-    """FIX8 conv: dynamic per-tensor act quant, int8 conv, int32 accumulate,
-    fp32 dequant + bias.  Mirrors layers.conv.conv2d semantics.
+    """FIX8 conv: dynamic per-batch-element act quant, int8 conv, int32
+    accumulate, fp32 dequant + bias.  Mirrors layers.conv.conv2d
+    semantics.
+
+    The dynamic activation scale is per batch element (``quantize_act``'s
+    scheme — identical to the old per-tensor scale at batch 1, where the
+    bit-exactness gates run): one request's numerics never depend on its
+    batch-mates, so bucketed batch formation and batch-axis sharding
+    (``serving.sharding``) are bit-transparent to results.
 
     ``x`` may be a ``QTensor`` emitted by the producer's epilogue — the
     activation quantization is then skipped entirely (its per-batch
@@ -155,7 +162,8 @@ def conv2d_int8(qp, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
         sx = x.scale_col().reshape(-1, 1, 1, 1)
         out_dtype = x.fp.dtype if x.fp is not None else jnp.float32
     else:
-        xq, sx = quantize_tensor(x)
+        qt = quantize_act(x)
+        xq, sx = qt.q, qt.scale.reshape(-1, 1, 1, 1)
         out_dtype = x.dtype
     acc = lax.conv_general_dilated(
         xq, qp["q"],
@@ -169,8 +177,20 @@ def conv2d_int8(qp, x, *, stride: int = 1, groups: int = 1, padding="SAME"):
 
 
 def matmul_int8(x, qw, w_scale):
-    """(..., d) x int8 (d, f): int8 GEMM with int32 accumulation."""
-    xq, sx = quantize_tensor(x)
+    """(..., d) x int8 (d, f): int8 GEMM with int32 accumulation.
+
+    Dynamic activation scale per leading (batch) element, like
+    ``quantize_act`` — batch-composition-invariant, so sharded and
+    bucketed serving deliver bit-identical logits per request."""
+    qmax = 127
+    xf = x.astype(jnp.float32)
+    if x.ndim <= 1:
+        absmax = jnp.max(jnp.abs(xf))
+    else:
+        absmax = jnp.max(jnp.abs(xf), axis=tuple(range(1, x.ndim)),
+                         keepdims=True)
+    sx = jnp.maximum(absmax, 1e-8) / qmax
+    xq = jnp.clip(jnp.round(xf / sx), -qmax - 1, qmax).astype(jnp.int8)
     acc = jnp.einsum("...d,df->...f", xq, qw,
                      preferred_element_type=jnp.int32)
     return (acc.astype(jnp.float32) * (sx * w_scale)).astype(x.dtype)

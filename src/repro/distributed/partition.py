@@ -109,3 +109,19 @@ def named_shardings(spec_tree, mesh: Mesh):
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda s: isinstance(s, P),
     )
+
+
+def data_parallel_specs(mesh: Mesh, params, *, batch_axis: str = "batch"):
+    """Pure data-parallel layout for the vision serving mesh.
+
+    EfficientViT at serving batch sizes is activation-bound, so the
+    serving mesh shards only the batch axis: every param is replicated
+    on every device, activations split along ``batch_axis``.  Returns
+    ``(param_specs, act_spec)`` ready for ``compat.shard_map``'s
+    in/out specs.  Built through the same rule machinery as the LLM
+    meshes (an empty rule set — everything falls through to replicated)
+    so a future tensor-parallel vision mesh only adds rules here.
+    """
+    ctx = make_ctx(mesh, {k: None for k in DEFAULT_RULES})
+    param_specs = match_partition_rules([], params, ctx)
+    return param_specs, P(batch_axis)

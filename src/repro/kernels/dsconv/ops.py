@@ -152,8 +152,6 @@ def dsconv_apply_int8(params, x, *, stride: int = 1, block_f: int = 128,
     output quantized in-kernel (``QTensor`` return).  The DW output is
     requantized in-kernel either way.
     """
-    from repro.core.quantization import quantize_tensor
-
     qd = params["dw"]["qconv"]
     qp = params["pw"]["qconv"]
     dw_q = qd["q"][:, :, 0, :]         # (3,3,1,C) -> (3,3,C)
@@ -162,7 +160,11 @@ def dsconv_apply_int8(params, x, *, stride: int = 1, block_f: int = 128,
         x_q, x_scale = x.q, x.scale
         out_dtype = x.fp.dtype if x.fp is not None else jnp.float32
     else:
-        x_q, x_scale = quantize_tensor(x)
+        # dynamic per-batch-element entry quantization: one request's
+        # numerics never depend on its batch-mates (batch-axis sharding
+        # and bucketed batching stay bit-transparent)
+        qt = quantize_act(x)
+        x_q, x_scale = qt.q, qt.scale
         out_dtype = x.dtype
     args = (x_q, x_scale, dw_q, qd["scale"], qd["bias"], pw_q, qp["scale"],
             qp["bias"])

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import (
-    QTensor, quantize_tensor, quantize_with_scale)
+    QTensor, quantize_act, quantize_tensor, quantize_with_scale)
 from repro.kernels.int8_matmul.kernel import int8_matmul, int8_matmul_emit
 from repro.kernels.registry import register
 from repro.kernels.relu_attn.ops import MsaKernel
@@ -34,11 +34,16 @@ def linear_w8a8(x, w_q, w_scale, *, x_scale=None,
     per-row GEMM scales; w_q: (K, N) int8; w_scale: (N,) -> (..., N)
     fp32.
 
-    ``x_scale=None``: dynamic per-tensor activation quantization (absmax
-    recomputed every call).  Passing a calibrated static ``x_scale``
-    skips the absmax reduction and clips to the calibrated range.  A
+    ``x_scale=None``: dynamic per-batch-element activation quantization
+    (``quantize_act``'s scheme — absmax per leading index, so one
+    request's numerics never depend on its batch-mates and batch-axis
+    sharding is bit-transparent; identical to the old per-tensor scale
+    at batch 1).  Passing a calibrated static ``x_scale`` skips the
+    activation reduction and clips to the calibrated range.  A
     ``QTensor`` input skips quantization entirely (producer epilogue).
     """
+    if not isinstance(x, QTensor) and x_scale is None and x.ndim >= 2:
+        x = quantize_act(x)
     if isinstance(x, QTensor):
         lead = x.q.shape[:-1]
         K = x.q.shape[-1]
@@ -81,20 +86,25 @@ def conv1x1_w8a8(qp, x, *, x_scale=None, interpret: bool | None = None,
     (bias folded in before the in-kernel absmax) and returns a
     ``QTensor`` with per-batch-element scales.
     """
+    if not isinstance(x, QTensor) and x_scale is None:
+        # dynamic path: per-batch-element quantization (see linear_w8a8)
+        out_dtype_raw = x.dtype
+        x = quantize_act(x)
+    else:
+        out_dtype_raw = None
     qt = isinstance(x, QTensor)
     B, H, W, C = (x.q if qt else x).shape
     w_q = qp["q"].reshape(C, -1)
     out_dtype = (x.fp.dtype if qt and x.fp is not None
+                 else out_dtype_raw if out_dtype_raw is not None
                  else jnp.float32 if qt else x.dtype)
     if epilogue is not None and epilogue.emits_q:
         if qt:
             x_q = x.q.reshape(-1, C)
-            xs = jnp.repeat(x.scale_col(), H * W)
+            xs = x.scale_col()     # one scale per batch-element row group
         else:
-            x_q, xs = quantize_tensor(x.reshape(-1, C)) if x_scale is None \
-                else (quantize_with_scale(x.reshape(-1, C),
-                                          jnp.asarray(x_scale, jnp.float32)),
-                      jnp.asarray(x_scale, jnp.float32))
+            xs = jnp.asarray(x_scale, jnp.float32)
+            x_q = quantize_with_scale(x.reshape(-1, C), xs)
         keep_fp = epilogue.residual == "keep-fp"
         outs = _linear_w8a8_emit(x_q, xs, w_q, qp["scale"], qp["bias"],
                                  rows_per_group=H * W, keep_fp=keep_fp,

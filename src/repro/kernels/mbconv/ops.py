@@ -175,8 +175,6 @@ def mbconv_apply_int8(params, x, *, stride: int = 1,
     the "keep-fp" residual policy.  Inter-stage requantization always
     happens in-kernel.
     """
-    from repro.core.quantization import quantize_tensor
-
     q1 = params["pw1"]["qconv"]
     qd = params["dw"]["qconv"]
     q2 = params["pw2"]["qconv"]
@@ -187,7 +185,10 @@ def mbconv_apply_int8(params, x, *, stride: int = 1,
         x_q, x_scale = x.q, x.scale
         out_dtype = x.fp.dtype if x.fp is not None else jnp.float32
     else:
-        x_q, x_scale = quantize_tensor(x)
+        # per-batch-element entry quantization (batch-composition
+        # invariant; see serving.sharding)
+        qt = quantize_act(x)
+        x_q, x_scale = qt.q, qt.scale
         out_dtype = x.dtype
     args = (x_q, x_scale, w1_q, q1["scale"], q1["bias"], dw_q, qd["scale"],
             qd["bias"], w2_q, q2["scale"], q2["bias"])

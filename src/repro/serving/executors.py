@@ -54,10 +54,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.errors import ExecutorError, ReproError
+from repro.common.errors import ExecutorError, MeshExhausted, ReproError
 from repro.core.efficientvit import EfficientViTConfig
 from repro.core.fusion import plan_program
 from repro.core.program import execute, lower
+from repro.serving.sharding import DeviceHealth, sharded_forward
 from repro.serving.telemetry import Telemetry
 
 __all__ = ["ExecutorKey", "Executor", "ExecutorCache", "DegradeState"]
@@ -111,12 +112,15 @@ class Executor:
     """
 
     def __init__(self, key: ExecutorKey, program, plan, *,
-                 faults=None, degraded: Optional[DegradeState] = None):
+                 faults=None, degraded: Optional[DegradeState] = None,
+                 fn=None, shard=None):
         self.key = key
         self.program = program.with_epilogues(plan) if plan is not None \
             else program
         self.plan = plan
-        self._fn = jax.jit(lambda p, x: execute(program, p, x, plan=plan))
+        self.shard = shard   # ShardSpec when mesh-sharded, else None
+        self._fn = fn if fn is not None else \
+            jax.jit(lambda p, x: execute(program, p, x, plan=plan))
         self.calls = 0
         self.warmed = False
         self.faults = faults
@@ -126,10 +130,20 @@ class Executor:
         self._runs_int8 = any(d.fused and d.precision == "int8"
                               for d in decisions)
 
+    @property
+    def device_ids(self) -> Tuple[int, ...]:
+        return self.shard.device_ids if self.shard is not None else ()
+
     def __call__(self, params, x):
         """Dispatch the compiled forward.  Asynchronous: the result is a
         device array; nothing blocks the host until someone reads it."""
         self.calls += 1
+        if self.faults is not None and self.shard is not None:
+            self.faults.fire(
+                "device.dropout", batch=self.key.batch,
+                resolution=self.key.resolution,
+                precision=self.key.precision,
+                devices=self.shard.device_ids)
         if self.faults is not None and self.fused_sites:
             self.faults.fire(
                 "kernel.launch", batch=self.key.batch,
@@ -178,7 +192,8 @@ class ExecutorCache:
                  capacity: int | None = None,
                  telemetry: Telemetry | None = None,
                  epilogues: bool = True,
-                 faults=None, neg_ttl_s: float = 1.0, clock=None):
+                 faults=None, neg_ttl_s: float = 1.0, clock=None,
+                 devices=None):
         assert buckets and all(b >= 1 for b in buckets), buckets
         self.params = params
         self.cfg = cfg
@@ -193,6 +208,11 @@ class ExecutorCache:
         self.faults = faults
         self.neg_ttl_s = float(neg_ttl_s)
         self.clock = clock if clock is not None else time.monotonic
+        # devices=None -> classic single-device jit on the default
+        # device; a device list (even of one) -> every executor is a
+        # batch-sharded shard_map over the survivors in DeviceHealth
+        self.health = DeviceHealth.of(devices) if devices is not None \
+            else None
         self._lru: "collections.OrderedDict[ExecutorKey, Executor]" = \
             collections.OrderedDict()
         self._donor_plans: dict[int, object] = {}   # resolution -> plan
@@ -248,6 +268,12 @@ class ExecutorCache:
         self.telemetry.count("executor_miss")
         try:
             ex = self._build(key)
+        except MeshExhausted:
+            # no compile ran and no device will come back — keep the
+            # typed error un-wrapped and un-cached so every caller sees
+            # MeshExhausted itself, not a negative-cache ExecutorError
+            self.telemetry.count("executor_build_failed")
+            raise
         except ReproError as e:
             self._note_build_failure(key, e)
             raise
@@ -284,12 +310,20 @@ class ExecutorCache:
             self._neg[key] = (self.clock() + self.neg_ttl_s, err)
 
     def _build(self, key: ExecutorKey) -> Executor:
+        # pick the device slice first: an exhausted mesh must raise its
+        # typed error before any compile work (or compile fault) runs
+        shard = self.health.shard_for(key.batch) \
+            if self.health is not None else None
         if self.faults is not None:
             self.faults.fire("executor.compile", batch=key.batch,
                              resolution=key.resolution,
                              precision=key.precision)
         state = self._degrade.get(key)
-        program = lower(self.cfg, batch=key.batch,
+        # sharded executors lower/plan at the LOCAL batch — shard_map
+        # hands each device its own slice of the bucket
+        program = lower(self.cfg,
+                        batch=shard.local_batch if shard is not None
+                        else key.batch,
                         image_size=key.resolution)
         plan = None
         if self.use_plan and not (state is not None and state.level >= 2):
@@ -311,8 +345,42 @@ class ExecutorCache:
             # forced precision must not leak into healthy buckets
             if donor is None and (state is None or not state.degraded):
                 self._donor_plans[key.resolution] = plan
+        fn = sharded_forward(program, self.params, plan=plan,
+                             shard=shard) if shard is not None else None
         return Executor(key, program, plan, faults=self.faults,
-                        degraded=state)
+                        degraded=state, fn=fn, shard=shard)
+
+    # -- per-device fault domains ----------------------------------------
+    @property
+    def mesh_exhausted(self) -> bool:
+        """True when a device mesh is configured and fully dead."""
+        return self.health is not None and self.health.exhausted
+
+    def on_device_lost(self, device_id: int | None) -> bool:
+        """Shrink the mesh around a dead device.
+
+        Marks the device dead in the health registry, evicts every
+        cached executor whose shard included it (the next ``get``
+        replans on the survivors at the new local batch) and clears the
+        negative cache — its entries may record failures the dead
+        device caused.  Donor plans survive: block choices are
+        shape-keyed and site-by-site reuse already spans batch sizes.
+        Returns True when the mesh actually shrank (newly-dead device).
+        """
+        if self.health is None or device_id is None:
+            return False
+        if not self.health.mark_dead(device_id):
+            return False
+        self.telemetry.count("device_lost")
+        self.telemetry.record_device_error(device_id, lost=True)
+        stale = [k for k, ex in self._lru.items()
+                 if ex.shard is not None and device_id in ex.device_ids]
+        for k in stale:
+            del self._lru[k]
+        self._neg.clear()
+        if not self.health.exhausted:
+            self.telemetry.count("mesh_shrunk")
+        return True
 
     # -- the degradation ladder ------------------------------------------
     def degradation(self, batch: int, resolution: int

@@ -29,6 +29,11 @@ Injection points (``FAULT_POINTS``) and what firing one does:
                           finalize-time guard must catch it)
     "queue.overload"      raises ``CapacityExceeded`` at admission —
                           a load spike beyond what the bound models
+    "device.dropout"      raises ``DeviceLostError`` at a *sharded*
+                          executor's dispatch, blaming one mesh device
+                          (``FaultSpec.device``, default the shard's
+                          first) — a died/hung device; the health
+                          registry shrinks the mesh around it
 
 Faults are *budgeted*: each ``FaultSpec`` fires ``times`` times and
 then disarms, so transient-vs-persistent failures are modeled by the
@@ -43,18 +48,20 @@ from typing import Mapping, Optional
 import jax.numpy as jnp
 
 from repro.common.errors import (
-    CapacityExceeded, ExecutorError, KernelLaunchError, PlanError)
+    CapacityExceeded, DeviceLostError, ExecutorError, KernelLaunchError,
+    PlanError)
 
 __all__ = ["FAULT_POINTS", "FaultSpec", "FaultPlan"]
 
 FAULT_POINTS = ("executor.compile", "autotune", "kernel.launch",
-                "epilogue.numerics", "queue.overload")
+                "epilogue.numerics", "queue.overload", "device.dropout")
 
 _ERROR_FOR_POINT = {
     "executor.compile": ExecutorError,
     "autotune": PlanError,
     "kernel.launch": KernelLaunchError,
     "queue.overload": CapacityExceeded,
+    "device.dropout": DeviceLostError,
 }
 
 
@@ -66,11 +73,14 @@ class FaultSpec:
     64}`` or ``{"precision": "int8"}``) — ``None`` matches every firing
     of the point.  ``site`` names the offending IR site carried on a
     ``kernel.launch`` error (default: the executor's first fused site).
+    ``device`` names the device id a ``device.dropout`` blames (default:
+    the dispatching shard's first device).
     """
     point: str
     times: int = 1
     match: Optional[Mapping] = None
     site: Optional[str] = None
+    device: Optional[int] = None
     note: str = ""
 
     def __post_init__(self):
@@ -128,6 +138,11 @@ class FaultPlan:
             site = spec.site if spec.site is not None else \
                 (sites[0] if sites else None)
             raise KernelLaunchError(msg, site=site)
+        if point == "device.dropout":
+            devices = ctx.get("devices") or ()
+            device = spec.device if spec.device is not None else \
+                (devices[0] if devices else None)
+            raise DeviceLostError(msg, device=device)
         raise _ERROR_FOR_POINT[point](msg, site=spec.site)
 
     def corrupt(self, point: str, out, **ctx):

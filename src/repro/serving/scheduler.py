@@ -41,11 +41,40 @@ detects NaN/Inf in delivered logits — pins the bucket's plan to fp
 immediately.  All of it is surfaced through ``Telemetry``: ``shed`` /
 ``retries`` / ``failed`` / ``degraded`` / ``pinned_fp`` counters plus
 per-bucket error counts.
+
+Two failure classes bypass the ladder (``serving.sharding``): a
+``DeviceLostError`` shrinks the executor cache's device mesh instead —
+replanning on the survivors IS the recovery, so the surviving devices
+keep their fused plans — and once the mesh is exhausted every affected
+request fails immediately with ``MeshExhausted`` rather than burning
+its retry budget against an empty mesh.
+
+## The async host loop
+
+``start()`` moves ``step()``/``finalize()`` onto a background thread
+behind the (bounded) admission queue: ``submit()`` returns immediately,
+``wait()`` blocks until a request set is terminal, ``stop()`` drains
+and joins.  Every public entry point locks the same RLock, so the
+foreground/background interleaving cannot corrupt queue state.  A
+*watchdog* (``watchdog_ms``) sweeps dispatched-but-unmaterialized
+batches: one that has been in flight longer than the bound is declared
+hung — a typed ``DeadlineExceeded`` routed through the same failure
+path, so the ladder moves and the requests retry on a rebuilt executor
+instead of blocking the loop forever.
+
+``result_cache`` puts an image-hash response cache in front of
+admission: a repeated image completes at ``submit()`` without touching
+a queue or a batch slot.  Only healthy results enter it — finalize
+stores a result only when its executor is undegraded and its logits
+are finite, so a degraded plan or a corrupted epilogue can never pin a
+wrong answer into the cache.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
+import threading
 import time
 from typing import List, Optional
 
@@ -53,13 +82,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.errors import (
-    CapacityExceeded, DeadlineExceeded, ExecutorError, NumericsError,
-    ReproError)
+    CapacityExceeded, DeadlineExceeded, DeviceLostError, ExecutorError,
+    MeshExhausted, NumericsError, ReproError)
 from repro.serving.executors import ExecutorCache
 from repro.serving.telemetry import Telemetry
 
 __all__ = ["Request", "BucketedPolicy", "FixedMicrobatchPolicy",
-           "ManualClock", "MicroBatchScheduler"]
+           "ManualClock", "MicroBatchScheduler", "ResultCache"]
 
 
 @dataclasses.dataclass
@@ -105,6 +134,55 @@ class ManualClock:
     def advance_to(self, t: float) -> float:
         self.now = max(self.now, float(t))
         return self.now
+
+
+class ResultCache:
+    """Image-hash -> logits LRU in front of admission.
+
+    Keys are content hashes (blake2b over the fp32 image bytes plus the
+    shape), so a byte-identical resubmission — retried uploads, probe
+    traffic, duplicate frames — completes without occupying a batch
+    slot.  ``put`` refuses non-finite logits: results that slipped past
+    a degraded executor or a corrupted epilogue must never be replayed
+    to a later request.
+    """
+
+    def __init__(self, capacity: int = 256):
+        assert capacity >= 1, capacity
+        self.capacity = int(capacity)
+        self._lru: "collections.OrderedDict[tuple, np.ndarray]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(image) -> tuple:
+        a = np.ascontiguousarray(np.asarray(image, np.float32))
+        return (hashlib.blake2b(a.tobytes(), digest_size=16).hexdigest(),
+                a.shape)
+
+    def get(self, image) -> Optional[np.ndarray]:
+        k = self.key(image)
+        hit = self._lru.get(k)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._lru.move_to_end(k)
+        self.hits += 1
+        return hit
+
+    def put(self, image, logits) -> bool:
+        arr = np.asarray(logits)
+        if not np.all(np.isfinite(arr)):
+            return False     # integrity guard: never cache corruption
+        self._lru[self.key(image)] = arr
+        self._lru.move_to_end(self.key(image))
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+        return True
+
+    def __len__(self) -> int:
+        return len(self._lru)
 
 
 class BucketedPolicy:
@@ -162,7 +240,9 @@ class MicroBatchScheduler:
                  policy=None, telemetry: Telemetry | None = None,
                  clock=None, max_queue_depth: int | None = None,
                  max_retries: int = 4, backoff_ms: float = 10.0,
-                 backoff_base: float = 2.0, faults=None):
+                 backoff_base: float = 2.0, faults=None,
+                 watchdog_ms: float | None = None,
+                 result_cache: int | None = None):
         self.cache = cache
         self.params = params
         self.policy = policy if policy is not None else BucketedPolicy()
@@ -174,9 +254,17 @@ class MicroBatchScheduler:
         self.backoff_ms = float(backoff_ms)
         self.backoff_base = float(backoff_base)
         self.faults = faults
+        self.watchdog_ms = watchdog_ms
+        self.results = ResultCache(result_cache) \
+            if result_cache is not None else None
         self._queues: dict[int, collections.deque] = {}
-        self._pending: list = []     # (device_out, requests, bucket_key)
+        # in flight: (device_out, requests, bucket_key, executor, t_disp)
+        self._pending: list = []
         self._retry: list = []       # (not_before, resolution, requests)
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
 
     # -- terminal states (the no-lost / no-duplicated invariant) ---------
     def _shed(self, req: Request, err: ReproError) -> None:
@@ -195,37 +283,52 @@ class MicroBatchScheduler:
     # -- admission -------------------------------------------------------
     def submit(self, req: Request) -> bool:
         """Admit one request; returns False when it was shed instead
-        (bounded queue / overload fault), with ``req.error`` typed."""
-        req.arrival = self.clock()
-        self.telemetry.count("submitted")
-        if self.faults is not None:
-            try:
-                self.faults.fire("queue.overload",
-                                 resolution=req.resolution)
-            except CapacityExceeded as e:
-                self._shed(req, e)
+        (bounded queue / overload fault), with ``req.error`` typed.
+        A result-cache hit completes the request here — in front of
+        admission, before the queue bound is even consulted."""
+        with self._lock:
+            req.arrival = self.clock()
+            self.telemetry.count("submitted")
+            if self.results is not None:
+                hit = self.results.get(req.image)
+                if hit is not None:
+                    req.logits = np.array(hit)
+                    req.status = "completed"
+                    self.telemetry.count("result_cache_hit")
+                    self.telemetry.count("completed")
+                    return True
+                self.telemetry.count("result_cache_miss")
+            if self.faults is not None:
+                try:
+                    self.faults.fire("queue.overload",
+                                     resolution=req.resolution)
+                except CapacityExceeded as e:
+                    self._shed(req, e)
+                    return False
+            if self.max_queue_depth is not None \
+                    and self.queue_depth() >= self.max_queue_depth:
+                self._shed(req, CapacityExceeded(
+                    f"admission queue full ({self.max_queue_depth}); "
+                    f"request {req.rid} shed"))
                 return False
-        if self.max_queue_depth is not None \
-                and self.queue_depth() >= self.max_queue_depth:
-            self._shed(req, CapacityExceeded(
-                f"admission queue full ({self.max_queue_depth}); "
-                f"request {req.rid} shed"))
-            return False
-        self._queues.setdefault(req.resolution,
-                                collections.deque()).append(req)
-        return True
+            self._queues.setdefault(req.resolution,
+                                    collections.deque()).append(req)
+            self._work.notify_all()
+            return True
 
     def queue_depth(self, resolution: int | None = None) -> int:
-        if resolution is not None:
-            return len(self._queues.get(resolution, ()))
-        return sum(len(q) for q in self._queues.values())
+        with self._lock:
+            if resolution is not None:
+                return len(self._queues.get(resolution, ()))
+            return sum(len(q) for q in self._queues.values())
 
     def outstanding(self) -> int:
         """Requests not yet terminal: queued + awaiting retry + in
         flight on the device."""
-        return (self.queue_depth()
-                + sum(len(reqs) for _, _, reqs in self._retry)
-                + sum(len(reqs) for _, reqs, _ in self._pending))
+        with self._lock:
+            return (self.queue_depth()
+                    + sum(len(reqs) for _, _, reqs in self._retry)
+                    + sum(len(e[1]) for e in self._pending))
 
     # -- batch formation + dispatch -------------------------------------
     def _due(self, q) -> bool:
@@ -287,19 +390,22 @@ class MicroBatchScheduler:
         """Form and dispatch every ready batch; returns the number of
         requests dispatched.  ``drain=True`` treats all queues as due
         (and retries immediately, ignoring remaining backoff)."""
-        self._sweep_expired()
-        self._requeue_ripe_retries(drain)
-        dispatched = 0
-        for res, q in list(self._queues.items()):
-            due = drain or self._due(q)
-            for size in self.policy.form(len(q), self.cache.buckets, due):
-                take = min(size, len(q))
-                if take == 0:
-                    break
-                reqs = [q.popleft() for _ in range(take)]
-                self._dispatch(res, reqs, size)
-                dispatched += take
-        return dispatched
+        with self._lock:
+            self._check_watchdog()
+            self._sweep_expired()
+            self._requeue_ripe_retries(drain)
+            dispatched = 0
+            for res, q in list(self._queues.items()):
+                due = drain or self._due(q)
+                for size in self.policy.form(len(q), self.cache.buckets,
+                                             due):
+                    take = min(size, len(q))
+                    if take == 0:
+                        break
+                    reqs = [q.popleft() for _ in range(take)]
+                    self._dispatch(res, reqs, size)
+                    dispatched += take
+            return dispatched
 
     def _dispatch(self, resolution: int, reqs: List[Request],
                   bucket: int) -> None:
@@ -318,17 +424,20 @@ class MicroBatchScheduler:
         try:
             out = ex(self.params, jnp.asarray(imgs))  # async, no host sync
         except ReproError as e:
-            self._on_failure(resolution, reqs, key, e)
+            self._on_failure(resolution, reqs, key, e, ex=ex)
             return
         self.telemetry.record_dispatch(
             key, len(reqs), bucket,
             queue_depth=len(self._queues.get(resolution, ())),
             wait_ms=[(now - r.arrival) * 1e3 for r in reqs])
-        self._pending.append((out, reqs, key))
+        if getattr(ex, "shard", None) is not None:
+            self.telemetry.record_device_dispatch(
+                ex.device_ids, len(reqs), bucket)
+        self._pending.append((out, reqs, key, ex, now))
 
     # -- failure handling: retry/backoff + the degradation ladder --------
     def _on_failure(self, resolution: int, reqs: List[Request], key,
-                    err: ReproError) -> None:
+                    err: ReproError, ex=None) -> None:
         """One dispatch (or finalize) attempt failed for a whole group.
 
         Attempt 1 of a *transient* error retries the same executor after
@@ -338,6 +447,13 @@ class MicroBatchScheduler:
         pins the bucket to fp at once.  Requests whose retry budget is
         spent terminate as "failed"; the rest park in the retry buffer
         with exponential backoff.
+
+        Two sharding-specific branches: a ``DeviceLostError`` shrinks
+        the mesh instead of moving the ladder (the shrunken rebuild IS
+        the recovery — the survivors keep their fused plans), and an
+        exhausted mesh fails the group immediately, typed
+        ``MeshExhausted``, so nothing retries into a serving stack with
+        no devices left.
         """
         self.telemetry.count("dispatch_failures")
         self.telemetry.record_error(key)
@@ -345,11 +461,29 @@ class MicroBatchScheduler:
         for r in reqs:
             r.retries = attempt
         bucket = key[0]
-        if isinstance(err, NumericsError):
+        if isinstance(err, DeviceLostError):
+            dev = err.device
+            if dev is None and ex is not None:
+                dev = self.cache.health.attribute(err, ex.shard) \
+                    if getattr(self.cache, "health", None) is not None \
+                    else None
+            if getattr(self.cache, "on_device_lost", None) is not None \
+                    and self.cache.on_device_lost(dev):
+                self.telemetry.count("device_failover", len(reqs))
+        elif isinstance(err, NumericsError):
             self.cache.pin_fp(bucket, resolution)
-        elif not err.transient or attempt >= 2:
+        elif not isinstance(err, MeshExhausted) \
+                and (not err.transient or attempt >= 2):
             self.cache.degrade(bucket, resolution,
                                site=getattr(err, "site", None))
+        if isinstance(err, MeshExhausted) \
+                or getattr(self.cache, "mesh_exhausted", False):
+            if not isinstance(err, MeshExhausted):
+                err = MeshExhausted(
+                    f"mesh exhausted while serving {key}: {err}", key=key)
+            for r in reqs:
+                self._fail(r, err)
+            return
         if attempt > self.max_retries:
             for r in reqs:
                 self._fail(r, err)
@@ -372,34 +506,140 @@ class MicroBatchScheduler:
         again afterwards to re-dispatch (``outstanding()`` tells you
         whether anything went back).
         """
-        done = 0
-        pending, self._pending = self._pending, []
-        for out, reqs, key in pending:
-            try:
-                arr = np.asarray(out)              # sync on this chunk
-            except ReproError as e:
-                self._on_failure(key[1], reqs, key, e)
-                continue
-            except Exception as e:                 # untyped XLA crash
-                self._on_failure(key[1], reqs, key, ExecutorError(
-                    f"materializing executor {key} output failed: {e}"))
-                continue
-            if not np.all(np.isfinite(arr[:len(reqs)])):
-                self._on_failure(key[1], reqs, key, NumericsError(
-                    f"non-finite logits delivered by executor {key} "
-                    f"(int8 epilogue blow-up signature)", key=key))
-                continue
-            t = self.clock()
-            for i, r in enumerate(reqs):
-                assert r.status == "pending", (r.rid, r.status)
-                r.logits = arr[i]
-                r.status = "completed"
-            self.telemetry.record_latency(
-                key, [(t - r.arrival) * 1e3 for r in reqs])
-            done += len(reqs)
-        self._pending.clear()
-        self.telemetry.count("completed", done)
-        return done
+        with self._lock:
+            self._check_watchdog()
+            done = 0
+            pending, self._pending = self._pending, []
+            for out, reqs, key, ex, _t in pending:
+                try:
+                    arr = np.asarray(out)          # sync on this chunk
+                except ReproError as e:
+                    self._on_failure(key[1], reqs, key, e, ex=ex)
+                    continue
+                except Exception as e:             # untyped XLA crash
+                    self._on_failure(key[1], reqs, key, ExecutorError(
+                        f"materializing executor {key} output failed: "
+                        f"{e}"), ex=ex)
+                    continue
+                if not np.all(np.isfinite(arr[:len(reqs)])):
+                    self._on_failure(key[1], reqs, key, NumericsError(
+                        f"non-finite logits delivered by executor {key} "
+                        f"(int8 epilogue blow-up signature)", key=key),
+                        ex=ex)
+                    continue
+                t = self.clock()
+                healthy = (getattr(ex, "degraded", None) is None
+                           or not ex.degraded.degraded)
+                for i, r in enumerate(reqs):
+                    assert r.status == "pending", (r.rid, r.status)
+                    r.logits = arr[i]
+                    r.status = "completed"
+                    # only undegraded, finite results may be replayed
+                    if self.results is not None and healthy \
+                            and self.results.put(r.image, arr[i]):
+                        self.telemetry.count("result_cache_store")
+                self.telemetry.record_latency(
+                    key, [(t - r.arrival) * 1e3 for r in reqs])
+                done += len(reqs)
+            self.telemetry.count("completed", done)
+            if done:
+                self._work.notify_all()
+            return done
+
+    # -- the watchdog ----------------------------------------------------
+    def _check_watchdog(self) -> int:
+        """Convert hung in-flight batches into typed failures.
+
+        A dispatched batch whose output has not materialized within
+        ``watchdog_ms`` is declared hung: its device output is dropped
+        and the group routes through ``_on_failure`` as a
+        ``DeadlineExceeded`` — persistent, so the degradation ladder
+        moves immediately and the retry lands on a rebuilt executor
+        instead of the wedged one.  Returns the number of batches
+        declared hung.
+        """
+        if self.watchdog_ms is None or not self._pending:
+            return 0
+        now = self.clock()
+        keep, hung = [], []
+        for entry in self._pending:
+            (hung if now - entry[4] > self.watchdog_ms / 1e3
+             else keep).append(entry)
+        self._pending = keep
+        for _out, reqs, key, ex, t in hung:
+            self.telemetry.count("watchdog_fired")
+            self._on_failure(key[1], reqs, key, DeadlineExceeded(
+                f"batch {key} in flight for {(now - t) * 1e3:.0f} ms "
+                f"(watchdog bound {self.watchdog_ms:g} ms) — declared "
+                f"hung", key=key), ex=ex)
+        return len(hung)
+
+    # -- the async host loop ---------------------------------------------
+    def start(self, poll_s: float = 0.002) -> "MicroBatchScheduler":
+        """Run ``step()``/``finalize()`` on a background thread.
+
+        ``submit()`` then behaves as the async front door: it enqueues
+        (or sheds) and returns; the loop forms batches as they become
+        ready and materializes results.  ``poll_s`` bounds how long the
+        loop sleeps when idle — deadline flushes, backoff expiry and
+        the watchdog are all polled at least this often.
+        """
+        with self._lock:
+            if self._thread is not None:
+                return self
+            self._stopping = False
+            self._thread = threading.Thread(
+                target=self._loop, args=(float(poll_s),),
+                name="microbatch-scheduler", daemon=True)
+            self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None
+
+    def _loop(self, poll_s: float) -> None:
+        while True:
+            with self._lock:
+                if self._stopping:
+                    return
+                self.step()
+                if self._pending:
+                    self.finalize()
+                self._work.wait(timeout=poll_s)
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Join the host loop; ``drain=True`` first serves everything
+        still outstanding (retries included) on the caller's thread."""
+        with self._lock:
+            if self._thread is None:
+                return
+            self._stopping = True
+            self._work.notify_all()
+            thread, self._thread = self._thread, None
+        thread.join()
+        if drain:
+            while self.outstanding():
+                self.step(drain=True)
+                self.finalize()
+
+    def wait(self, requests: List[Request],
+             timeout_s: float | None = None) -> bool:
+        """Block until every request in ``requests`` is terminal
+        (completed / shed / failed).  Returns False on timeout.  Only
+        meaningful with the host loop running — nothing else makes
+        progress while the caller blocks."""
+        deadline = (time.monotonic() + timeout_s
+                    if timeout_s is not None else None)
+        with self._lock:
+            while any(r.status == "pending" for r in requests):
+                left = None if deadline is None \
+                    else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    return False
+                self._work.wait(timeout=0.05 if left is None
+                                else min(0.05, left))
+            return True
 
     # -- one-shot --------------------------------------------------------
     def serve(self, requests: List[Request]) -> np.ndarray:

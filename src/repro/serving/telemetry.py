@@ -19,7 +19,8 @@ import dataclasses
 import math
 from typing import Dict, Tuple
 
-__all__ = ["Telemetry", "BucketStats", "percentile", "MAX_SAMPLES"]
+__all__ = ["Telemetry", "BucketStats", "DeviceStats", "percentile",
+           "MAX_SAMPLES"]
 
 # Observation series are bounded ring buffers: a long-lived serving
 # process records one wait + one latency sample per request (and one
@@ -80,6 +81,38 @@ class BucketStats:
         }
 
 
+@dataclasses.dataclass
+class DeviceStats:
+    """Counters for one mesh device (one fault domain).
+
+    ``samples``/``padded`` are the rows of each sharded dispatch that
+    landed on this device, so per-device occupancy surfaces skew (a
+    ragged tail pads the *last* devices of the shard first).  ``errors``
+    counts launch failures attributed to this domain; ``lost`` flips to
+    True when the health registry declares it dead.
+    """
+    dispatches: int = 0
+    samples: int = 0
+    padded: int = 0
+    errors: int = 0
+    lost: bool = False
+
+    @property
+    def occupancy(self) -> float:
+        total = self.samples + self.padded
+        return self.samples / total if total else 1.0
+
+    def snapshot(self) -> dict:
+        return {
+            "dispatches": self.dispatches,
+            "samples": self.samples,
+            "padded": self.padded,
+            "errors": self.errors,
+            "lost": self.lost,
+            "occupancy": self.occupancy,
+        }
+
+
 class Telemetry:
     """Shared counters: generic names, observation series, bucket stats."""
 
@@ -87,6 +120,7 @@ class Telemetry:
         self.counters: Dict[str, int] = {}
         self.series: Dict[str, collections.deque] = {}
         self.buckets: Dict[Tuple, BucketStats] = {}
+        self.devices: Dict[int, DeviceStats] = {}
 
     # -- generic ---------------------------------------------------------
     def count(self, name: str, n: int = 1) -> None:
@@ -120,6 +154,38 @@ class Telemetry:
         """One failed dispatch/finalize attempt against this bucket."""
         self.bucket(key).errors += 1
 
+    # -- per-device (fault domains) --------------------------------------
+    def device(self, device_id: int) -> DeviceStats:
+        did = int(device_id)
+        if did not in self.devices:
+            self.devices[did] = DeviceStats()
+        return self.devices[did]
+
+    def record_device_dispatch(self, device_ids, n_real: int,
+                               bucket_size: int) -> None:
+        """Attribute one sharded dispatch's rows to its devices.
+
+        Rows are laid out contiguously: device ``i`` of the shard holds
+        rows ``[i*lb, (i+1)*lb)``, so real samples fill the leading
+        devices and padding lands on the trailing ones.
+        """
+        ids = tuple(device_ids)
+        lb = bucket_size // len(ids)
+        for i, did in enumerate(ids):
+            real = min(max(n_real - i * lb, 0), lb)
+            d = self.device(did)
+            d.dispatches += 1
+            d.samples += real
+            d.padded += lb - real
+
+    def record_device_error(self, device_id: int, *,
+                            lost: bool = False) -> None:
+        """One launch failure attributed to this fault domain."""
+        d = self.device(device_id)
+        d.errors += 1
+        if lost:
+            d.lost = True
+
     # -- aggregate views -------------------------------------------------
     def total(self, field: str) -> int:
         """Sum an integer BucketStats field over every bucket."""
@@ -140,6 +206,8 @@ class Telemetry:
             "buckets": {"/".join(str(k) for k in key): b.snapshot()
                         for key, b in sorted(self.buckets.items(),
                                              key=lambda kv: str(kv[0]))},
+            "devices": {did: d.snapshot()
+                        for did, d in sorted(self.devices.items())},
             "occupancy": self.occupancy,
             "padded_total": self.total("padded"),
             "samples_total": self.total("samples"),
@@ -164,6 +232,14 @@ class Telemetry:
             f"{'TOTAL':<22} {self.total('dispatches'):>5} "
             f"{self.total('samples'):>8} {self.total('padded'):>5} "
             f"{self.occupancy:>5.0%}")
+        if self.devices:
+            lines.append(f"{'device':<10} {'disp':>5} {'samples':>8} "
+                         f"{'pad':>5} {'occ':>6} {'errs':>5} state")
+            for did, d in sorted(self.devices.items()):
+                lines.append(
+                    f"dev{did:<7} {d.dispatches:>5} {d.samples:>8} "
+                    f"{d.padded:>5} {d.occupancy:>5.0%} {d.errors:>5} "
+                    f"{'LOST' if d.lost else 'alive'}")
         if self.counters:
             lines.append("counters: " + ", ".join(
                 f"{k}={v}" for k, v in sorted(self.counters.items())))

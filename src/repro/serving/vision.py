@@ -63,6 +63,13 @@ class VisionServeConfig:
     epilogues: bool = True    # producer-side int8 emission (the int8
     #                           dataflow); False serves the legacy
     #                           consumer-side-quantize pipeline (A/B)
+    devices: tuple | None = None   # device mesh for batch-axis sharding
+    #                                + per-device fault domains; None =
+    #                                classic single-device serving
+    result_cache: int | None = None  # image-hash response cache capacity
+    #                                  in front of admission (None = off)
+    watchdog_ms: float | None = None  # in-flight hang bound for the
+    #                                   scheduler's watchdog (None = off)
 
 
 class VisionEngine:
@@ -88,7 +95,8 @@ class VisionEngine:
             params, cfg, buckets=buckets, precision=serve_cfg.precision,
             use_plan=serve_cfg.use_plan, autotune=serve_cfg.autotune,
             capacity=serve_cfg.capacity, telemetry=self.telemetry,
-            epilogues=serve_cfg.epilogues, faults=faults)
+            epilogues=serve_cfg.epilogues, faults=faults,
+            devices=serve_cfg.devices)
         # primary executor built eagerly: plan construction (autotune
         # sweeps included) happens here, outside the request loop, and
         # .program / .plan keep their pre-runtime meaning
@@ -156,6 +164,8 @@ class VisionEngine:
                       if self.serve_cfg.policy == "fixed"
                       else BucketedPolicy())
         kw.setdefault("faults", self.faults)
+        kw.setdefault("result_cache", self.serve_cfg.result_cache)
+        kw.setdefault("watchdog_ms", self.serve_cfg.watchdog_ms)
         return MicroBatchScheduler(self.cache, self.params, policy=policy,
                                    telemetry=self.telemetry, clock=clock,
                                    **kw)

@@ -109,8 +109,10 @@ def test_mbconv_emit_matches_xla_quantize():
             assert isinstance(got, QTensor)
             np.testing.assert_array_equal(np.asarray(got.q),
                                           np.asarray(want.q))
-            np.testing.assert_array_equal(np.asarray(got.scale),
-                                          np.asarray(want.scale))
+            # scales may differ by FMA-fusion ulps between compilation
+            # contexts (per-batch-element scale arithmetic reassociates)
+            assert_allclose(np.asarray(got.scale), np.asarray(want.scale),
+                            rtol=1e-6, atol=0)
             if residual == "keep-fp":   # fp preserved for the consumer's
                 np.testing.assert_array_equal(   # residual add
                     np.asarray(got.fp), np.asarray(base))

@@ -265,9 +265,19 @@ def test_linear_w8a8_static_scale_matches_dynamic():
     w_q = _rand_q(rng, (32, 16))
     w_s = _rand_s(rng, 16)
     dyn = linear_w8a8(x, w_q, w_s)
-    # calibrating on the same tensor reproduces the dynamic absmax scale
+    # the dynamic path is per-batch-element absmax (quantize_act's
+    # scheme): each row is quantized with its own scale, so one row's
+    # numerics never depend on its batch-mates
+    from repro.core.quantization import quantize_act
+    qt = quantize_act(x)
+    want = (np.asarray(qt.q, np.int32) @ np.asarray(w_q, np.int32)
+            ).astype(np.float32) * np.asarray(qt.scale)[:, None] \
+        * np.asarray(w_s)[None, :]
+    assert_allclose(np.asarray(dyn), want, rtol=1e-5, atol=1e-5)
+    # a static scale calibrated on the same tensor agrees to within the
+    # coarser per-tensor int8 quantization error
     static = linear_w8a8(x, w_q, w_s, x_scale=calibrate_act_scale(x))
-    assert_allclose(np.asarray(static), np.asarray(dyn), rtol=1e-6, atol=1e-6)
+    assert_allclose(np.asarray(static), np.asarray(dyn), rtol=0, atol=0.3)
     # scale calibrated over several batches covers each of them
     xs = [jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
           for _ in range(3)]

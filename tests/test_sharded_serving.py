@@ -1,0 +1,536 @@
+"""Sharded serving: batch-axis shard_map executors, per-device fault
+domains, mesh shrink-and-replan failover, and the scheduler's async
+host loop + watchdog (ISSUE 7).
+
+Device-mesh behavior (parity, dropout failover, total loss) runs on 4
+fake host devices in a subprocess — ``XLA_FLAGS`` must be set before
+jax imports.  The host-side machinery (DeviceHealth, ResultCache, the
+watchdog, the async loop) is tested in-process against fake executors.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.common.errors import (
+    DeadlineExceeded, DeviceLostError, ExecutorError, KernelLaunchError,
+    MeshExhausted, ReproError)
+from repro.serving.scheduler import (
+    ManualClock, MicroBatchScheduler, Request, ResultCache)
+from repro.serving.sharding import DeviceHealth, ShardSpec, shard_width
+from repro.serving.telemetry import Telemetry
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _run(body):
+    import textwrap
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.common.errors import MeshExhausted
+        from repro.core.efficientvit import B1_SMOKE, init_efficientvit
+        from repro.core.quantization import quantize_efficientvit
+        from repro.serving.executors import ExecutorCache
+        from repro.serving.faults import FaultPlan, FaultSpec
+        from repro.serving.scheduler import (
+            ManualClock, MicroBatchScheduler, Request)
+        from repro.serving.telemetry import Telemetry
+
+        params = init_efficientvit(jax.random.PRNGKey(0), B1_SMOKE)
+
+        def runtime(tree, precision="auto", faults=None, **kw):
+            tel = Telemetry()
+            clock = ManualClock()
+            cache = ExecutorCache(tree, B1_SMOKE, buckets=(1, 2, 4),
+                                  precision=precision, autotune=False,
+                                  telemetry=tel, faults=faults,
+                                  clock=clock, devices=jax.devices())
+            sched = MicroBatchScheduler(cache, tree, telemetry=tel,
+                                        clock=clock, faults=faults, **kw)
+            return tel, cache, sched, clock
+
+        def drain(sched, clock, rounds=64):
+            for _ in range(rounds):
+                if not sched.outstanding():
+                    return
+                sched.step(drain=True)
+                sched.finalize()
+                clock.advance(0.05)
+            raise AssertionError("scheduler failed to drain")
+
+        def images(n, seed=0):
+            rng = np.random.default_rng(seed)
+            return rng.standard_normal((n, 32, 32, 3)).astype(np.float32)
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=REPO_SRC)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# -- device-mesh behavior (subprocess, 4 fake devices) ---------------------
+
+def test_sharded_matches_single_device():
+    """One cache entry drives the whole mesh; fp parity to 1e-5 and
+    int8 BIT-EXACT vs the single-device executor (per-batch-element
+    activation scales make the batch split invisible)."""
+    r = _run("""
+        x = jnp.asarray(images(4))
+        out = {}
+        for name, tree, prec in (("fp", params, "auto"),
+                                 ("int8", quantize_efficientvit(params),
+                                  "int8")):
+            tel = Telemetry()
+            single = ExecutorCache(tree, B1_SMOKE, buckets=(4,),
+                                   precision=prec, autotune=False,
+                                   telemetry=tel)
+            sharded = ExecutorCache(tree, B1_SMOKE, buckets=(4,),
+                                    precision=prec, autotune=False,
+                                    telemetry=Telemetry(),
+                                    devices=jax.devices())
+            ref = np.asarray(single.get(4, 32)(tree, x))
+            ex = sharded.get(4, 32)
+            got = np.asarray(ex(tree, x))
+            out[name] = dict(
+                maxdiff=float(np.max(np.abs(got - ref))),
+                bitexact=bool(np.array_equal(got, ref)),
+                local_batch=ex.shard.local_batch,
+                device_ids=list(ex.device_ids))
+        print(json.dumps(out))
+    """)
+    assert r["fp"]["maxdiff"] < 1e-5, r
+    assert r["int8"]["bitexact"], r
+    for prec in ("fp", "int8"):
+        assert r[prec]["local_batch"] == 1
+        assert r[prec]["device_ids"] == [0, 1, 2, 3]
+
+
+def test_dropout_failover_completes_trace():
+    """A device dies mid-trace: mesh shrinks 4->3, requests retry and
+    complete on the survivors, the degradation ladder never moves, and
+    the failed-over logits still match the healthy sharded executor."""
+    r = _run("""
+        faults = FaultPlan(FaultSpec("device.dropout", times=1, device=2))
+        tel, cache, sched, clock = runtime(params, faults=faults,
+                                           backoff_ms=0.0)
+        imgs = images(4)
+        reqs = [Request(rid=i, image=imgs[i]) for i in range(4)]
+        for rq in reqs:
+            sched.submit(rq)
+        drain(sched, clock)
+        healthy = ExecutorCache(params, B1_SMOKE, buckets=(4,),
+                                autotune=False, telemetry=Telemetry(),
+                                devices=jax.devices())
+        ref = np.asarray(healthy.get(4, 32)(params, jnp.asarray(imgs)))
+        got = np.stack([rq.logits for rq in reqs])
+        print(json.dumps(dict(
+            statuses=sorted({rq.status for rq in reqs}),
+            retries=[rq.retries for rq in reqs],
+            dead=list(cache.health.dead_ids()),
+            epoch=cache.health.epoch,
+            ladder=cache.degradation(4, 32) is not None,
+            maxdiff=float(np.max(np.abs(got - ref))),
+            counters={k: tel.counters[k] for k in
+                      ("device_lost", "mesh_shrunk", "device_failover",
+                       "retries") if k in tel.counters})))
+    """)
+    assert r["statuses"] == ["completed"], r
+    assert r["dead"] == [2] and r["epoch"] == 1
+    assert not r["ladder"], "device loss must not move the ladder"
+    assert r["maxdiff"] < 1e-5, r
+    assert r["counters"]["device_lost"] == 1
+    assert r["counters"]["mesh_shrunk"] == 1
+    assert r["retries"] == [1, 1, 1, 1]
+
+
+def test_total_mesh_loss_fails_clean():
+    """Every device dies: the trace terminates failed with typed
+    MeshExhausted (no retry burn-down, no hang), and a late submit
+    fails fast the same way."""
+    r = _run("""
+        faults = FaultPlan(*[FaultSpec("device.dropout", times=1, device=d)
+                             for d in range(4)])
+        tel, cache, sched, clock = runtime(params, faults=faults,
+                                           backoff_ms=0.0)
+        reqs = [Request(rid=i, image=img)
+                for i, img in enumerate(images(4))]
+        for rq in reqs:
+            sched.submit(rq)
+        drain(sched, clock)
+        late = Request(rid=99, image=images(1, seed=3)[0])
+        sched.submit(late)
+        drain(sched, clock)
+        print(json.dumps(dict(
+            statuses=sorted({rq.status for rq in reqs}),
+            typed=all(type(rq.error).__name__ == "MeshExhausted"
+                      for rq in reqs + [late]),
+            late_status=late.status,
+            late_retries=late.retries,
+            exhausted=cache.mesh_exhausted,
+            outstanding=sched.outstanding())))
+    """)
+    assert r["statuses"] == ["failed"], r
+    assert r["typed"] and r["exhausted"]
+    assert r["late_status"] == "failed"
+    assert r["late_retries"] <= 1, "exhausted mesh must not burn retries"
+    assert r["outstanding"] == 0
+
+
+# -- DeviceHealth / ShardSpec (host-only) ----------------------------------
+
+class _Dev:
+    def __init__(self, did):
+        self.id = did
+
+    def __repr__(self):
+        return f"_Dev({self.id})"
+
+
+def _health(n):
+    return DeviceHealth(devices=tuple(_Dev(i) for i in range(n)))
+
+
+def test_shard_width_picks_largest_divisor():
+    assert shard_width(4, 4) == 4
+    assert shard_width(4, 3) == 2     # 3 does not divide 4
+    assert shard_width(4, 2) == 2
+    assert shard_width(1, 4) == 1
+    assert shard_width(2, 4) == 2     # never wider than the batch
+    assert shard_width(6, 4) == 3
+    with pytest.raises(ValueError):
+        shard_width(0, 4)
+    with pytest.raises(ValueError):
+        shard_width(4, 0)
+
+
+def test_device_health_shrink_and_exhaust():
+    h = _health(4)
+    assert h.n_alive == 4 and not h.exhausted and h.epoch == 0
+    s = h.shard_for(4)
+    assert isinstance(s, ShardSpec)
+    assert s.device_ids == (0, 1, 2, 3) and s.local_batch == 1
+    assert h.mark_dead(1)
+    assert not h.mark_dead(1), "second report of the same death is a no-op"
+    assert not h.mark_dead(77), "unknown device ids are ignored"
+    assert h.epoch == 1 and h.dead_ids() == (1,)
+    s = h.shard_for(4)
+    assert s.device_ids == (0, 2) and s.local_batch == 2
+    assert h.shard_for(1).device_ids == (0,)
+    for d in (0, 2, 3):
+        h.mark_dead(d)
+    assert h.exhausted
+    with pytest.raises(MeshExhausted):
+        h.shard_for(4)
+
+
+def test_device_health_attribution():
+    h = _health(2)
+    shard = h.shard_for(2)
+    err = DeviceLostError("gone", device=1)
+    assert h.attribute(err, shard) == 1
+    # no device on the error: blame the shard's lead device
+    assert h.attribute(KernelLaunchError("boom"), shard) == 0
+    assert h.attribute(KernelLaunchError("boom"), None) is None
+
+
+def test_error_taxonomy():
+    assert issubclass(DeviceLostError, KernelLaunchError)
+    assert issubclass(MeshExhausted, ExecutorError)
+    assert DeviceLostError("x").transient, \
+        "device loss is transient: the mesh shrinks and the request retries"
+    assert not MeshExhausted("x").transient
+    e = DeviceLostError("x", device=3)
+    assert e.device == 3 and isinstance(e, ReproError)
+
+
+def test_device_telemetry_row_attribution():
+    tel = Telemetry()
+    # bucket 4 over 2 devices, 3 real rows: dev0 holds rows 0-1 (real),
+    # dev1 holds rows 2-3 (one real, one pad)
+    tel.record_device_dispatch((0, 1), n_real=3, bucket_size=4)
+    assert tel.devices[0].samples == 2 and tel.devices[0].padded == 0
+    assert tel.devices[1].samples == 1 and tel.devices[1].padded == 1
+    tel.record_device_error(1, lost=True)
+    assert tel.devices[1].errors == 1 and tel.devices[1].lost
+    snap = tel.snapshot()["devices"]
+    assert snap[1]["lost"] and snap[0]["occupancy"] == 1.0
+    assert "LOST" in tel.table()
+
+
+# -- ResultCache (host-only) -----------------------------------------------
+
+def test_result_cache_hit_miss_and_lru():
+    rc = ResultCache(capacity=2)
+    a = np.ones((4, 4, 3), np.float32)
+    b = np.zeros((4, 4, 3), np.float32)
+    c = np.full((4, 4, 3), 2.0, np.float32)
+    assert rc.get(a) is None and rc.misses == 1
+    assert rc.put(a, np.arange(4.0))
+    np.testing.assert_array_equal(rc.get(a), np.arange(4.0))
+    assert rc.hits == 1
+    rc.put(b, np.arange(4.0) + 1)
+    rc.put(c, np.arange(4.0) + 2)          # capacity 2: evicts a (LRU)
+    assert rc.get(a) is None and len(rc) == 2
+    # byte-identical content hits regardless of array identity
+    assert rc.get(b.copy()) is not None
+
+
+def test_result_cache_refuses_non_finite():
+    rc = ResultCache()
+    img = np.ones((4, 4, 3), np.float32)
+    assert not rc.put(img, np.array([1.0, np.nan]))
+    assert not rc.put(img, np.array([np.inf]))
+    assert rc.get(img) is None and len(rc) == 0
+
+
+# -- the scheduler against fake executors (host-only) ----------------------
+
+class EchoExecutor:
+    """Returns each row's mean — a per-request fingerprint, so ordering
+    bugs surface as wrong logits, not just wrong counts."""
+
+    def __init__(self, cache, bucket):
+        self.cache, self.bucket = cache, bucket
+
+    def __call__(self, params, x):
+        if self.cache.call_faults:
+            raise self.cache.call_faults.pop(0)
+        x = np.asarray(x)
+        return np.mean(x.reshape(x.shape[0], -1), axis=1,
+                       keepdims=True).astype(np.float32)
+
+
+class EchoCache:
+    precision = "auto"
+
+    def __init__(self, *, buckets=(1, 2, 4), call_faults=(), degraded=None):
+        self.buckets = tuple(buckets)
+        self.telemetry = Telemetry()
+        self.call_faults = list(call_faults)
+        self.degrades, self.pins = [], []
+        self._degraded = degraded
+
+    def get(self, batch, resolution):
+        ex = EchoExecutor(self, batch)
+        ex.degraded = self._degraded
+        return ex
+
+    def degrade(self, batch, resolution, *, site=None):
+        self.degrades.append((batch, resolution, site))
+
+    def pin_fp(self, batch, resolution):
+        self.pins.append((batch, resolution))
+
+
+def _fingerprint(img):
+    return np.float32(np.mean(img))
+
+
+def _reqs(n, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, image=rng.standard_normal(
+        (8, 8, 3)).astype(np.float32), **kw) for i in range(n)]
+
+
+def test_scheduler_result_cache_front_of_admission():
+    cache = EchoCache()
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock, result_cache=8,
+                                max_queue_depth=2)
+    first = _reqs(2)
+    for r in first:
+        sched.submit(r)
+    sched.step(drain=True)
+    sched.finalize()
+    assert all(r.status == "completed" for r in first)
+    tel = cache.telemetry.counters
+    assert tel["result_cache_miss"] == 2
+    assert tel["result_cache_store"] == 2
+    # byte-identical resubmission completes AT submit — in front of the
+    # queue bound, which a fresh third image would trip
+    again = [Request(rid=10 + i, image=first[i].image) for i in range(2)]
+    for r in again:
+        assert sched.submit(r)
+        assert r.status == "completed"
+    assert tel["result_cache_hit"] == 2
+    np.testing.assert_allclose(
+        np.ravel(again[0].logits), [_fingerprint(first[0].image)],
+        rtol=1e-6)
+    assert sched.queue_depth() == 0, "hits must not occupy queue slots"
+
+
+def test_scheduler_degraded_results_never_cached():
+    class Degraded:
+        degraded = True
+    cache = EchoCache(degraded=Degraded())
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock(),
+                                result_cache=8)
+    reqs = _reqs(2)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)
+    sched.finalize()
+    assert all(r.status == "completed" for r in reqs)
+    assert len(sched.results) == 0, \
+        "degraded executors' outputs must never enter the result cache"
+    assert "result_cache_store" not in cache.telemetry.counters
+
+
+def test_watchdog_converts_hung_batch():
+    cache = EchoCache()
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock,
+                                watchdog_ms=50.0, backoff_ms=0.0)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)               # dispatched, now in flight
+    assert sched.outstanding() == 4
+    clock.advance(0.2)                   # blow the 50 ms in-flight bound
+    sched.step()                         # watchdog sweeps before forming
+    tel = cache.telemetry.counters
+    assert tel["watchdog_fired"] == 1
+    # DeadlineExceeded is persistent: the ladder moved immediately
+    assert cache.degrades == [(4, 8, None)], cache.degrades
+    assert all(r.retries == 1 for r in reqs)
+    sched.step(drain=True)
+    sched.finalize()
+    assert all(r.status == "completed" for r in reqs)
+
+
+def test_watchdog_spares_fresh_batches():
+    cache = EchoCache()
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock, watchdog_ms=50.0)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)
+    clock.advance(0.01)                  # well inside the bound
+    sched.finalize()
+    assert all(r.status == "completed" for r in reqs)
+    assert "watchdog_fired" not in cache.telemetry.counters
+
+
+def test_async_loop_ordering_and_liveness():
+    """The background host loop serves full buckets with no foreground
+    step/finalize calls; each request gets ITS OWN image's fingerprint
+    back (ordering), and wait() returns (liveness)."""
+    cache = EchoCache()
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock())
+    sched.start(poll_s=0.001)
+    try:
+        reqs = _reqs(8, seed=3)
+        for r in reqs:
+            sched.submit(r)
+        assert sched.wait(reqs, timeout_s=30.0), \
+            [(r.rid, r.status) for r in reqs]
+        for r in reqs:
+            np.testing.assert_allclose(np.ravel(r.logits),
+                                       [_fingerprint(r.image)], rtol=1e-6)
+    finally:
+        sched.stop()
+    assert not sched.running
+
+
+def test_async_loop_stop_drains_tail():
+    cache = EchoCache()
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock())
+    sched.start(poll_s=0.001)
+    reqs = _reqs(3, seed=4)              # never fills the 4-bucket, and
+    for r in reqs:                       # the manual clock never makes
+        sched.submit(r)                  # it due: only stop() drains it
+    sched.stop(drain=True)
+    assert all(r.status == "completed" for r in reqs)
+
+
+def test_async_loop_concurrent_submitters():
+    cache = EchoCache()
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock())
+    sched.start(poll_s=0.001)
+    groups = [_reqs(4, seed=10 + g) for g in range(4)]
+    threads = [threading.Thread(
+        target=lambda g=g: [sched.submit(r) for r in g]) for g in groups]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    flat = [r for g in groups for r in g]
+    assert sched.wait(flat, timeout_s=30.0)
+    sched.stop()
+    for r in flat:
+        np.testing.assert_allclose(np.ravel(r.logits),
+                                   [_fingerprint(r.image)], rtol=1e-6)
+
+
+def test_wait_times_out_without_loop():
+    cache = EchoCache()
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock())
+    r = _reqs(1)[0]
+    sched.submit(r)
+    t0 = time.monotonic()
+    assert not sched.wait([r], timeout_s=0.1)
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_device_lost_routes_to_failover_not_ladder():
+    """A DeviceLostError from a fake executor calls the cache's
+    on_device_lost hook and leaves degrade()/pin_fp() untouched."""
+    class MeshCache(EchoCache):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.lost = []
+            self.mesh_exhausted = False
+
+        def on_device_lost(self, device_id):
+            self.lost.append(device_id)
+            return True
+
+    cache = MeshCache(call_faults=[DeviceLostError("dev gone", device=3)])
+    clock = ManualClock()
+    sched = MicroBatchScheduler(cache, None, clock=clock, backoff_ms=0.0)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)               # dropout fires at dispatch
+    assert cache.lost == [3]
+    assert cache.degrades == [] and cache.pins == []
+    sched.step(drain=True)
+    sched.finalize()
+    assert all(r.status == "completed" for r in reqs)
+    assert cache.telemetry.counters["device_failover"] == 4
+
+
+def test_mesh_exhausted_fails_without_retry_burn():
+    cache = EchoCache()
+    cache.mesh_exhausted = True
+
+    def get(batch, resolution):
+        raise MeshExhausted("all dead")
+    cache.get = get
+    sched = MicroBatchScheduler(cache, None, clock=ManualClock(),
+                                backoff_ms=0.0)
+    reqs = _reqs(4)
+    for r in reqs:
+        sched.submit(r)
+    sched.step(drain=True)
+    assert all(r.status == "failed" for r in reqs)
+    assert all(isinstance(r.error, MeshExhausted) for r in reqs)
+    assert all(r.retries <= 1 for r in reqs)
+    assert sched.outstanding() == 0
+    assert "retries" not in cache.telemetry.counters
+
+
+def test_deadline_exceeded_from_watchdog_is_persistent():
+    assert not DeadlineExceeded("hung").transient
