@@ -28,6 +28,10 @@ Asserts (CI smoke gate, ``--smoke``):
     expectation here explicitly.
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+        [--record-trace PATH]   export the replayed trace as JSON (the
+                                offline schedule search's input)
+        [--trace PATH]          replay a recorded trace instead of
+                                synthesizing one
 """
 from __future__ import annotations
 
@@ -80,14 +84,18 @@ def make_images(trace, seed: int = 1):
 
 
 def replay(params, spec, trace, images, *, policy_name: str,
-           precision: str = "auto", devices=None):
+           precision: str = "auto", devices=None, cfg=B1_SMOKE,
+           autotune: bool = False, artifact=None):
     """One policy x precision replay; returns (telemetry, logits, wall_s,
     cache).  ``devices`` shards every dispatch's batch axis across that
-    mesh (``serving.sharding``)."""
+    mesh (``serving.sharding``); ``artifact`` adopts an offline-searched
+    ``repro.search.ScheduleArtifact`` (buckets + pinned plans, zero
+    autotune sweeps)."""
     tel = Telemetry()
-    cache = ExecutorCache(params, B1_SMOKE, buckets=spec["buckets"],
-                          precision=precision, autotune=False,
-                          telemetry=tel, devices=devices)
+    cache = ExecutorCache(params, cfg, buckets=spec["buckets"],
+                          precision=precision, autotune=autotune,
+                          telemetry=tel, devices=devices,
+                          artifact=artifact)
     policy = (FixedMicrobatchPolicy(spec["microbatch"])
               if policy_name == "fixed" else BucketedPolicy())
     clock = ManualClock()
@@ -183,12 +191,23 @@ def sharded_section(params, qparams, spec, trace, images, results):
     return tel
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, trace_path: str | None = None,
+        record_path: str | None = None):
     spec = SMOKE if smoke else FULL
     key = jax.random.PRNGKey(0)
     params = init_efficientvit(key, B1_SMOKE)
     qparams = quantize_efficientvit(params)
-    trace = make_trace(spec)
+    if trace_path is not None:
+        from repro.search.trace import load_trace
+        trace = load_trace(trace_path)
+        print(f"(replaying recorded trace {trace_path}: "
+              f"{len(trace)} requests)")
+    else:
+        trace = make_trace(spec)
+    if record_path is not None:
+        from repro.search.trace import save_trace
+        fp = save_trace(record_path, trace, spec=spec)
+        print(f"(trace recorded to {record_path}, fingerprint {fp})")
     images = make_images(trace)
     n = len(images)
 
@@ -260,8 +279,19 @@ def run(smoke: bool = False):
         for prec, per in results.items()}
 
 
+def _flag_value(argv, flag):
+    if flag in argv:
+        i = argv.index(flag)
+        assert i + 1 < len(argv), f"{flag} needs a path"
+        return argv[i + 1]
+    return None
+
+
 def main():
-    run(smoke="--smoke" in sys.argv[1:])
+    argv = sys.argv[1:]
+    run(smoke="--smoke" in argv,
+        trace_path=_flag_value(argv, "--trace"),
+        record_path=_flag_value(argv, "--record-trace"))
 
 
 if __name__ == "__main__":

@@ -42,7 +42,8 @@ from __future__ import annotations
 
 __all__ = ["ReproError", "LoweringError", "PlanError", "ExecutorError",
            "KernelLaunchError", "NumericsError", "DeviceLostError",
-           "MeshExhausted", "DeadlineExceeded", "CapacityExceeded"]
+           "MeshExhausted", "DeadlineExceeded", "CapacityExceeded",
+           "ArtifactError"]
 
 
 class ReproError(Exception):
@@ -98,6 +99,14 @@ class MeshExhausted(ExecutorError):
     to.  Persistent: requests fail immediately rather than burning their
     retry budget against an empty mesh."""
     transient = False
+
+
+class ArtifactError(ReproError, ValueError):
+    """A serialized search artifact (schedule artifact, traffic trace)
+    was rejected: schema version, config hash, precision or trace
+    fingerprint does not match what the consumer expects.  Persistent —
+    adopting a mismatched schedule would silently serve stale tiles, so
+    the caller must fall back to online planning instead of retrying."""
 
 
 class DeadlineExceeded(ReproError):

@@ -132,15 +132,24 @@ def _op_io_bytes(op: OpRecord):
 
 
 def _op_dram_bytes(op: OpRecord, hw: HwConfig, *, skip_in=False,
-                   skip_out=False) -> float:
+                   skip_out=False, act_mult: float = 1.0,
+                   w_mult: float = 1.0) -> float:
     """DRAM traffic: weights always stream; activations only when the
-    feature map exceeds the on-chip ping-pong budget (or fusion skips it)."""
+    feature map exceeds the on-chip ping-pong budget (or fusion skips it).
+
+    ``act_mult`` / ``w_mult`` scale the int8 baseline to other storage
+    precisions (4.0 = fp32) — the lever the offline schedule search uses
+    to cost per-site precision decisions; the defaults keep the paper's
+    all-int8 model (fig6/table2) byte-identical.  The on-chip residency
+    test stays at the int8 element count: precision changes what a
+    round-trip costs, not the paper's buffer-fit policy.
+    """
     weights, inp, out = _op_io_bytes(op)
     if skip_in or inp <= hw.act_buffer_bytes:
         inp = 0.0
     if skip_out or out <= hw.act_buffer_bytes:
         out = 0.0
-    return weights + inp + out
+    return weights * w_mult + (inp + out) * act_mult
 
 
 # ---------------------------------------------------------------------------
@@ -171,9 +180,16 @@ def _fused_pair_cycles(producer: OpRecord, consumer: OpRecord,
 
 
 def schedule(ops: Sequence[OpRecord], hw: HwConfig = HwConfig(), *,
-             fuse: bool = True) -> list[ScheduledOp]:
-    """Schedule the manifest; returns per-(fused-)op cycles and traffic."""
+             fuse: bool = True, act_mult: float = 1.0,
+             w_mult: float = 1.0) -> list[ScheduledOp]:
+    """Schedule the manifest; returns per-(fused-)op cycles and traffic.
+
+    ``act_mult``/``w_mult`` pass through to the DRAM model (int8
+    baseline = 1.0); compute cycles are precision-independent — the
+    PE/MAT arrays run at one MAC per multiplier per cycle either way.
+    """
     out: list[ScheduledOp] = []
+    mults = dict(act_mult=act_mult, w_mult=w_mult)
     i = 0
     while i < len(ops):
         op = ops[i]
@@ -181,8 +197,8 @@ def schedule(ops: Sequence[OpRecord], hw: HwConfig = HwConfig(), *,
         if fuse and nxt is not None and nxt.fused_with_prev:
             cyc = _fused_pair_cycles(op, nxt, hw)
             macs = op.macs + nxt.macs
-            dram = (_op_dram_bytes(op, hw, skip_out=True)
-                    + _op_dram_bytes(nxt, hw, skip_in=True))
+            dram = (_op_dram_bytes(op, hw, skip_out=True, **mults)
+                    + _op_dram_bytes(nxt, hw, skip_in=True, **mults))
             total = max(cyc, dram / hw.bytes_per_cycle)
             out.append(ScheduledOp(f"{op.name}+{nxt.name}", op.stage, macs,
                                    cyc, dram, total, True))
@@ -193,7 +209,7 @@ def schedule(ops: Sequence[OpRecord], hw: HwConfig = HwConfig(), *,
         else:
             # both engines in PW mode (widths equal: N == T)
             cyc = _pw_cycles(op, hw.N, (hw.M + hw.S) * hw.L)
-        dram = _op_dram_bytes(op, hw)
+        dram = _op_dram_bytes(op, hw, **mults)
         total = max(cyc, dram / hw.bytes_per_cycle)
         out.append(ScheduledOp(op.name, op.stage, op.macs, cyc, dram, total,
                                False))
@@ -227,6 +243,19 @@ class Report:
     @property
     def gops_per_dsp(self) -> float:
         return self.gops / self.hw.dsp_used
+
+    def to_dict(self) -> dict:
+        """Machine-readable summary (JSON-serializable plain types)."""
+        return {
+            "total_macs": int(self.total_macs),
+            "total_cycles": float(self.total_cycles),
+            "dram_bytes": float(self.dram_bytes),
+            "latency_ms": self.latency_ms,
+            "gops": self.gops,
+            "utilization": self.utilization,
+            "gops_per_w": self.gops_per_w,
+            "gops_per_dsp": self.gops_per_dsp,
+        }
 
 
 def analyze_program(program: Program, hw: HwConfig = HwConfig(), *,
@@ -273,6 +302,77 @@ def analyze_program(program: Program, hw: HwConfig = HwConfig(), *,
         st["util"] = st["macs"] / (st["cycles"] * hw.total_mults)
         st["latency_ms"] = st["cycles"] / hw.freq_hz * 1e3
     return rep, stages, sched
+
+
+def site_breakdown(program: Program, hw: HwConfig = HwConfig(), *,
+                   plan=None, include_head: bool = False,
+                   default_precision: str = "int8") -> list[dict]:
+    """Per-``Site`` machine-readable cycle/DRAM rows under a plan.
+
+    Each row re-costs one site's op group with the site's OWN routing
+    decision instead of the paper's global all-fused/all-int8
+    assumption:
+
+      * a ``FusionPlan`` decision with ``fused=False`` schedules the
+        site's ops unfused (every ``fused_with_prev`` pairing broken);
+      * the decided precision scales DRAM traffic — int8 weights move
+        1 byte/element, fp32 weights 4; activations cost 1 byte only on
+        a *fused int8* site (the producer-emitted boundary), and fp32
+        everywhere else, including demoted int8 sites whose reference
+        chain dequantizes between ops (matching ``core.fusion``'s
+        analytic accounting);
+      * a site whose epilogue keeps the fp activation alongside the
+        int8 one is charged the residual-fp boundary bytes (as
+        ``analyze_program`` does), memory-bound.
+
+    Sites outside the plan (structural convs, the head, ``plan=None``)
+    cost at ``default_precision`` fully fused — ``"int8"`` (default)
+    reproduces ``analyze_program``'s totals exactly when no plan is
+    given; the offline schedule search passes the serving precision so
+    fp and int8 candidate schedules are comparable.
+
+    Scheduling each site separately is exact, not an approximation:
+    ``core.program.site_records`` guarantees no fused pair spans a site
+    boundary.  This is the evaluator surface of the search subsystem —
+    and the machine-readable twin of the per-op table fig6 prints.
+    """
+    from repro.core.program import site_records
+
+    assert default_precision in ("fp", "int8"), default_precision
+    rows: list[dict] = []
+    for site, ops in site_records(program):
+        if not include_head and site.stage == "head":
+            continue
+        d = plan.get(site.name) if plan is not None else None
+        fused = d.fused if d is not None else True
+        prec = d.precision if d is not None else default_precision
+        act_mult = 1.0 if (fused and prec == "int8") else 4.0
+        w_mult = 1.0 if prec == "int8" else 4.0
+        sched = schedule(ops, hw, fuse=fused, act_mult=act_mult,
+                         w_mult=w_mult)
+        dram = sum(s.dram_bytes for s in sched)
+        cycles = sum(s.cycles for s in sched)
+        ep = site.epilogue
+        if ep.emits_q and ep.residual != "none":
+            n = site.out_shape[1] * site.out_shape[2] * site.out_shape[3]
+            if n > hw.act_buffer_bytes:
+                extra = 4.0 * n
+                dram += extra
+                cycles += extra / hw.bytes_per_cycle
+        rows.append({
+            "site": site.name, "kind": site.kind, "stage": site.stage,
+            "fused": bool(fused), "precision": prec,
+            "reason": d.reason if d is not None else "-",
+            "blocks": dict(d.blocks) if d is not None else {},
+            # scheduled op groups = launches: fusion merges paired ops
+            # into one, the reference path launches every op separately
+            "launches": len(sched),
+            "macs": int(sum(s.macs for s in sched)),
+            "compute_cycles": float(sum(s.compute_cycles for s in sched)),
+            "dram_bytes": float(dram),
+            "cycles": float(cycles),
+        })
+    return rows
 
 
 def analyze(cfg: EfficientViTConfig = B1, hw: HwConfig = HwConfig(), *,

@@ -35,9 +35,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
-__all__ = ["SiteDecision", "FusionPlan", "build_plan", "plan_program",
-           "plan_report", "launch_counts", "site_traffic",
-           "EXPECTED_B1_FUSED_LAUNCHES", "EXPECTED_B1_FUSED_LAUNCHES_INT8"]
+__all__ = ["SiteDecision", "SiteOverride", "FusionPlan", "build_plan",
+           "plan_program", "plan_report", "report_dict", "launch_counts",
+           "site_traffic", "EXPECTED_B1_FUSED_LAUNCHES",
+           "EXPECTED_B1_FUSED_LAUNCHES_INT8"]
 
 # Drift gate: one fused launch per fusible site of EfficientViT-B1
 # (1 stem DSConv + 2+3 MBConv + 2 downsamples + (3+4) x (MSA + MBConv)).
@@ -59,6 +60,8 @@ class SiteDecision:
     reason: str            # "ok" | "vmem" | "quantized" | "not-quantized"
     #                        | "mixed" | "disabled"
     #                        | "fault" (demoted by the degradation ladder)
+    #                        | "search" (demoted by an offline-searched
+    #                          schedule override, repro.search)
     blocks: Mapping[str, int] = dataclasses.field(default_factory=dict)
     shape: tuple = ()      # (B, H, W, C, mid, F, stride) / (BH, N, D, S, C)
     precision: str = "fp"  # "fp" | "int8" — which kernel family runs
@@ -67,6 +70,58 @@ class SiteDecision:
     #                           output (producer side), None -> fp
     q_in: bool = False     # the producer's epilogue delivers this site's
     #                        input already quantized (int8 boundary)
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (schedule artifacts, benchmark dumps)."""
+        ep = self.epilogue
+        return {
+            "name": self.name, "kind": self.kind, "fused": self.fused,
+            "reason": self.reason, "blocks": dict(self.blocks),
+            "shape": list(self.shape), "precision": self.precision,
+            "reused": self.reused, "q_in": self.q_in,
+            "epilogue": None if ep is None else {
+                "out_dtype": ep.out_dtype, "scale": ep.scale,
+                "residual": ep.residual},
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteOverride:
+    """One site's entry in an externally supplied schedule.
+
+    The injection lever of the offline schedule search
+    (``repro.search``): ``plan_program(overrides={name: SiteOverride})``
+    consults the override *before* its own policy, so a searched — or
+    artifact-shipped — schedule decides routing instead of the
+    tuner/heuristics:
+
+      ``fused=False``       pin the site to the reference path (reason
+                            ``reason``, default ``"search"``);
+      ``fused=True``/None   plan normally, but with ``precision`` (when
+                            set) as this site's requested precision and
+                            ``blocks`` (when set) frozen verbatim — the
+                            tuner is never consulted, which is what
+                            makes artifact-warm cold starts sweep-free.
+
+    The VMEM budget check still runs for fused overrides: an override
+    can only choose among safe schedules, never force an unlaunchable
+    tile into a plan.
+    """
+    fused: bool | None = None
+    precision: str | None = None      # None -> the plan-level request
+    blocks: Mapping[str, int] | None = None   # None -> donor/tuner path
+    reason: str = "search"
+
+    @classmethod
+    def from_decision(cls, d: "SiteDecision | dict") -> "SiteOverride":
+        """Pin a previously frozen decision (e.g. a ``ScheduleArtifact``
+        entry) so replanning reproduces it."""
+        if isinstance(d, SiteDecision):
+            d = d.to_dict()
+        return cls(fused=bool(d["fused"]),
+                   precision=d.get("precision"),
+                   blocks=dict(d.get("blocks") or {}),
+                   reason=d.get("reason", "search"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,13 +214,19 @@ def _reusable_blocks(reuse, site, prec, impl):
 
 
 def _decide(site, params, *, enabled, autotune, interpret, precision,
-            reuse=None):
+            reuse=None, override=None):
     from repro.kernels.registry import get_kernel, get_probe
 
     shape = decision_shape(site)
+    if override is not None and override.fused is False:
+        return SiteDecision(site.name, site.kind, False, override.reason,
+                            shape=shape,
+                            precision=override.precision or "fp")
     if not enabled:
         return SiteDecision(site.name, site.kind, False, "disabled",
                             shape=shape)
+    if override is not None and override.precision is not None:
+        precision = override.precision
     probe = get_probe(site.kind)          # precision policy is per-kind
     prec, fail = probe.resolve_precision(probe.site_precision(params),
                                          precision)
@@ -175,6 +236,13 @@ def _decide(site, params, *, enabled, autotune, interpret, precision,
     if impl.vmem_bytes(site) > impl.vmem_budget:
         return SiteDecision(site.name, site.kind, False, "vmem",
                             shape=shape, precision=prec)
+    if override is not None and override.blocks is not None:
+        # searched/artifact blocks are frozen verbatim: no tuner
+        # consultation at all, which is the artifact-warm zero-sweep
+        # guarantee (the blocks were validated when the search built
+        # the schedule against this exact config hash)
+        return SiteDecision(site.name, site.kind, True, "ok",
+                            dict(override.blocks), shape, precision=prec)
     blocks = _reusable_blocks(reuse, site, prec, impl)
     reused = blocks is not None
     if not reused:
@@ -251,7 +319,9 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
                  precision: str = "auto",
                  reuse: FusionPlan | None = None,
                  epilogues: bool = True,
-                 demote=()) -> FusionPlan:
+                 demote=(),
+                 overrides: Mapping[str, SiteOverride] | None = None
+                 ) -> FusionPlan:
     """Freeze per-site routing for a lowered ``core.program.Program``.
 
     ``precision``: "auto" (default) matches each site's params — fp32
@@ -279,6 +349,14 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     registry probe raising) is re-raised as a typed
     ``common.errors.PlanError`` naming the site, so the serving layer
     can blame — and demote — exactly the offending site.
+
+    ``overrides``: an optional ``{site name: SiteOverride}`` schedule —
+    the offline schedule search's injection point (``repro.search``).
+    An override wins over the tuner/heuristics for its site: it can pin
+    the site to the reference path, force a precision, and freeze block
+    sizes verbatim (no tuner consultation).  ``demote`` still wins over
+    an override — a fault-ladder demotion must not be resurrected by a
+    stale artifact.  Sites without an override plan exactly as before.
 
     ``epilogues`` (default on) runs the producer->consumer pass
     (``assign_epilogues``) after the per-site decisions: producers of
@@ -312,7 +390,8 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
                 site, params_at(params, site.param_path),
                 enabled=enabled.get(site.kind, True),  # new kinds default
                 autotune=autotune, interpret=interpret,
-                precision=precision, reuse=reuse)
+                precision=precision, reuse=reuse,
+                override=(overrides or {}).get(site.name))
         except Exception as e:
             site_name = getattr(e, "site", None) if isinstance(
                 e, ReproError) else None
@@ -527,6 +606,21 @@ def plan_report(plan: FusionPlan) -> list[dict]:
             "launches_ref": launches[0],
             "launches_fused": launches[1] if d.fused else launches[0],
         })
+    return rows
+
+
+def report_dict(plan: FusionPlan) -> list[dict]:
+    """``plan_report`` with every value JSON-serializable: the
+    ``epilogue`` column rendered as a plain dict (via
+    ``SiteDecision.to_dict``'s convention) instead of the dataclass.
+    The machine-readable form benchmarks and the offline schedule
+    search consume — no more hand-parsing of ``FusionPlan.table``."""
+    rows = []
+    for r in plan_report(plan):
+        ep = r["epilogue"]
+        rows.append({**r, "epilogue": None if ep is None else {
+            "out_dtype": ep.out_dtype, "scale": ep.scale,
+            "residual": ep.residual}})
     return rows
 
 

@@ -40,7 +40,7 @@ from repro.core.efficientvit import (
 from repro.core.relu_attention import MSAConfig, msa
 
 __all__ = ["Epilogue", "EPILOGUE_FP", "Site", "Program", "lower", "execute",
-           "manifest", "FUSIBLE_KINDS", "params_at"]
+           "manifest", "site_records", "FUSIBLE_KINDS", "params_at"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -447,11 +447,22 @@ def _msa_records(site: Site) -> list[OpRecord]:
     return ops
 
 
-def manifest(program: Program) -> list[OpRecord]:
-    """Expand the IR into per-hardware-op records (one inference; the
-    batch dim is excluded, matching the legacy ``layer_manifest``)."""
-    ops: list[OpRecord] = []
+def site_records(program: Program) -> list[Tuple[Site, list[OpRecord]]]:
+    """Per-site hardware op records: ``[(site, [ops...]), ...]``.
+
+    The grouped form of ``manifest``: every ``fused_with_prev`` pairing
+    the cycle model exploits is *within* one site's op list (the DW+PW
+    of a DSConv, the DW+PW2 of an MBConv, the KtV+QZ and agg DW+PW of
+    an MSA module), never across a site boundary — so scheduling each
+    site's ops independently and concatenating is exactly equivalent to
+    scheduling the flat manifest.  That equivalence is what lets the
+    offline schedule search (``repro.search``) attribute cycles and
+    DRAM bytes to individual sites and re-cost them under per-site
+    fusion/precision decisions.
+    """
+    out: list[Tuple[Site, list[OpRecord]]] = []
     for site in program.sites:
+        ops: list[OpRecord] = []
         if site.kind == "conv_bn":
             _, _, _, C = site.in_shape
             _, r, _, F = site.out_shape
@@ -474,4 +485,11 @@ def manifest(program: Program) -> list[OpRecord]:
             ops.append(OpRecord(site.stage, site.local_name, "matmul", 1, 1,
                                 site.in_shape[-1], site.out_shape[-1]))
         # gap: no MACs, no record (legacy manifest had none either)
-    return ops
+        out.append((site, ops))
+    return out
+
+
+def manifest(program: Program) -> list[OpRecord]:
+    """Expand the IR into per-hardware-op records (one inference; the
+    batch dim is excluded, matching the legacy ``layer_manifest``)."""
+    return [op for _, ops in site_records(program) for op in ops]

@@ -35,8 +35,21 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-__all__ = ["autotune", "shape_key", "pad_to_multiple", "cache_path",
-           "clear_memory_cache", "set_fault_hook", "SWEEP_COUNT"]
+__all__ = ["autotune", "shape_key", "pad_to_multiple", "tile_work",
+           "cache_path", "clear_memory_cache", "set_fault_hook",
+           "export_entries", "import_entries", "SWEEP_COUNT",
+           "AUTOTUNE_SCHEMA"]
+
+# On-disk cache schema version.  The file is a flat {key: choice} dict
+# plus one reserved ``_SCHEMA_KEY`` row carrying {"version": N}.  A file
+# whose version is missing or different was written by another era of
+# the key/candidate encoding: silently deserializing it would hand
+# kernels stale block choices under reinterpreted keys, so mismatches
+# are REJECTED with a warning (affected shapes re-tune; the next save
+# rewrites the file at the current schema).  Bump this whenever
+# ``shape_key`` fields or choice-dict semantics change.
+AUTOTUNE_SCHEMA = 2
+_SCHEMA_KEY = "__schema__"
 
 # in-memory cache: {cache_key: choice-dict}; mirrors the on-disk file
 _MEM: dict[str, dict] = {}
@@ -96,6 +109,15 @@ def _read_cache_file(path: str) -> dict:
             f"autotune cache {path!r} holds {type(raw).__name__}, not a "
             f"dict; ignoring it", RuntimeWarning, stacklevel=3)
         return {}
+    schema = raw.pop(_SCHEMA_KEY, None)
+    version = schema.get("version") if isinstance(schema, dict) else None
+    if version != AUTOTUNE_SCHEMA:
+        warnings.warn(
+            f"autotune cache {path!r} has schema version {version!r} but "
+            f"this build expects {AUTOTUNE_SCHEMA}; rejecting the cache — "
+            f"affected shapes will re-tune and the next save rewrites the "
+            f"file at the current schema", RuntimeWarning, stacklevel=3)
+        return {}
     bad = [k for k, v in raw.items() if not isinstance(v, dict)]
     if bad:
         warnings.warn(
@@ -117,6 +139,7 @@ def _save_disk(path: str) -> None:
         # tuning different shapes don't drop each other's entries
         merged = _read_cache_file(path)
         merged.update(_MEM)
+        merged[_SCHEMA_KEY] = {"version": AUTOTUNE_SCHEMA}
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         # atomic publish: write a private temp file, fsync it, then
         # rename over the target — a process killed at ANY point leaves
@@ -212,6 +235,45 @@ def autotune(kind: str, key: Sequence, candidates: Sequence[dict],
     _MEM[ck] = best_c
     _save_disk(path)
     return dict(best_c)
+
+
+def export_entries() -> dict:
+    """Snapshot the tuner cache as {cache_key: choice-dict}.
+
+    The offline schedule search (``repro.search``) embeds this in its
+    ``ScheduleArtifact`` so a cold-start pod can seed the tuner without
+    running a single sweep.  Loads the disk cache first so the export
+    sees everything this machine has ever tuned, not just this process.
+    """
+    _load_disk(cache_path())
+    return {k: dict(v) for k, v in _MEM.items()}
+
+
+def import_entries(entries: dict, *, persist: bool = False) -> int:
+    """Seed the tuner cache from an exported snapshot; returns the count
+    adopted.  Imported choices win over whatever is already in memory —
+    an artifact's tuned blocks are the point of shipping it.  With
+    ``persist`` the merged cache is also written to disk."""
+    good = {k: dict(v) for k, v in entries.items()
+            if isinstance(k, str) and isinstance(v, dict)
+            and k != _SCHEMA_KEY}
+    path = cache_path()
+    _load_disk(path)
+    _MEM.update(good)
+    if persist and good:
+        _save_disk(path)
+    return len(good)
+
+
+def tile_work(n: int, block: int) -> float:
+    """Relative overcompute (>= 1.0) of covering an ``n``-extent axis
+    with ``block``-wide tiles: the padded ragged tail is dead work the
+    grid still executes.  The device-free block score of the offline
+    schedule search (``KernelImpl.block_work``)."""
+    import math
+    n, block = int(n), int(block)
+    assert n > 0 and block > 0, (n, block)
+    return math.ceil(n / block) * block / n
 
 
 def pad_to_multiple(x: jax.Array, axis: int, multiple: int):

@@ -200,6 +200,13 @@ class DsconvKernel(KernelBase):
                           interpret=interpret, dtype=self.dtype)
         return {"block_f": bf}
 
+    def candidates(self, site):
+        return BLOCK_F_CANDIDATES
+
+    def block_work(self, site, blocks):
+        from repro.kernels.autotune import tile_work
+        return tile_work(site.out_shape[-1], blocks["block_f"])
+
     def apply(self, params, x, site, decision=None, *, interpret=None,
               epilogue=None):
         blocks = decision.blocks if decision is not None else {}

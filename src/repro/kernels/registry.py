@@ -125,6 +125,19 @@ class KernelImpl(Protocol):
         heuristic) to freeze into the site's decision."""
         ...
 
+    def candidates(self, site) -> Tuple[Dict[str, int], ...]:
+        """The family's candidate block configs for this site — the
+        per-site dimension of the offline schedule search's space
+        (``repro.search``).  Empty = nothing to sweep."""
+        ...
+
+    def block_work(self, site, blocks: Dict[str, int]) -> float:
+        """Analytic relative overcompute of tiling ``site`` with
+        ``blocks`` (>= 1.0; 1.0 = the tiles divide the tiled axis
+        exactly).  Pure host arithmetic — the search's device-free
+        block score."""
+        ...
+
     def apply(self, params, x, site, decision=None, *,
               interpret: bool | None = None, epilogue=None):
         """Run the fused kernel on one site.  ``decision`` (a
@@ -194,6 +207,12 @@ class KernelBase:
 
     def tune(self, site, *, autotune=True, interpret=None):
         return {}
+
+    def candidates(self, site):
+        return ()
+
+    def block_work(self, site, blocks):
+        return 1.0
 
     def apply(self, params, x, site, decision=None, *, interpret=None,
               epilogue=None):

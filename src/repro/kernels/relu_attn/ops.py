@@ -200,6 +200,14 @@ class MsaKernel(KernelBase):
                           allow_sweep=autotune, interpret=interpret)
         return {"block_n": bn}
 
+    def candidates(self, site):
+        return BLOCK_N_CANDIDATES
+
+    def block_work(self, site, blocks):
+        from repro.kernels.autotune import tile_work
+        _, H, W, _ = site.in_shape
+        return tile_work(H * W, blocks["block_n"])
+
     def apply(self, params, x, site, decision=None, *, interpret=None,
               epilogue=None):
         blocks = decision.blocks if decision is not None else {}

@@ -1,0 +1,37 @@
+"""Offline schedule search: a CHOSEN-style compilation stack.
+
+The serving runtime normally makes its scheduling decisions online —
+the autotuner sweeps block sizes at first use, the planner routes each
+site by local policy, the bucket set is hand-configured.  This package
+moves all of that to an *offline* search against a recorded traffic
+trace, and ships the result as a versioned artifact:
+
+    trace.py      recorded traces (record/load, schema-versioned) and
+                  the deterministic workload model mirroring the
+                  serving scheduler's batch formation
+    evaluator.py  the cost surface: candidate schedules scored purely
+                  through the analytic cycle model — host-only
+    drivers.py    exhaustive per-site block sweep + seeded simulated
+                  annealing over (bucket set x per-site routing);
+                  ``search()`` is the entry point
+    artifact.py   ``ScheduleArtifact``: schema version, config hash,
+                  trace fingerprint, per-(bucket, resolution) frozen
+                  decisions, tuner-cache snapshot
+
+``ExecutorCache(artifact=...)`` / ``VisionServeConfig(artifact=...)``
+adopt an artifact at startup: buckets come from the search, every plan
+is pinned through ``core.fusion.SiteOverride``, and a cold-start pod
+performs ZERO autotune sweeps while reproducing the searched plan
+exactly.  ``benchmarks/search_bench.py`` is the CLI.
+"""
+from repro.search.artifact import (ARTIFACT_SCHEMA, ScheduleArtifact,
+                                   config_hash)
+from repro.search.drivers import anneal, search, sweep_blocks
+from repro.search.evaluator import evaluate, key_cycles, trace_resolutions
+from repro.search.trace import (TRACE_SCHEMA, load_trace, save_trace,
+                                trace_fingerprint, workload)
+
+__all__ = ["ARTIFACT_SCHEMA", "TRACE_SCHEMA", "ScheduleArtifact",
+           "config_hash", "anneal", "search", "sweep_blocks", "evaluate",
+           "key_cycles", "trace_resolutions", "load_trace", "save_trace",
+           "trace_fingerprint", "workload"]

@@ -1,0 +1,172 @@
+"""Versioned schedule artifacts: the searched plan, shipped as data.
+
+A ``ScheduleArtifact`` is the unit the offline search produces and the
+serving runtime consumes — the software analogue of CHOSEN's
+(arXiv 2407.12736) pre-compiled FPGA design points.  It freezes, for
+one (model config, precision, traffic trace):
+
+  * the serving bucket set the search settled on;
+  * per-(bucket, resolution) site decisions — routing, precision,
+    tuned block sizes — exactly as ``plan_program`` froze them on the
+    search host;
+  * a snapshot of the autotuner's persistent cache
+    (``kernels.autotune.export_entries``), so even tune paths the
+    decisions don't cover hit warm;
+  * the searched and default objectives (cycle-model latency weighted
+    by the trace's dispatch counts), for regression gating.
+
+Consumption contract (``serving.executors.ExecutorCache(artifact=)``):
+``validate_for`` first — the artifact names the config hash and
+precision it was searched for, and a mismatch raises a typed
+``ArtifactError`` instead of silently serving a stale schedule — then
+``overrides_for(batch, resolution)`` hands the planner
+``core.fusion.SiteOverride`` pins that reproduce the searched plan
+with ZERO autotune sweeps.  A (batch, resolution) the artifact does
+not cover returns ``None`` and the runtime plans normally, so an
+artifact is always a fast path, never a correctness gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Mapping, Optional, Tuple
+
+from repro.common.errors import ArtifactError
+
+__all__ = ["ARTIFACT_SCHEMA", "ScheduleArtifact", "config_hash"]
+
+ARTIFACT_SCHEMA = 1
+
+
+def _jsonable(v):
+    if isinstance(v, (int, float, str, bool)) or v is None:
+        return v
+    if isinstance(v, Mapping):
+        return {str(k): _jsonable(x) for k, x in sorted(v.items())}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return str(v)   # e.g. a jnp dtype: its repr is stable and compares
+
+
+def config_hash(cfg) -> str:
+    """Stable content hash (hex, 16 chars) of a model config dataclass.
+
+    Hashes the canonical-JSON field dump, so two configs that lower to
+    the same Program hash equal and ANY field change — widths, depths,
+    image size, head geometry — invalidates every artifact searched
+    against the old architecture.
+    """
+    fields = dataclasses.asdict(cfg) if dataclasses.is_dataclass(cfg) \
+        else dict(cfg)
+    payload = json.dumps(_jsonable(fields), sort_keys=True,
+                         separators=(",", ":"))
+    return hashlib.blake2b(payload.encode(), digest_size=8).hexdigest()
+
+
+def _entry_key(batch: int, resolution: int) -> str:
+    return f"{int(batch)}x{int(resolution)}"
+
+
+@dataclasses.dataclass
+class ScheduleArtifact:
+    config_hash: str
+    precision: str                    # the plan-level request it serves
+    trace_fingerprint: str
+    buckets: Tuple[int, ...]
+    resolutions: Tuple[int, ...]
+    # "BxR" -> [SiteDecision.to_dict(), ...] in site order
+    entries: Mapping[str, list] = dataclasses.field(default_factory=dict)
+    tuner_cache: Mapping[str, dict] = dataclasses.field(
+        default_factory=dict)
+    objective: float = 0.0            # searched trace-weighted cycles
+    default_objective: float = 0.0    # the hand-default schedule's
+    seed: int = 0
+    config_name: str = ""
+    schema: int = ARTIFACT_SCHEMA
+
+    # -- consumption -----------------------------------------------------
+    def validate_for(self, cfg, precision: str) -> "ScheduleArtifact":
+        """Gate adoption: raises ``ArtifactError`` unless this artifact
+        was searched for exactly this config and plan precision."""
+        want = config_hash(cfg)
+        if self.config_hash != want:
+            raise ArtifactError(
+                f"schedule artifact was searched for config "
+                f"{self.config_name or self.config_hash!r} (hash "
+                f"{self.config_hash}) but the engine is serving "
+                f"{getattr(cfg, 'name', cfg)!r} (hash {want}) — "
+                f"re-run the search for this config")
+        if self.precision != precision:
+            raise ArtifactError(
+                f"schedule artifact was searched at precision "
+                f"{self.precision!r}, engine requests {precision!r}")
+        return self
+
+    def decisions_for(self, batch: int, resolution: int
+                      ) -> Optional[list]:
+        return self.entries.get(_entry_key(batch, resolution))
+
+    def overrides_for(self, batch: int, resolution: int
+                      ) -> Optional[dict]:
+        """``plan_program(overrides=...)`` pins reproducing the searched
+        plan for one executor shape, or ``None`` when the artifact does
+        not cover it (e.g. a sharded executor's local batch) — the
+        caller then plans normally."""
+        from repro.core.fusion import SiteOverride
+        stored = self.decisions_for(batch, resolution)
+        if stored is None:
+            return None
+        return {d["name"]: SiteOverride.from_decision(d) for d in stored}
+
+    # -- persistence -----------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["buckets"] = list(self.buckets)
+        d["resolutions"] = list(self.resolutions)
+        return d
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def from_dict(cls, doc: Mapping) -> "ScheduleArtifact":
+        if not isinstance(doc, Mapping) \
+                or doc.get("schema") != ARTIFACT_SCHEMA:
+            got = doc.get("schema") if isinstance(doc, Mapping) else None
+            raise ArtifactError(
+                f"schedule artifact has schema {got!r}, expected "
+                f"{ARTIFACT_SCHEMA} — re-run the search with this build")
+        try:
+            return cls(
+                config_hash=str(doc["config_hash"]),
+                precision=str(doc["precision"]),
+                trace_fingerprint=str(doc["trace_fingerprint"]),
+                buckets=tuple(int(b) for b in doc["buckets"]),
+                resolutions=tuple(int(r) for r in doc["resolutions"]),
+                entries={str(k): list(v)
+                         for k, v in doc.get("entries", {}).items()},
+                tuner_cache={str(k): dict(v) for k, v in
+                             doc.get("tuner_cache", {}).items()},
+                objective=float(doc.get("objective", 0.0)),
+                default_objective=float(doc.get("default_objective", 0.0)),
+                seed=int(doc.get("seed", 0)),
+                config_name=str(doc.get("config_name", "")))
+        except (KeyError, TypeError, ValueError) as e:
+            raise ArtifactError(f"schedule artifact malformed: {e}") from e
+
+    @classmethod
+    def load(cls, path: str) -> "ScheduleArtifact":
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            raise ArtifactError(
+                f"schedule artifact {path!r} unreadable: {e}") from e
+        return cls.from_dict(doc)

@@ -1,0 +1,224 @@
+"""Search drivers: exhaustive block sweep + seeded annealing, then the
+artifact.
+
+Two layers of search over ``evaluator``'s cost surface:
+
+  * ``sweep_blocks`` — exhaustive per-site sweep of each kernel
+    family's candidate block configs (``KernelImpl.candidates``),
+    scored by analytic tile overcompute.  Sites are independent in the
+    cost model, so per-site greedy IS the global optimum, and the
+    deterministic tie-break (least overcompute, then the largest tile —
+    fewer grid steps) makes the sweep reproducible with no RNG at all.
+
+  * ``anneal`` — simulated annealing over the joint (serving bucket
+    set x per-site demotion set) space, seeded (``random.Random(seed)``,
+    same seed -> identical walk -> identical artifact).  The start
+    state is the hand-default schedule with swept blocks, and the best
+    state is tracked across the walk, so the searched objective can
+    never end up worse than where it started — which is itself <= the
+    default (swept blocks only remove dead tile work).
+
+``search()`` runs both, then *materializes* the winning schedule: for
+every (bucket, resolution) executor shape it builds the real
+``FusionPlan`` through ``plan_program(overrides=...)`` and freezes the
+resulting decisions into a ``ScheduleArtifact`` — so what ships is the
+planner's own output, not the search's intermediate state, and a
+serve-time replan from the artifact reproduces it bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Mapping, Optional, Sequence
+
+from repro.core.accelerator_model import HwConfig
+from repro.core.fusion import SiteOverride, plan_program
+from repro.core.program import lower
+from repro.kernels.autotune import export_entries
+from repro.kernels.registry import get_kernel
+
+from .artifact import ScheduleArtifact, config_hash
+from .evaluator import evaluate, trace_resolutions
+from .trace import trace_fingerprint
+
+__all__ = ["sweep_blocks", "anneal", "search"]
+
+
+def sweep_blocks(cfg, params, *, batch: int, resolution: int,
+                 precision: str = "auto") -> dict:
+    """Exhaustive per-site block sweep for one executor shape:
+    {site name: best blocks} over each fused site's candidate list,
+    scored by ``KernelImpl.block_work`` (analytic overcompute, no
+    device).  Deterministic: ties break to the largest tile."""
+    program = lower(cfg, batch=batch, image_size=resolution)
+    plan = plan_program(program, params, autotune=False,
+                        precision=precision)
+    best: dict[str, dict] = {}
+    for site in program.fusible():
+        d = plan.get(site.name)
+        if d is None or not d.fused:
+            continue
+        impl = get_kernel(site.kind, d.precision)
+        cands = impl.candidates(site)
+        if not cands:
+            continue
+        best[site.name] = dict(min(
+            cands,
+            key=lambda c: (impl.block_work(site, c),
+                           -sum(int(v) for v in c.values()))))
+    return best
+
+
+def anneal(objective, state, *, universe_buckets: Sequence[int],
+           universe_sites: Sequence[str], seed: int = 0,
+           iters: int = 64, verbose: bool = False):
+    """Seeded simulated annealing over (bucket set, demoted site set).
+
+    ``objective(buckets: frozenset, demoted: frozenset) -> float``;
+    ``state`` is the (buckets, demoted) start.  Moves toggle one bucket
+    in/out of the universe (never emptying the set) or one site's
+    demotion.  Returns (best_state, best_objective, evaluations).
+    """
+    rng = random.Random(seed)
+    universe_buckets = tuple(sorted(set(int(b) for b in universe_buckets)))
+    universe_sites = tuple(universe_sites)
+    cur = (frozenset(state[0]), frozenset(state[1]))
+    cur_obj = objective(*cur)
+    best, best_obj = cur, cur_obj
+    evals = 1
+    # temperature spans a fixed fraction of the start objective and
+    # cools geometrically — scale-free, so the same schedule search
+    # behaves identically across model sizes
+    t0 = 0.05 * max(cur_obj, 1.0)
+    for i in range(iters):
+        frac = i / max(1, iters - 1)
+        temp = t0 * (0.01 ** frac)
+        bset, demoted = set(cur[0]), set(cur[1])
+        if (rng.random() < 0.5 or not universe_sites) \
+                and len(universe_buckets) > 1:
+            b = rng.choice(universe_buckets)
+            if b in bset and len(bset) > 1:
+                bset.remove(b)
+            else:
+                bset.add(b)
+        elif universe_sites:
+            s = rng.choice(universe_sites)
+            demoted.symmetric_difference_update({s})
+        cand = (frozenset(bset), frozenset(demoted))
+        if cand == cur:
+            continue
+        cand_obj = objective(*cand)
+        evals += 1
+        delta = cand_obj - cur_obj
+        if delta <= 0 or rng.random() < math.exp(-delta / max(temp, 1e-9)):
+            cur, cur_obj = cand, cand_obj
+            if cur_obj < best_obj:
+                best, best_obj = cur, cur_obj
+                if verbose:
+                    print(f"  anneal[{i:>3}] new best {best_obj:,.0f} "
+                          f"buckets={sorted(best[0])} "
+                          f"demoted={sorted(best[1])}")
+    return best, best_obj, evals
+
+
+def search(cfg, params, trace, *, buckets: Sequence[int] = (1, 2, 4, 8),
+           precision: str = "auto", deadline_ms: float | None = None,
+           seed: int = 0, iters: int = 64,
+           bucket_universe: Optional[Sequence[int]] = None,
+           compile_penalty: float | None = None,
+           hw: HwConfig = HwConfig(),
+           verbose: bool = False) -> ScheduleArtifact:
+    """The offline schedule search: jointly tune per-site blocks,
+    per-site routing and the serving bucket set against a recorded
+    trace; returns the versioned ``ScheduleArtifact``.
+
+    ``buckets`` is the hand-default bucket set (the baseline the
+    objective gate compares against); ``bucket_universe`` bounds what
+    the annealer may toggle (default: the baseline set).
+    ``compile_penalty`` is the per-compiled-executor cycle charge
+    (default: 1% of the default schedule's mean per-dispatch cost) —
+    see ``evaluator`` for the objective.  Deterministic under a fixed
+    ``seed``: the only RNG is the annealer's.
+    """
+    trace = [(float(at), int(res)) for at, res in trace]
+    assert trace, "cannot search against an empty trace"
+    resolutions = trace_resolutions(trace)
+    base = frozenset(int(b) for b in buckets)
+    universe = tuple(sorted(base | set(
+        int(b) for b in (bucket_universe or ()))))
+
+    # layer 1: exhaustive per-site block sweep, per executor shape
+    swept: dict[tuple, dict] = {}
+
+    def blocks_for(site, batch, resolution):
+        key = (batch, resolution)
+        if key not in swept:
+            swept[key] = sweep_blocks(cfg, params, batch=batch,
+                                      resolution=resolution,
+                                      precision=precision)
+        return swept[key].get(site.name)
+
+    # the hand-default baseline: heuristic blocks, every site routed by
+    # the planner's own policy, the configured bucket set
+    default_cache: dict = {}
+    raw_default = evaluate(cfg, params, trace, buckets=sorted(base),
+                           precision=precision, deadline_ms=deadline_ms,
+                           hw=hw, cost_cache=default_cache)
+    if compile_penalty is None:
+        n_dispatch = max(1, sum(raw_default["workload"].values()))
+        compile_penalty = 0.01 * raw_default["objective"] / n_dispatch
+    default_objective = raw_default["objective"] \
+        + compile_penalty * raw_default["n_keys"]
+
+    # layer 2: annealing over (bucket set x demotion set), swept blocks
+    searched_cache: dict = {}
+
+    def objective(bset, demoted):
+        return evaluate(cfg, params, trace, buckets=sorted(bset),
+                        precision=precision, deadline_ms=deadline_ms,
+                        demoted=demoted, blocks_for=blocks_for,
+                        compile_penalty=compile_penalty, hw=hw,
+                        cost_cache=searched_cache)["objective"]
+
+    site_names = tuple(s.name for s in lower(
+        cfg, batch=1, image_size=resolutions[0]).fusible())
+    (best_buckets, best_demoted), best_obj, evals = anneal(
+        objective, (base, frozenset()), universe_buckets=universe,
+        universe_sites=site_names, seed=seed, iters=iters,
+        verbose=verbose)
+    assert best_obj <= default_objective + 1e-6, \
+        (best_obj, default_objective)   # start state guarantees this
+
+    # layer 3: materialize the winning schedule through the real planner
+    entries: dict[str, list] = {}
+    for b in sorted(best_buckets):
+        for res in resolutions:
+            program = lower(cfg, batch=b, image_size=res)
+            overrides = {}
+            for site in program.fusible():
+                if site.name in best_demoted:
+                    overrides[site.name] = SiteOverride(fused=False)
+                else:
+                    blk = blocks_for(site, b, res)
+                    if blk:
+                        overrides[site.name] = SiteOverride(
+                            blocks=dict(blk))
+            plan = plan_program(program, params, autotune=False,
+                                precision=precision,
+                                overrides=overrides or None)
+            entries[f"{b}x{res}"] = [d.to_dict()
+                                     for d in plan.decisions.values()]
+    if verbose:
+        print(f"search: {evals} evaluations, objective "
+              f"{default_objective:,.0f} -> {best_obj:,.0f} "
+              f"({best_obj / default_objective:.3f}x), buckets "
+              f"{sorted(base)} -> {sorted(best_buckets)}, "
+              f"{len(best_demoted)} site(s) demoted")
+    return ScheduleArtifact(
+        config_hash=config_hash(cfg), precision=precision,
+        trace_fingerprint=trace_fingerprint(trace),
+        buckets=tuple(sorted(best_buckets)), resolutions=resolutions,
+        entries=entries, tuner_cache=export_entries(),
+        objective=float(best_obj),
+        default_objective=float(default_objective), seed=int(seed),
+        config_name=getattr(cfg, "name", ""))

@@ -1,0 +1,155 @@
+"""The search's cost surface: candidate schedules scored host-only.
+
+Everything here runs through the analytic cycle model
+(``core.accelerator_model.site_breakdown``) on plans built with
+``autotune=False`` — no kernel is timed, no device is touched, which is
+what lets the offline search sweep thousands of candidate schedules in
+seconds (the issue's CHOSEN-style compile-time search).
+
+Cost of one executor key (batch bucket b, resolution r) under a
+candidate schedule:
+
+    cycles(b, r) = sum over sites of the site's modeled cycles, with
+                   the candidate's routing/precision applied
+                   (``plan_program(overrides=...)``) and each fused
+                   site's block choice charged its analytic tile
+                   overcompute (``KernelImpl.block_work``): dead padded
+                   work scales compute cycles by work >= 1.
+
+Objective of a whole schedule against a recorded trace:
+
+    J = sum over dispatched keys of  dispatches[b, r] * cycles(b, r)
+        + compile_penalty * |buckets| * |resolutions|
+
+The first term is cycle-model latency weighted by trace occupancy —
+the schedule is optimized for the traffic it will actually serve.  The
+second charges the cold-start working set ``ExecutorCache.warmup``
+compiles (the full bucket x resolution product), so the bucket-set
+search trades compiled-executor count against padding waste instead of
+greedily keeping every bucket.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Optional, Sequence
+
+from repro.core.accelerator_model import HwConfig, site_breakdown
+from repro.core.fusion import SiteOverride, plan_program
+from repro.core.program import lower
+
+from .trace import workload
+
+__all__ = ["key_cycles", "evaluate", "trace_resolutions"]
+
+
+def trace_resolutions(trace) -> tuple:
+    return tuple(sorted({int(res) for _, res in trace}))
+
+
+def _default_precision(precision: str) -> str:
+    # structural sites outside the plan: quantized convs move int8
+    # weights only when the tree itself is quantized
+    return "int8" if precision == "int8" else "fp"
+
+
+# Fixed per-launch cost (cycles) folded into every scheduled op group:
+# kernel dispatch latency and the off-chip round trip the analytic DRAM
+# model doesn't see.  This is what makes un-fusing cost something even
+# on a weight-bound site — the TMP-fusion motivation of the paper — so
+# the annealer cannot demote its way to a degenerate all-reference
+# schedule whenever activations are small.
+LAUNCH_OVERHEAD_CYCLES = 1000.0
+
+
+def key_cycles(cfg, params, batch: int, resolution: int, *,
+               precision: str = "auto",
+               demoted: frozenset = frozenset(),
+               blocks_for: Optional[Callable] = None,
+               launch_overhead: float = LAUNCH_OVERHEAD_CYCLES,
+               hw: HwConfig = HwConfig()) -> float:
+    """Modeled cycles of one (bucket, resolution) executor under a
+    candidate schedule.
+
+    ``demoted`` pins those site names to the reference path
+    (``SiteOverride(fused=False)``); ``blocks_for(site) -> blocks|None``
+    supplies searched block choices for the rest (``None``/missing ->
+    the planner's heuristic default).  Building the plan through
+    ``plan_program`` itself — not a shadow model — means the precision
+    policies, VMEM guards and epilogue assignment that shape the real
+    serve-time plan shape the search cost identically.
+    """
+    program = lower(cfg, batch=batch, image_size=resolution)
+    overrides: dict[str, SiteOverride] = {}
+    for site in program.fusible():
+        if site.name in demoted:
+            overrides[site.name] = SiteOverride(fused=False)
+        elif blocks_for is not None:
+            blk = blocks_for(site)
+            if blk:
+                overrides[site.name] = SiteOverride(blocks=dict(blk))
+    plan = plan_program(program, params, autotune=False,
+                        precision=precision,
+                        overrides=overrides or None)
+    program = program.with_epilogues(plan)
+    sites = {s.name: s for s in program.sites}
+    total = 0.0
+    for row in site_breakdown(
+            program, hw, plan=plan,
+            default_precision=_default_precision(precision)):
+        cycles = row["cycles"]
+        if row["fused"] and row["blocks"]:
+            from repro.kernels.registry import get_kernel
+            try:
+                impl = get_kernel(row["kind"], row["precision"])
+            except KeyError:
+                impl = None
+            if impl is not None:
+                work = impl.block_work(sites[row["site"]], row["blocks"])
+                # padded-tile dead work raises the site's COMPUTE
+                # cycles; it only costs latency where it exceeds the
+                # site's existing (memory or compute) bound, so the
+                # charge is a floor-raise, not an addition
+                cycles = max(cycles, row["compute_cycles"] * work)
+        total += cycles + launch_overhead * row["launches"]
+    return total
+
+
+def evaluate(cfg, params, trace, *, buckets: Sequence[int],
+             precision: str = "auto",
+             deadline_ms: float | None = None,
+             demoted: frozenset = frozenset(),
+             blocks_for: Optional[Callable] = None,
+             compile_penalty: float = 0.0,
+             hw: HwConfig = HwConfig(),
+             cost_cache: Optional[dict] = None) -> dict:
+    """Score one candidate (bucket set, demotion set, block assignment)
+    against a trace; returns ``{"objective", "workload", "per_key",
+    "n_keys"}``.
+
+    ``cost_cache`` (a plain dict the caller owns) memoizes per-key
+    cycles across evaluations — the annealer revisits the same
+    (b, r, demoted) triples constantly and ``key_cycles`` is the
+    expensive part.  ``blocks_for`` here takes ``(site, batch,
+    resolution)`` since block choices are shape-specific.
+    """
+    buckets = tuple(sorted(set(int(b) for b in buckets)))
+    resolutions = trace_resolutions(trace)
+    wl = workload(trace, buckets, deadline_ms=deadline_ms)
+    per_key: dict[tuple, float] = {}
+    total = 0.0
+    for (b, res), n in sorted(wl.items()):
+        ck = (b, res, demoted)
+        if cost_cache is not None and ck in cost_cache:
+            cycles = cost_cache[ck]
+        else:
+            bf = (None if blocks_for is None
+                  else (lambda site, _b=b, _r=res:
+                        blocks_for(site, _b, _r)))
+            cycles = key_cycles(cfg, params, b, res, precision=precision,
+                                demoted=demoted, blocks_for=bf, hw=hw)
+            if cost_cache is not None:
+                cost_cache[ck] = cycles
+        per_key[(b, res)] = cycles
+        total += n * cycles
+    n_keys = len(buckets) * len(resolutions)
+    return {"objective": total + compile_penalty * n_keys,
+            "workload": wl, "per_key": per_key, "n_keys": n_keys}

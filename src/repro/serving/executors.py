@@ -193,10 +193,22 @@ class ExecutorCache:
                  telemetry: Telemetry | None = None,
                  epilogues: bool = True,
                  faults=None, neg_ttl_s: float = 1.0, clock=None,
-                 devices=None):
+                 devices=None, artifact=None):
         assert buckets and all(b >= 1 for b in buckets), buckets
         self.params = params
         self.cfg = cfg
+        if artifact is not None:
+            # adopt the searched schedule: validate first (typed
+            # ArtifactError on a config-hash/precision mismatch — never
+            # silently serve a stale schedule), then take the searched
+            # bucket set over the constructor's and seed the tuner
+            # cache, so any plan the artifact's overrides don't cover
+            # still tunes warm
+            artifact.validate_for(cfg, precision)
+            buckets = artifact.buckets
+            from repro.kernels.autotune import import_entries
+            import_entries(artifact.tuner_cache)
+        self.artifact = artifact
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.precision = precision
         self.use_plan = use_plan
@@ -330,13 +342,25 @@ class ExecutorCache:
             precision = "fp" if (state is not None and state.pinned_fp) \
                 else self.precision
             donor = self._donor_plans.get(key.resolution)
+            # artifact-pinned schedule: overrides reproduce the searched
+            # plan with zero tuner consultation; an uncovered shape
+            # (e.g. a sharded executor's local batch) gets None and
+            # plans normally.  A degraded key plans WITHOUT the
+            # artifact — its demote= ladder must win over the pins.
+            overrides = None
+            if self.artifact is not None \
+                    and (state is None or not state.degraded):
+                overrides = self.artifact.overrides_for(
+                    shard.local_batch if shard is not None else key.batch,
+                    key.resolution)
             plan = plan_program(program, self.params,
                                 autotune=self.autotune,
                                 interpret=self.interpret,
                                 precision=precision, reuse=donor,
                                 epilogues=key.epilogues,
                                 demote=(state.demoted if state is not None
-                                        else ()))
+                                        else ()),
+                                overrides=overrides)
             self.telemetry.count("plans_built")
             reused = sum(d.reused for d in plan.decisions.values())
             if reused:

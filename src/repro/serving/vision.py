@@ -70,6 +70,11 @@ class VisionServeConfig:
     #                                  in front of admission (None = off)
     watchdog_ms: float | None = None  # in-flight hang bound for the
     #                                   scheduler's watchdog (None = off)
+    artifact: object | None = None  # offline-searched ScheduleArtifact
+    #                                 (or a path to one): buckets and
+    #                                 per-site decisions come from the
+    #                                 search, cold start runs zero
+    #                                 autotune sweeps (repro.search)
 
 
 class VisionEngine:
@@ -81,22 +86,35 @@ class VisionEngine:
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.faults = faults  # serving.faults.FaultPlan (chaos testing)
-        mb = serve_cfg.microbatch
-        buckets = serve_cfg.buckets
-        if buckets is None:
-            buckets = (mb,) if serve_cfg.policy == "fixed" \
-                else _default_buckets(mb)
-        # the microbatch is always a bucket: it is the primary compiled
-        # shape, and chunking must never hand an n-row batch to an
-        # executor compiled for fewer rows
-        buckets = tuple(sorted(set(buckets) | {mb}))
+        artifact = serve_cfg.artifact
+        if isinstance(artifact, str):
+            from repro.search.artifact import ScheduleArtifact
+            artifact = ScheduleArtifact.load(artifact)
+        self.artifact = artifact
+        if artifact is not None:
+            # the searched bucket set replaces the hand-configured one;
+            # the microbatch (the primary compiled shape and chunking
+            # unit) becomes its largest bucket
+            mb = max(artifact.buckets)
+            buckets = artifact.buckets
+        else:
+            mb = serve_cfg.microbatch
+            buckets = serve_cfg.buckets
+            if buckets is None:
+                buckets = (mb,) if serve_cfg.policy == "fixed" \
+                    else _default_buckets(mb)
+            # the microbatch is always a bucket: it is the primary
+            # compiled shape, and chunking must never hand an n-row
+            # batch to an executor compiled for fewer rows
+            buckets = tuple(sorted(set(buckets) | {mb}))
+        self.microbatch = mb
         self.telemetry = Telemetry()
         self.cache = ExecutorCache(
             params, cfg, buckets=buckets, precision=serve_cfg.precision,
             use_plan=serve_cfg.use_plan, autotune=serve_cfg.autotune,
             capacity=serve_cfg.capacity, telemetry=self.telemetry,
             epilogues=serve_cfg.epilogues, faults=faults,
-            devices=serve_cfg.devices)
+            devices=serve_cfg.devices, artifact=artifact)
         # primary executor built eagerly: plan construction (autotune
         # sweeps included) happens here, outside the request loop, and
         # .program / .plan keep their pre-runtime meaning
@@ -126,7 +144,7 @@ class VisionEngine:
         images = jnp.asarray(images)
         n = int(images.shape[0])
         res = int(images.shape[1])
-        mb = self.serve_cfg.microbatch
+        mb = self.microbatch
         if self.serve_cfg.policy == "fixed":
             sizes = [mb] * -(-n // mb)           # pad every chunk to mb
         else:
@@ -160,7 +178,7 @@ class VisionEngine:
         through to ``MicroBatchScheduler``; the engine's fault plan is
         installed unless overridden."""
         if policy is None:
-            policy = (FixedMicrobatchPolicy(self.serve_cfg.microbatch)
+            policy = (FixedMicrobatchPolicy(self.microbatch)
                       if self.serve_cfg.policy == "fixed"
                       else BucketedPolicy())
         kw.setdefault("faults", self.faults)

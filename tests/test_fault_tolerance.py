@@ -125,12 +125,16 @@ def test_autotune_corrupt_cache_warns_and_retunes(tmp_autotune_cache):
     autotune_mod.autotune("fam", ("k1",), [{"block": 8}],
                           bench=lambda c: jnp.zeros(()))
     on_disk = json.loads(tmp_autotune_cache.read_text())
-    assert on_disk == {"fam|k1": {"block": 8}}
+    # rewritten at the current schema (the version row is metadata)
+    assert on_disk == {"fam|k1": {"block": 8}, autotune_mod._SCHEMA_KEY:
+                       {"version": autotune_mod.AUTOTUNE_SCHEMA}}
 
 
 def test_autotune_drops_malformed_entries_individually(tmp_autotune_cache):
     tmp_autotune_cache.write_text(json.dumps(
-        {"fam|good": {"block": 16}, "fam|bad": [1, 2, 3]}))
+        {autotune_mod._SCHEMA_KEY:
+         {"version": autotune_mod.AUTOTUNE_SCHEMA},
+         "fam|good": {"block": 16}, "fam|bad": [1, 2, 3]}))
     with pytest.warns(RuntimeWarning, match="malformed"):
         choice = autotune_mod.autotune("fam", ("good",),
                                        [{"block": 999}])

@@ -1,0 +1,381 @@
+"""Offline schedule search (repro.search): determinism, versioned
+artifacts, and the zero-sweep consumption contract.
+
+What must hold:
+
+  * ``workload`` — the host-side mirror of the serving scheduler's batch
+    formation — dispatches exactly the (bucket, resolution) key set the
+    real serving replay does (``serving_bench.EXPECTED_SMOKE_KEYS``);
+  * ``search`` is bit-for-bit deterministic under a fixed seed, and the
+    searched objective never exceeds the hand-default one;
+  * ``ScheduleArtifact`` round-trips through JSON, and a schema-version,
+    config-hash or precision mismatch raises a typed ``ArtifactError``
+    instead of silently serving a stale schedule;
+  * an artifact-warm ``ExecutorCache``/``VisionEngine`` performs ZERO
+    autotune sweeps and reproduces the searched plan decision for
+    decision;
+  * ``plan_program(overrides=...)`` honors injected routing/blocks
+    verbatim without consulting the tuner;
+  * the autotune disk cache is schema-versioned: unversioned or
+    wrong-version files are rejected with a warning, not adopted.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import pytest
+
+# the trace fixture's generator lives in benchmarks/ (repo root, not src)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.common.errors import ArtifactError
+from repro.core.accelerator_model import HwConfig, analyze_program, \
+    site_breakdown
+from repro.core.efficientvit import B1_SMOKE, init_efficientvit
+from repro.core.fusion import SiteOverride, plan_program
+from repro.core.program import lower
+from repro.kernels import autotune as at
+from repro.search import (ARTIFACT_SCHEMA, TRACE_SCHEMA, ScheduleArtifact,
+                          config_hash, evaluate, key_cycles, load_trace,
+                          save_trace, search, sweep_blocks,
+                          trace_fingerprint, workload)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "trace_smoke.json")
+SMOKE_SPEC = dict(buckets=(1, 2, 4), deadline_ms=40.0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_efficientvit(jax.random.PRNGKey(0), B1_SMOKE)
+
+
+@pytest.fixture(scope="module")
+def searched(params, tmp_path_factory):
+    """One real search run against the committed fixture trace, under an
+    isolated tuner cache (module-scoped: the search is the expensive
+    part, the consumption tests share its artifact)."""
+    td = tmp_path_factory.mktemp("search_at")
+    old = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = str(td / "at.json")
+    at.clear_memory_cache()
+    try:
+        trace = load_trace(FIXTURE)
+        art = search(B1_SMOKE, params, trace,
+                     buckets=SMOKE_SPEC["buckets"], precision="auto",
+                     deadline_ms=SMOKE_SPEC["deadline_ms"], seed=0,
+                     iters=16)
+        yield trace, art
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+        else:
+            os.environ["REPRO_AUTOTUNE_CACHE"] = old
+        at.clear_memory_cache()
+
+
+# -- traces ---------------------------------------------------------------
+
+def test_trace_roundtrip(tmp_path):
+    trace = [(0.0, 64), (0.001, 32), (0.5, 64)]
+    path = str(tmp_path / "t.json")
+    fp = save_trace(path, trace, spec={"buckets": (1, 2), "note": "x"})
+    assert fp == trace_fingerprint(trace)
+    assert load_trace(path) == [(0.0, 64), (0.001, 32), (0.5, 64)]
+    # fingerprint is content-addressed: same requests, same hash
+    assert trace_fingerprint(load_trace(path)) == fp
+
+
+def test_trace_schema_rejected(tmp_path):
+    path = str(tmp_path / "t.json")
+    save_trace(path, [(0.0, 64)])
+    doc = json.load(open(path))
+    doc["schema"] = TRACE_SCHEMA + 1
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ArtifactError, match="schema"):
+        load_trace(path)
+    json.dump({"schema": TRACE_SCHEMA, "requests": [["bad"]]},
+              open(path, "w"))
+    with pytest.raises(ArtifactError, match="malformed"):
+        load_trace(path)
+    with pytest.raises(ArtifactError, match="unreadable"):
+        load_trace(str(tmp_path / "missing.json"))
+
+
+def test_fixture_matches_generator():
+    """The committed fixture IS serving_bench's smoke trace — if either
+    drifts, re-record with ``serving_bench --smoke --record-trace``."""
+    from benchmarks.serving_bench import SMOKE, make_trace
+    assert trace_fingerprint(load_trace(FIXTURE)) \
+        == trace_fingerprint(make_trace(SMOKE, seed=0))
+
+
+def test_workload_matches_serving_keys():
+    """The host-side workload model dispatches exactly the executor keys
+    the real serving replay is pinned to (the drift gate both share)."""
+    from benchmarks.serving_bench import EXPECTED_SMOKE_KEYS
+    wl = workload(load_trace(FIXTURE), SMOKE_SPEC["buckets"],
+                  deadline_ms=SMOKE_SPEC["deadline_ms"])
+    assert set(wl) == EXPECTED_SMOKE_KEYS
+    assert all(n > 0 for n in wl.values())
+    # every request is dispatched somewhere (capacity >= 12 arrivals)
+    assert sum(b * n for (b, _), n in wl.items()) >= 12
+
+
+# -- cost surface ---------------------------------------------------------
+
+def test_sweep_blocks_deterministic_and_in_candidates(params):
+    kw = dict(batch=1, resolution=64, precision="auto")
+    best = sweep_blocks(B1_SMOKE, params, **kw)
+    assert best, "smoke config has fused sites with block candidates"
+    assert best == sweep_blocks(B1_SMOKE, params, **kw)
+    from repro.kernels.registry import get_kernel
+    program = lower(B1_SMOKE, batch=1, image_size=64)
+    plan = plan_program(program, params, autotune=False)
+    for site in program.fusible():
+        if site.name not in best:
+            continue
+        impl = get_kernel(site.kind, plan.get(site.name).precision)
+        assert best[site.name] in [dict(c) for c in impl.candidates(site)]
+
+
+def test_key_cycles_demotion_costs_launches(params):
+    """In-model, demoting every site must never be free: the per-launch
+    overhead charges the extra dispatches the reference path makes."""
+    base = key_cycles(B1_SMOKE, params, 4, 64, precision="auto")
+    names = frozenset(
+        s.name for s in lower(B1_SMOKE, batch=4, image_size=64).fusible())
+    demoted = key_cycles(B1_SMOKE, params, 4, 64, precision="auto",
+                         demoted=names)
+    assert base > 0 and demoted > base
+
+
+# -- the search -----------------------------------------------------------
+
+def test_search_deterministic(params, tmp_autotune_cache):
+    trace = load_trace(FIXTURE)
+    dicts = []
+    for _ in range(2):
+        at.clear_memory_cache()
+        dicts.append(search(
+            B1_SMOKE, params, trace, buckets=SMOKE_SPEC["buckets"],
+            precision="auto", deadline_ms=SMOKE_SPEC["deadline_ms"],
+            seed=0, iters=12).to_dict())
+    assert dicts[0] == dicts[1]
+
+
+def test_search_beats_default_and_stamps_provenance(searched):
+    trace, art = searched
+    assert art.objective <= art.default_objective
+    assert art.schema == ARTIFACT_SCHEMA
+    assert art.config_hash == config_hash(B1_SMOKE)
+    assert art.trace_fingerprint == trace_fingerprint(trace)
+    assert art.config_name == B1_SMOKE.name
+    # every (bucket, resolution) shape is materialized
+    assert set(art.entries) == {f"{b}x{r}" for b in art.buckets
+                                for r in art.resolutions}
+    for decisions in art.entries.values():
+        assert decisions and all("name" in d and "fused" in d
+                                 for d in decisions)
+
+
+# -- artifacts ------------------------------------------------------------
+
+def test_artifact_roundtrip(searched, tmp_path):
+    _, art = searched
+    path = str(tmp_path / "sched.json")
+    art.save(path)
+    loaded = ScheduleArtifact.load(path)
+    assert loaded.to_dict() == art.to_dict()
+    assert loaded.validate_for(B1_SMOKE, "auto") is loaded
+
+
+def test_artifact_schema_mismatch_rejected(searched, tmp_path):
+    _, art = searched
+    doc = art.to_dict()
+    doc["schema"] = ARTIFACT_SCHEMA + 1
+    with pytest.raises(ArtifactError, match="schema"):
+        ScheduleArtifact.from_dict(doc)
+    path = str(tmp_path / "bad.json")
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ArtifactError, match="schema"):
+        ScheduleArtifact.load(path)
+    with pytest.raises(ArtifactError, match="unreadable"):
+        ScheduleArtifact.load(str(tmp_path / "missing.json"))
+
+
+def test_artifact_config_and_precision_mismatch_rejected(searched):
+    _, art = searched
+    other = dataclasses.replace(B1_SMOKE, image_size=96)
+    assert config_hash(other) != config_hash(B1_SMOKE)
+    with pytest.raises(ArtifactError, match="config"):
+        art.validate_for(other, "auto")
+    with pytest.raises(ArtifactError, match="precision"):
+        art.validate_for(B1_SMOKE, "int8")
+
+
+def test_artifact_uncovered_shape_returns_none(searched):
+    _, art = searched
+    assert art.overrides_for(3, 64) is None          # never a bucket
+    assert art.overrides_for(max(art.buckets), 640) is None
+    b, r = art.buckets[0], art.resolutions[0]
+    ov = art.overrides_for(b, r)
+    assert ov and all(isinstance(v, SiteOverride) for v in ov.values())
+
+
+# -- consumption: zero-sweep cold start -----------------------------------
+
+def test_artifact_warm_cache_zero_sweeps_and_reproduces(
+        searched, tmp_autotune_cache, params):
+    from repro.serving.executors import ExecutorCache
+    _, art = searched
+    sweeps0 = at.SWEEP_COUNT
+    cache = ExecutorCache(params, B1_SMOKE, buckets=(1, 2, 4),
+                          precision="auto", autotune=True, artifact=art)
+    # the searched bucket set replaces the constructor's
+    assert cache.buckets == art.buckets
+    for b in art.buckets:
+        for res in art.resolutions:
+            ex = cache.get(b, res)
+            got = [d.to_dict() for d in ex.plan.decisions.values()]
+            assert got == art.decisions_for(b, res), (b, res)
+    assert at.SWEEP_COUNT == sweeps0, \
+        "artifact-warm planning must not run autotune sweeps"
+
+
+def test_executor_cache_rejects_stale_artifact(searched, params):
+    from repro.serving.executors import ExecutorCache
+    _, art = searched
+    with pytest.raises(ArtifactError, match="precision"):
+        ExecutorCache(params, B1_SMOKE, precision="int8", artifact=art)
+
+
+def test_vision_engine_adopts_artifact(searched, tmp_autotune_cache,
+                                       params, tmp_path):
+    from repro.serving.vision import VisionEngine, VisionServeConfig
+    _, art = searched
+    path = str(tmp_path / "sched.json")
+    art.save(path)
+    sweeps0 = at.SWEEP_COUNT
+    engine = VisionEngine(params, B1_SMOKE, VisionServeConfig(
+        microbatch=8, precision="auto", artifact=path))
+    assert at.SWEEP_COUNT == sweeps0
+    assert engine.microbatch == max(art.buckets)
+    assert engine.cache.buckets == art.buckets
+    assert engine.artifact is not None
+    assert engine.plan is not None     # primary executor planned eagerly
+
+
+# -- the injection lever: plan_program(overrides=...) ---------------------
+
+def test_override_demotes_site_with_search_reason(params):
+    program = lower(B1_SMOKE, batch=1, image_size=64)
+    name = program.fusible()[0].name
+    plan = plan_program(program, params, autotune=False,
+                        overrides={name: SiteOverride(fused=False)})
+    d = plan.get(name)
+    assert d is not None and not d.fused and d.reason == "search"
+
+
+def test_override_blocks_pinned_without_tuner(params, tmp_autotune_cache):
+    """Frozen blocks are honored verbatim and the tuner is never
+    consulted even with ``autotune=True`` — the zero-sweep guarantee at
+    the planner level."""
+    program = lower(B1_SMOKE, batch=1, image_size=64)
+    base = plan_program(program, params, autotune=False)
+    overrides = {n: SiteOverride.from_decision(d)
+                 for n, d in base.decisions.items()}
+    sweeps0 = at.SWEEP_COUNT
+    pinned = plan_program(program, params, autotune=True,
+                          overrides=overrides)
+    assert at.SWEEP_COUNT == sweeps0
+    for n, d in base.decisions.items():
+        p = pinned.get(n)
+        assert (p.fused, p.precision, dict(p.blocks)) \
+            == (d.fused, d.precision, dict(d.blocks)), n
+
+
+# -- autotune cache schema versioning -------------------------------------
+
+def test_autotune_cache_rejects_unversioned_file(tmp_autotune_cache):
+    path = at.cache_path()
+    json.dump({"mbconv|b=1": {"block_f": 64}}, open(path, "w"))
+    at.clear_memory_cache()
+    with pytest.warns(RuntimeWarning, match="schema version None"):
+        assert at.export_entries() == {}
+
+
+def test_autotune_cache_rejects_wrong_version(tmp_autotune_cache):
+    path = at.cache_path()
+    json.dump({at._SCHEMA_KEY: {"version": at.AUTOTUNE_SCHEMA + 1},
+               "mbconv|b=1": {"block_f": 64}}, open(path, "w"))
+    at.clear_memory_cache()
+    with pytest.warns(RuntimeWarning, match="schema version"):
+        assert at.export_entries() == {}
+
+
+def test_autotune_cache_accepts_current_version(tmp_autotune_cache):
+    path = at.cache_path()
+    json.dump({at._SCHEMA_KEY: {"version": at.AUTOTUNE_SCHEMA},
+               "mbconv|b=1": {"block_f": 64}}, open(path, "w"))
+    at.clear_memory_cache()
+    assert at.export_entries() == {"mbconv|b=1": {"block_f": 64}}
+
+
+def test_autotune_import_export_roundtrip(tmp_autotune_cache):
+    # the schema row is metadata, never an entry: import filters it
+    n = at.import_entries({"k|b=1": {"block_n": 128},
+                           at._SCHEMA_KEY: {"version": 99},
+                           "bad": "not-a-dict"}, persist=True)
+    assert n == 1
+    at.clear_memory_cache()       # force the disk round-trip
+    assert at.export_entries() == {"k|b=1": {"block_n": 128}}
+    # the persisted file is stamped at the CURRENT schema
+    assert json.load(open(at.cache_path()))[at._SCHEMA_KEY] \
+        == {"version": at.AUTOTUNE_SCHEMA}
+    # and a seeded entry is an autotune() hit: no sweep
+    sweeps0 = at.SWEEP_COUNT
+    choice = at.autotune("k", ("b=1",), [{"block_n": 64}],
+                         bench=lambda c: None)
+    assert choice == {"block_n": 128} and at.SWEEP_COUNT == sweeps0
+
+
+# -- the per-site breakdown (the search's evaluator surface) --------------
+
+def test_site_breakdown_matches_analyze_program(params):
+    program = lower(B1_SMOKE)
+    hw = HwConfig()
+    rep, _stages, _sched = analyze_program(program, hw)
+    rows = site_breakdown(program, hw)     # plan=None, int8 default
+    assert sum(r["macs"] for r in rows) == rep.total_macs
+    assert sum(r["cycles"] for r in rows) \
+        == pytest.approx(rep.total_cycles, rel=1e-9)
+    assert sum(r["dram_bytes"] for r in rows) \
+        == pytest.approx(rep.dram_bytes, rel=1e-9)
+    # machine-readable: every row JSON-serializes with the full schema
+    for r in rows:
+        assert {"site", "kind", "stage", "fused", "precision", "reason",
+                "blocks", "launches", "macs", "compute_cycles",
+                "dram_bytes", "cycles"} <= set(r)
+    json.dumps(rows)
+    json.dumps(rep.to_dict())
+
+
+def test_site_breakdown_under_plan_reports_decisions(params):
+    program = lower(B1_SMOKE, batch=1, image_size=64)
+    name = program.fusible()[0].name
+    plan = plan_program(program, params, autotune=False,
+                        overrides={name: SiteOverride(fused=False)})
+    rows = {r["site"]: r
+            for r in site_breakdown(program, hw=HwConfig(), plan=plan,
+                                    default_precision="fp")}
+    row = rows[name]
+    assert not row["fused"] and row["reason"] == "search"
+    # the reference path launches every op separately: more launches
+    # than any fused row of the same kind
+    fused_rows = [r for r in rows.values()
+                  if r["fused"] and r["kind"] == row["kind"]]
+    if fused_rows:
+        assert row["launches"] > min(r["launches"] for r in fused_rows)
