@@ -42,7 +42,16 @@ Global invariants, checked over every scenario:
   * every fault class fired at least once and every budget is spent
     (``FaultPlan.exhausted``) — the chaos schedule provably ran.
 
+Every scenario runs with an ``obs.trace.Tracer`` threaded through the
+runtime, and the ladder scenarios additionally assert their designed
+response is *visible in the trace*: fault demotion, the walk down to
+the reference interpreter and the fp pin each appear as span events on
+the affected requests' spans with the blamed site attributed, next to
+the ``fault.injected`` marks that caused them.
+
     PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke]
+        [--json OUT]            machine-readable result ledger
+                                (repro.obs.ledger, BENCH_SCHEMA)
 """
 from __future__ import annotations
 
@@ -57,6 +66,7 @@ from repro.common.errors import (
 from repro.core.efficientvit import B1_SMOKE, init_efficientvit
 from repro.core.program import execute, lower
 from repro.core.quantization import quantize_efficientvit
+from repro.obs import Tracer, bench_result, flag_value, write_result
 from repro.serving.executors import ExecutorCache
 from repro.serving.faults import FaultPlan, FaultSpec
 from repro.serving.scheduler import ManualClock, MicroBatchScheduler, Request
@@ -74,17 +84,34 @@ def make_requests(n, res=RES, seed=0, **kw):
 
 def runtime(params, *, precision="auto", faults=None, clock=None,
             neg_ttl_s=1.0, devices=None, **sched_kw):
-    """(telemetry, cache, scheduler, clock) sharing one manual clock."""
+    """(telemetry, cache, scheduler, clock) sharing one manual clock.
+
+    Every scenario runs traced: a ``Tracer`` on the same virtual clock
+    threads through the cache, the scheduler and the fault plan, so the
+    ladder scenarios can assert their response shows up as span events
+    (retrieve it as ``sched.tracer``)."""
     clock = clock if clock is not None else ManualClock()
     tel = Telemetry()
+    tracer = Tracer(clock=clock)
+    if faults is not None and faults.tracer is None:
+        faults.tracer = tracer
     cache = ExecutorCache(params, B1_SMOKE, buckets=BUCKETS,
                           precision=precision, autotune=False,
                           telemetry=tel, faults=faults,
                           neg_ttl_s=neg_ttl_s, clock=clock,
-                          devices=devices)
+                          devices=devices, tracer=tracer)
     sched = MicroBatchScheduler(cache, params, telemetry=tel, clock=clock,
-                                faults=faults, **sched_kw)
+                                faults=faults, tracer=tracer, **sched_kw)
     return tel, cache, sched, clock
+
+
+def span_events(sched, name):
+    """Attrs of every ``name`` event across the trace's request spans
+    (finished or open), submit order."""
+    spans = sched.tracer.spans("request") + [
+        s for s in sched.tracer.open_spans() if s.name == "request"]
+    return [attrs for s in spans for _ts, n, attrs in s.events
+            if n == name]
 
 
 def drain(sched, clock, max_rounds=64, tick_s=0.05):
@@ -205,6 +232,13 @@ def scenario_autotune(params, n):
     ex = cache.get(BUCKETS[-1], RES)
     d = ex.plan.decisions[site]
     assert not d.fused and d.reason == "fault", (site, d)
+    # the transition is in the trace: the failed group's request spans
+    # carry a "degrade" event blaming exactly the demoted site, next to
+    # the injector's "fault.injected" mark
+    ev = span_events(sched, "degrade")
+    assert ev and all(e["site"] == site and e["level"] == 1
+                      for e in ev), ev
+    assert sched.tracer.spans("fault.injected"), "injection left no mark"
     return dict(name="autotune_fault", point="autotune", faults=faults,
                 tel=tel, reqs=reqs,
                 note=f"PlanError blamed {site}; demoted (reason=fault), "
@@ -234,6 +268,14 @@ def scenario_launch(params, n):
     got, ref = probe_vs_reference(cache, params, BUCKETS[-1], RES)
     assert np.array_equal(got, ref), \
         "level-2 executor must be the reference interpreter, bit-exact"
+    # the full ladder walk is in the trace: a traced retry for the
+    # transient first attempt, then "degrade" events at level 1 (the
+    # blamed site demoted) and level 2 (reference interpreter)
+    assert span_events(sched, "retry"), \
+        "attempt 1 must park a traced retry"
+    ev = span_events(sched, "degrade")
+    assert sorted({e["level"] for e in ev}) == [1, 2], ev
+    assert any(e["level"] == 1 and e["site"] == site for e in ev), ev
     return dict(name="launch_fault", point="kernel.launch", faults=faults,
                 tel=tel, reqs=reqs,
                 note=f"ladder: fused -> {site} demoted -> reference "
@@ -257,6 +299,12 @@ def scenario_numerics(qparams, n):
     got, ref = probe_vs_reference(cache, qparams, BUCKETS[-1], RES)
     assert np.array_equal(got, ref), \
         "fp-pinned executor must match the reference interpreter bit-exact"
+    # the pin is in the trace: finalize's NaN guard stamps "pin_fp" on
+    # the corrupted batch's request spans (site attributed — None here:
+    # a silent epilogue blow-up blames no single site)
+    ev = span_events(sched, "pin_fp")
+    assert ev and all(e["error"] == "NumericsError" and "site" in e
+                      for e in ev), ev
     return dict(name="numerics_int8", point="epilogue.numerics",
                 faults=faults, tel=tel, reqs=reqs,
                 note="NaN caught at finalize; bucket pinned to fp "
@@ -397,7 +445,7 @@ def scenario_mesh_loss(params, n):
 
 # -- driver ----------------------------------------------------------------
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, json_out: str | None = None):
     n = 4 if smoke else 8
     params = init_efficientvit(jax.random.PRNGKey(0), B1_SMOKE)
     qparams = quantize_efficientvit(params)
@@ -430,12 +478,15 @@ def run(smoke: bool = False):
     print(head)
     print("-" * len(head))
     injected_points = set()
+    matrix = {}
     for r in results:
         states = check_partition(r["name"], r["reqs"])
         fired = sum(r["faults"].fired.values())
         injected_points.update(r["faults"].fired)
         assert r["faults"].exhausted, \
             (r["name"], "unspent fault budget", r["faults"].specs)
+        matrix[r["name"]] = dict(point=r["point"], injected=fired,
+                                 note=r["note"], **states)
         print(f"{r['name']:<18} {r['point']:<18} {fired:>3} "
               f"{states['completed']:>4} {states['shed']:>4} "
               f"{states['failed']:>4}  {r['note']}")
@@ -451,11 +502,27 @@ def run(smoke: bool = False):
           f"terminated in exactly one of completed/shed/failed; "
           f"all {len(required)} required fault classes injected; "
           f"every fault budget spent")
+    if json_out is not None:
+        doc = bench_result(
+            "chaos_bench",
+            config=dict(smoke=smoke, cfg=B1_SMOKE.name, resolution=RES,
+                        buckets=list(BUCKETS), n_per_scenario=n,
+                        n_devices=len(jax.devices())),
+            metrics=dict(scenarios=matrix, total_requests=total,
+                         injected_points=sorted(injected_points)),
+            gates=dict(
+                partition_exact=True,          # asserted per scenario
+                all_fault_classes_injected=not missing,
+                budgets_spent=all(r["faults"].exhausted for r in results),
+                ladder_events_traced=True))    # asserted in scenarios
+        write_result(json_out, doc)
+        print(f"ledger written to {json_out}")
     return results
 
 
 def main():
-    run(smoke="--smoke" in sys.argv[1:])
+    argv = sys.argv[1:]
+    run(smoke="--smoke" in argv, json_out=flag_value(argv, "--json"))
 
 
 if __name__ == "__main__":

@@ -41,10 +41,18 @@ Everything here runs through the program IR (``core.program.lower`` /
 (``core.fusion.plan_program``) — the same single lowering the cycle
 model and fig6/table2 consume.
 
-    PYTHONPATH=src python -m benchmarks.e2e_latency
+  * model-drift audit (``repro.obs.profile``): profiled per-site
+    execution of full B1 @224 at BOTH precisions, reconciled against
+    ``site_breakdown`` predicted cycles — every site covered, every
+    drift ratio finite (absolute ratios are meaningless on the CPU
+    interpreter; coverage and finiteness are the gate, the per-site
+    relative profile is the signal).
+
+    PYTHONPATH=src python -m benchmarks.e2e_latency [--json OUT]
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -57,6 +65,8 @@ from repro.core.fusion import (
     launch_counts, plan_program, plan_report)
 from repro.core.program import execute, lower
 from repro.core.quantization import quantize_efficientvit
+from repro.obs import bench_result, flag_value, write_result
+from repro.obs.profile import drift_report, profile_execute
 
 
 def _delivered_gate(plan, rows):
@@ -98,7 +108,37 @@ def _print_rows(rows):
               f"{r['launches_ref']:>4} ->{r['launches_fused']:>3}")
 
 
-def run(batch: int = 2, autotune: bool = True):
+def drift_section(program, params, qparams, *, image_size: int):
+    """Model-drift audit: profiled per-site execution (reference
+    interpreter, eager, ``block_until_ready`` per site) vs the cycle
+    model, at BOTH precisions.  Coverage + finiteness are the gate.
+
+    The int8 reference interpreter is ~150x slower per eager pass than
+    fp on the CPU backend, so it profiles with a single unwarmed
+    repeat — absolute numbers are interpreter artifacts either way.
+    """
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, image_size, image_size, 3))
+    reports = {}
+    for prec, tree, repeats, warmup in (("fp", params, 3, 1),
+                                        ("int8", qparams, 1, 0)):
+        prof = profile_execute(program, tree, x, plan=None,
+                               repeats=repeats, warmup=warmup)
+        rep = drift_report(program, prof, plan=None, precision=prec)
+        assert len(rep.rows) == len(program.sites), \
+            (len(rep.rows), len(program.sites))
+        assert rep.finite(), \
+            [r["site"] for r in rep.rows if not (r["predicted_ms"] > 0)]
+        reports[prec] = rep
+        print(f"\n## model drift — {prec}, {len(rep.rows)} sites, "
+              f"{repeats} repeat(s) (CPU interpreter: relative profile "
+              f"only)")
+        print(rep.table())
+    return reports
+
+
+def run(batch: int = 2, autotune: bool = True,
+        json_out: str | None = None):
     cfg = B1_SMOKE
     key = jax.random.PRNGKey(0)
     params = init_efficientvit(key, cfg)
@@ -230,15 +270,42 @@ def run(batch: int = 2, autotune: bool = True):
           f"= {ratio:.2f}x of fp-fused")
     assert ratio <= 0.6, f"int8-fused HBM ratio {ratio:.3f} > 0.6"
 
-    return {"max_err": err, "t_ref": t_ref, "t_fused": t_fus,
-            "launches": lc, "hbm_saving_x": total_u / total_f,
-            "int8_max_err": qerr, "int8_argmax_exact": argmax_ok,
-            "t_int8_ref": t_qref, "t_int8_fused": t_qfus,
-            "int8_vs_fp_hbm_ratio": ratio}
+    # ---------------------------------------------------------------
+    # measured vs predicted: profiled B1 @224 at both precisions
+    # ---------------------------------------------------------------
+    drift = drift_section(b1_program, b1_params,
+                          quantize_efficientvit(b1_params),
+                          image_size=B1.image_size)
+
+    out = {"max_err": err, "t_ref": t_ref, "t_fused": t_fus,
+           "launches": lc, "hbm_saving_x": total_u / total_f,
+           "int8_max_err": qerr, "int8_argmax_exact": argmax_ok,
+           "t_int8_ref": t_qref, "t_int8_fused": t_qfus,
+           "int8_vs_fp_hbm_ratio": ratio,
+           "drift": {p: r.to_dict() for p, r in drift.items()}}
+    if json_out is not None:
+        doc = bench_result(
+            "e2e_latency",
+            config=dict(cfg=cfg.name, batch=batch, autotune=autotune,
+                        drift_cfg=B1.name, drift_image_size=B1.image_size),
+            metrics=out,
+            gates=dict(
+                fp_parity=err < 1e-3,
+                int8_bit_exact=(qerr == 0.0 and argmax_ok),
+                b1_fp_launches=True,     # asserted above (== 22)
+                b1_int8_launches=True,   # asserted above (== 29)
+                int8_hbm_ratio=ratio <= 0.6,
+                drift_all_sites=all(
+                    len(r.rows) == len(b1_program.sites)
+                    for r in drift.values()),
+                drift_finite=all(r.finite() for r in drift.values())))
+        write_result(json_out, doc)
+        print(f"\nledger written to {json_out}")
+    return out
 
 
 def main():
-    run()
+    run(json_out=flag_value(sys.argv[1:], "--json"))
 
 
 if __name__ == "__main__":

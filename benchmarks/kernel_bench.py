@@ -5,9 +5,12 @@ Wall-clock on CPU interpret mode is NOT a TPU number — the meaningful
 output is (a) correctness deltas and (b) the bytes-saved accounting that
 feeds the EXPERIMENTS.md fusion table (the TPU story: the fused kernel's
 intermediate never leaves VMEM).
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--json OUT]
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -146,16 +149,29 @@ def bench_ssd():
     return err
 
 
-def run():
+def run(json_out: str | None = None):
     print("# Kernel microbench — Pallas interpret-mode vs jnp oracle")
-    errs = [bench_relu_attn(), bench_dsconv(), bench_mbconv(),
-            bench_mbconv_int8(), bench_int8(), bench_ssd()]
-    assert all(e < 1e-2 for e in errs), errs
-    return {"max_err": max(errs)}
+    benches = (("relu_attn", bench_relu_attn), ("dsconv", bench_dsconv),
+               ("mbconv", bench_mbconv), ("mbconv_int8", bench_mbconv_int8),
+               ("int8_matmul", bench_int8), ("ssd", bench_ssd))
+    errs = {name: fn() for name, fn in benches}
+    assert all(e < 1e-2 for e in errs.values()), errs
+    if json_out is not None:
+        from repro.obs import bench_result, write_result
+        doc = bench_result(
+            "kernel_bench",
+            config=dict(backend=jax.default_backend(), interpret=True),
+            metrics=dict(max_err=max(errs.values()), errors=errs),
+            gates={f"{name}_err": err < 1e-2
+                   for name, err in errs.items()})
+        write_result(json_out, doc)
+        print(f"ledger written to {json_out}")
+    return {"max_err": max(errs.values())}
 
 
 def main():
-    run()
+    from repro.obs import flag_value
+    run(json_out=flag_value(sys.argv[1:], "--json"))
 
 
 if __name__ == "__main__":

@@ -23,6 +23,8 @@ at BOTH serving precisions, and gates the claims the subsystem makes:
                             committed fixture tests/data/trace_smoke.json)
         [--out DIR]         write the searched artifacts as JSON
         [--iters N]         annealing iterations (default 64)
+        [--json OUT]        machine-readable result ledger
+                            (repro.obs.ledger, BENCH_SCHEMA)
 """
 from __future__ import annotations
 
@@ -37,6 +39,7 @@ import jax
 from repro.core.efficientvit import B1_SMOKE, init_efficientvit
 from repro.core.quantization import quantize_efficientvit
 from repro.kernels import autotune as at
+from repro.obs import bench_result, flag_value, write_result
 from repro.search import ScheduleArtifact, search
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
@@ -89,7 +92,8 @@ def check_reproduction(cache, artifact) -> int:
 
 
 def run(smoke: bool = False, trace_path: str | None = None,
-        out_dir: str | None = None, iters: int = 64):
+        out_dir: str | None = None, iters: int = 64,
+        json_out: str | None = None):
     from benchmarks.serving_bench import make_images, replay
     from repro.search import load_trace
 
@@ -167,23 +171,33 @@ def run(smoke: bool = False, trace_path: str | None = None,
             sweeps_default=sweeps_d, sweeps_artifact=sweeps_a)
     print("\nall search gates passed (objective, zero-sweep, "
           "reproduction, cold-start wall clock) at both precisions")
+    if json_out is not None:
+        doc = bench_result(
+            "search_bench",
+            config=dict(smoke=smoke, cfg=B1_SMOKE.name, iters=iters,
+                        n_requests=len(trace), buckets=list(SPEC["buckets"]),
+                        trace=trace_path if trace_path is not None
+                        else FIXTURE),
+            metrics=results,
+            gates={f"{p}_{g}": ok for p, r in results.items()
+                   for g, ok in (
+                       ("objective", r["objective"]
+                        <= r["default_objective"]),
+                       ("zero_sweep", r["sweeps_artifact"] == 0),
+                       ("cold_start_faster", r["wall_artifact_s"]
+                        < r["wall_default_s"]))})
+        write_result(json_out, doc)
+        print(f"ledger written to {json_out}")
     return results
-
-
-def _flag_value(argv, flag, default=None):
-    if flag in argv:
-        i = argv.index(flag)
-        assert i + 1 < len(argv), f"{flag} needs a value"
-        return argv[i + 1]
-    return default
 
 
 def main():
     argv = sys.argv[1:]
     run(smoke="--smoke" in argv,
-        trace_path=_flag_value(argv, "--trace"),
-        out_dir=_flag_value(argv, "--out"),
-        iters=int(_flag_value(argv, "--iters", 64)))
+        trace_path=flag_value(argv, "--trace"),
+        out_dir=flag_value(argv, "--out"),
+        iters=int(flag_value(argv, "--iters") or 64),
+        json_out=flag_value(argv, "--json"))
 
 
 if __name__ == "__main__":

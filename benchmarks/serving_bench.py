@@ -32,6 +32,10 @@ Asserts (CI smoke gate, ``--smoke``):
                                 offline schedule search's input)
         [--trace PATH]          replay a recorded trace instead of
                                 synthesizing one
+        [--trace-json PATH]     export the fp bucketed replay's request
+                                timeline as Chrome trace JSON (Perfetto)
+        [--json OUT]            machine-readable result ledger
+                                (repro.obs.ledger, BENCH_SCHEMA)
 """
 from __future__ import annotations
 
@@ -44,6 +48,9 @@ import numpy as np
 from repro.core.efficientvit import B1_SMOKE, init_efficientvit
 from repro.core.program import execute, lower
 from repro.core.quantization import quantize_efficientvit
+from repro.obs import (
+    Tracer, bench_result, flag_value, request_chains,
+    validate_chrome_trace, write_result)
 from repro.serving.executors import ExecutorCache
 from repro.serving.scheduler import (
     BucketedPolicy, FixedMicrobatchPolicy, ManualClock, MicroBatchScheduler,
@@ -85,22 +92,26 @@ def make_images(trace, seed: int = 1):
 
 def replay(params, spec, trace, images, *, policy_name: str,
            precision: str = "auto", devices=None, cfg=B1_SMOKE,
-           autotune: bool = False, artifact=None):
+           autotune: bool = False, artifact=None,
+           with_tracer: bool = False):
     """One policy x precision replay; returns (telemetry, logits, wall_s,
     cache).  ``devices`` shards every dispatch's batch axis across that
     mesh (``serving.sharding``); ``artifact`` adopts an offline-searched
     ``repro.search.ScheduleArtifact`` (buckets + pinned plans, zero
-    autotune sweeps)."""
+    autotune sweeps).  ``with_tracer`` threads an ``obs.trace.Tracer``
+    on the replay's virtual clock through the cache and scheduler
+    (retrieve it as ``cache.tracer``)."""
     tel = Telemetry()
+    clock = ManualClock()
+    tracer = Tracer(clock=clock) if with_tracer else None
     cache = ExecutorCache(params, cfg, buckets=spec["buckets"],
                           precision=precision, autotune=autotune,
                           telemetry=tel, devices=devices,
-                          artifact=artifact)
+                          artifact=artifact, tracer=tracer)
     policy = (FixedMicrobatchPolicy(spec["microbatch"])
               if policy_name == "fixed" else BucketedPolicy())
-    clock = ManualClock()
     sched = MicroBatchScheduler(cache, params, policy=policy,
-                                telemetry=tel, clock=clock)
+                                telemetry=tel, clock=clock, tracer=tracer)
     reqs = [Request(rid=i, image=img, deadline_ms=spec["deadline_ms"])
             for i, img in enumerate(images)]
     # warm the compiled working set outside the timed window, like a
@@ -191,8 +202,30 @@ def sharded_section(params, qparams, spec, trace, images, results):
     return tel
 
 
+def check_trace(tracer, reqs_done: int, trace_json: str | None = None):
+    """Observability gate: the bucketed replay's trace must be schema-
+    valid and contain a COMPLETE admit -> queue -> dispatch -> device ->
+    finalize chain for every completed request.  Optionally exports the
+    Chrome trace JSON to ``trace_json``."""
+    doc = tracer.export(trace_json) if trace_json is not None \
+        else tracer.to_chrome()
+    n_complete = validate_chrome_trace(doc)
+    chains = request_chains(doc)
+    assert len(chains) == reqs_done, (len(chains), reqs_done)
+    incomplete = [
+        rid for rid, c in chains.items()
+        if not ({"queue"} <= c["children"]
+                and {"dispatch", "device", "finalize"} <= c["member_of"])]
+    assert not incomplete, \
+        f"requests without a complete span chain: {sorted(incomplete)}"
+    assert not tracer.open_spans(), \
+        [s.name for s in tracer.open_spans()]
+    return doc, n_complete, chains
+
+
 def run(smoke: bool = False, trace_path: str | None = None,
-        record_path: str | None = None):
+        record_path: str | None = None, trace_json: str | None = None,
+        json_out: str | None = None):
     spec = SMOKE if smoke else FULL
     key = jax.random.PRNGKey(0)
     params = init_efficientvit(key, B1_SMOKE)
@@ -222,9 +255,12 @@ def run(smoke: bool = False, trace_path: str | None = None,
         print(f"\n## {prec_name}")
         per = {}
         for policy in ("fixed", "bucketed"):
+            # the bucketed replays run WITH tracing enabled, so every
+            # drift gate below (occupancy, parity, EXPECTED_SMOKE_KEYS)
+            # holds on the traced runtime, not a tracing-off twin
             tel, logits, wall, cache = replay(
                 tree, spec, trace, images, policy_name=policy,
-                precision=precision)
+                precision=precision, with_tracer=(policy == "bucketed"))
             per[policy] = dict(tel=tel, logits=logits, wall=wall,
                                cache=cache)
             print(_policy_line(policy, tel, wall, n))
@@ -268,30 +304,65 @@ def run(smoke: bool = False, trace_path: str | None = None,
             f"alongside the scheduler change"
         print(f"executor key-set gate: dispatched {sorted(got)} == expected")
 
-    sharded_section(params, qparams, spec, trace, images, results)
+    # trace completeness gate: every completed request in both traced
+    # (bucketed) replays left a full admit -> queue -> dispatch ->
+    # device -> finalize chain; the fp trace optionally exports
+    trace_stats = {}
+    for prec_name in ("fp", "int8"):
+        tracer = results[prec_name]["bucketed"]["cache"].tracer
+        doc, n_complete, chains = check_trace(
+            tracer, n, trace_json if prec_name == "fp" else None)
+        trace_stats[prec_name] = dict(spans=n_complete, chains=len(chains))
+    print(f"\ntrace gate: {trace_stats['fp']['chains']} fp / "
+          f"{trace_stats['int8']['chains']} int8 request chains complete "
+          f"({trace_stats['fp']['spans']} / {trace_stats['int8']['spans']} "
+          f"spans)"
+          + (f"; Chrome trace written to {trace_json}" if trace_json
+             else ""))
 
-    return {
+    metrics = {
         prec: {pol: {"occupancy": d["tel"].occupancy,
                      "padded": d["tel"].total("padded"),
                      "dispatches": d["tel"].total("dispatches"),
                      "wall_s": d["wall"]}
                for pol, d in per.items()}
         for prec, per in results.items()}
-
-
-def _flag_value(argv, flag):
-    if flag in argv:
-        i = argv.index(flag)
-        assert i + 1 < len(argv), f"{flag} needs a path"
-        return argv[i + 1]
-    return None
+    if json_out is not None:
+        fp_m, i8_m = metrics["fp"], metrics["int8"]
+        doc = bench_result(
+            "serving_bench",
+            config=dict(smoke=smoke, n_requests=n,
+                        resolutions=list(spec["resolutions"]),
+                        buckets=list(spec["buckets"]),
+                        microbatch=spec["microbatch"],
+                        deadline_ms=spec["deadline_ms"],
+                        n_devices=len(jax.devices())),
+            metrics=dict(metrics,
+                         trace=dict(trace_stats)),
+            gates=dict(
+                fewer_padded_fp=(fp_m["bucketed"]["padded"]
+                                 < fp_m["fixed"]["padded"]),
+                fewer_padded_int8=(i8_m["bucketed"]["padded"]
+                                   < i8_m["fixed"]["padded"]),
+                higher_occupancy_fp=(fp_m["bucketed"]["occupancy"]
+                                     > fp_m["fixed"]["occupancy"]),
+                higher_occupancy_int8=(i8_m["bucketed"]["occupancy"]
+                                       > i8_m["fixed"]["occupancy"]),
+                fp_parity=True,           # asserted above
+                smoke_key_set=smoke,      # asserted above when smoke
+                trace_chains_complete=True))
+        write_result(json_out, doc)
+        print(f"ledger written to {json_out}")
+    return metrics
 
 
 def main():
     argv = sys.argv[1:]
     run(smoke="--smoke" in argv,
-        trace_path=_flag_value(argv, "--trace"),
-        record_path=_flag_value(argv, "--record-trace"))
+        trace_path=flag_value(argv, "--trace"),
+        record_path=flag_value(argv, "--record-trace"),
+        trace_json=flag_value(argv, "--trace-json"),
+        json_out=flag_value(argv, "--json"))
 
 
 if __name__ == "__main__":

@@ -350,7 +350,8 @@ def _dispatch(site: Site, p, y, plan, cfg, attention_fn, kernel_ep):
     return get_probe(site.kind).ref(p, y, site)
 
 
-def execute(program: Program, params, x, *, plan=None, attention_fn=None):
+def execute(program: Program, params, x, *, plan=None, attention_fn=None,
+            profile=None):
     """Run the lowered program.  x: (B, H, W, 3) -> (B, num_classes).
 
     ``plan`` is an optional ``core.fusion.FusionPlan`` (built by
@@ -363,6 +364,13 @@ def execute(program: Program, params, x, *, plan=None, attention_fn=None):
     reference ops — byte-identical to the pre-IR ``efficientvit()``
     forward.  An explicit ``attention_fn`` override disables epilogue
     emission (the int8 dataflow only runs on the default fused path).
+
+    ``profile`` is an optional ``repro.obs.profile.SiteProfiler``: each
+    site's output is blocked on (``block_until_ready``) at the site
+    boundary and the wall-clock window recorded under the site name.
+    That barrier serializes the pipeline, so profiled execution is for
+    offline model-drift audits only — never the serving path, and never
+    under jit (the barrier is meaningless on tracers).
     """
     from repro.core.quantization import QTensor, act_fp, quantize_act
 
@@ -371,6 +379,8 @@ def execute(program: Program, params, x, *, plan=None, attention_fn=None):
         if attention_fn is None else {}
     y = x
     for site in program.sites:
+        if profile is not None:
+            profile.begin(site)
         p = params_at(params, site.param_path) if site.param_path else None
         ep = epilogues.get(site.name)
         if site.kind == "conv_bn":
@@ -399,6 +409,8 @@ def execute(program: Program, params, x, *, plan=None, attention_fn=None):
                     y = s
             else:
                 y = out     # QTensor when the kernel ran its epilogue
+        if profile is not None:
+            y = profile.end(site, y)
     return y
 
 

@@ -1,0 +1,117 @@
+"""Machine-readable benchmark ledger: one schema for every benchmark.
+
+Every benchmark in ``benchmarks/`` (e2e_latency, serving_bench,
+chaos_bench, search_bench, kernel_bench) accepts ``--json OUT`` and
+writes the same schema-versioned result dict, so the perf trajectory
+accumulates as comparable artifacts instead of scrollback::
+
+    {"schema": BENCH_SCHEMA,
+     "name": "serving_bench",           # which benchmark
+     "config": {...},                   # the knobs that shaped the run
+     "metrics": {...},                  # scalar / small-dict measurements
+     "gates": {"smoke_keys": true, ...} # named pass/fail outcomes
+    }
+
+``gates`` values must be booleans — a ledger entry is self-judging, so
+a CI job (or a later regression sweep) can assert ``all(gates.values())``
+without knowing benchmark internals.  ``validate_result`` is that
+gatekeeper; ``benchmarks/ledger/BENCH_SMOKE.json`` is the committed
+fixture establishing the format.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Optional
+
+__all__ = ["BENCH_SCHEMA", "bench_result", "validate_result",
+           "write_result", "load_result", "flag_value"]
+
+BENCH_SCHEMA = 1
+
+_KNOWN_BENCHES = ("e2e_latency", "serving_bench", "chaos_bench",
+                  "search_bench", "kernel_bench")
+
+
+def _jsonable(obj):
+    """Coerce benchmark metrics (numpy scalars, tuples, non-finite
+    floats, dataclass-ish keys) into plain JSON values."""
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item"):                      # numpy scalar
+        return _jsonable(obj.item())
+    if hasattr(obj, "to_dict"):
+        return _jsonable(obj.to_dict())
+    return str(obj)
+
+
+def bench_result(name: str, *, config: Optional[dict] = None,
+                 metrics: Optional[dict] = None,
+                 gates: Optional[Dict[str, bool]] = None) -> dict:
+    """Assemble (and validate) one ledger entry."""
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "name": name,
+        "config": _jsonable(config or {}),
+        "metrics": _jsonable(metrics or {}),
+        "gates": {str(k): bool(v) for k, v in (gates or {}).items()},
+    }
+    validate_result(doc)
+    return doc
+
+
+def validate_result(doc: dict) -> dict:
+    """Raise ``ValueError`` unless ``doc`` is a well-formed ledger
+    entry; returns it unchanged.  This is the CI schema gate for
+    ``--json`` benchmark output."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"ledger entry is {type(doc).__name__}, not dict")
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(
+            f"ledger schema {doc.get('schema')!r} != {BENCH_SCHEMA}")
+    name = doc.get("name")
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"ledger name {name!r} invalid")
+    if name not in _KNOWN_BENCHES:
+        raise ValueError(f"unknown benchmark {name!r}; "
+                         f"expected one of {_KNOWN_BENCHES}")
+    for field in ("config", "metrics", "gates"):
+        if not isinstance(doc.get(field), dict):
+            raise ValueError(f"ledger {field!r} missing or not a dict")
+    for gate, outcome in doc["gates"].items():
+        if not isinstance(outcome, bool):
+            raise ValueError(f"gate {gate!r} outcome {outcome!r} "
+                             "is not a bool")
+    json.dumps(doc)          # must round-trip: no numpy/NaN leftovers
+    return doc
+
+
+def write_result(path: str, doc: dict) -> dict:
+    """Validate + write one ledger entry to ``path``."""
+    validate_result(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def load_result(path: str) -> dict:
+    with open(path) as f:
+        return validate_result(json.load(f))
+
+
+def flag_value(argv, flag: str) -> Optional[str]:
+    """``--flag VALUE`` lookup shared by the benchmark CLIs (every
+    benchmark parses ``--json OUT`` and friends the same way)."""
+    if flag in argv:
+        i = argv.index(flag)
+        if i + 1 >= len(argv):
+            raise SystemExit(f"{flag} needs a value")
+        return argv[i + 1]
+    return None

@@ -1,0 +1,221 @@
+"""Per-site profiled execution: measured wall clock vs the cycle model.
+
+The entire optimization loop — the fusion planner, the offline schedule
+search, the delivered-HBM gates — trusts the *analytic* cycle model
+(``core.accelerator_model.site_breakdown``) without ever checking it
+against *measured* time.  This module is that check: an opt-in profiled
+execution mode (``core.program.execute(..., profile=)``) that blocks on
+every site boundary (``jax.block_until_ready``) and stamps host
+wall-clock per site, reconciled against the model's predicted cycles
+into a typed :class:`DriftReport`.
+
+This is explicitly NOT the serving hot path: a ``block_until_ready``
+per site serializes the device pipeline, which is exactly what the
+async scheduler exists to avoid.  Profiled runs are offline — a
+benchmark section, a capacity-planning probe, a model-drift audit.
+
+Interpretation: on the CPU interpret-mode CI backend the *absolute*
+drift ratio is meaningless (a Python Pallas interpreter vs a 200 MHz
+FPGA model); the signal is the per-site *relative* profile — whether
+the sites the model calls expensive are the sites that are measured
+expensive — and that every ratio is finite and stable.  On real
+hardware the same report becomes the empirical validation of the cost
+surface the search stack optimizes.
+
+    prof = profile_execute(program, params, x, plan=plan)
+    report = drift_report(program, prof, plan=plan)
+    print(report.table())
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core.accelerator_model import HwConfig, site_breakdown
+
+__all__ = ["DRIFT_SCHEMA", "SiteProfiler", "DriftReport",
+           "profile_execute", "drift_report"]
+
+DRIFT_SCHEMA = 1
+
+
+class SiteProfiler:
+    """Per-site wall-clock recorder for ``execute(..., profile=)``.
+
+    ``clock`` (zero-arg seconds) and ``sync`` (the blocking barrier,
+    default ``jax.block_until_ready``) are injectable so tests can
+    script exact timings; ``execute`` calls ``begin(site)`` before a
+    site runs and ``end(site, out)`` after, and ``end`` blocks on the
+    site's output before reading the clock — the recorded window is
+    host-observed but device-complete.
+    """
+
+    def __init__(self, *, clock=None, sync=None):
+        self.clock = clock if clock is not None else time.perf_counter
+        self.sync = sync if sync is not None else jax.block_until_ready
+        self.records: Dict[str, List[float]] = {}
+        self._t0: Optional[float] = None
+
+    def begin(self, site) -> None:
+        self._t0 = self.clock()
+
+    def end(self, site, out):
+        out = self.sync(out)
+        assert self._t0 is not None, f"end({site.name}) without begin"
+        self.records.setdefault(site.name, []).append(
+            float(self.clock() - self._t0))
+        self._t0 = None
+        return out
+
+    def measured_ms(self, name: str) -> float:
+        """Median recorded wall clock for one site, in milliseconds."""
+        return statistics.median(self.records[name]) * 1e3
+
+    @property
+    def repeats(self) -> int:
+        return min((len(v) for v in self.records.values()), default=0)
+
+
+def profile_execute(program, params, x, *, plan=None, repeats: int = 3,
+                    warmup: int = 1, profiler: SiteProfiler | None = None
+                    ) -> SiteProfiler:
+    """Run the program ``repeats`` times under a ``SiteProfiler``.
+
+    Runs eagerly (profiled execution cannot be jitted — the per-site
+    barrier is the measurement); ``warmup`` unrecorded passes absorb
+    first-touch costs (op compilation, caches) before timing starts.
+    """
+    from repro.core.program import execute
+
+    prof = profiler if profiler is not None else SiteProfiler()
+    for _ in range(int(warmup)):
+        execute(program, params, x, plan=plan)
+    for _ in range(int(repeats)):
+        execute(program, params, x, plan=plan, profile=prof)
+    return prof
+
+
+@dataclasses.dataclass
+class DriftReport:
+    """Measured-vs-predicted reconciliation for one profiled program.
+
+    One row per site: measured wall-clock (median over repeats),
+    predicted cycles/ms from the analytic model under the same plan,
+    and ``drift = measured_ms / predicted_ms``.  A site the model
+    assigns zero cycles (the parameter-free global-average-pool) is
+    charged its memory-bound boundary traffic instead, so every ratio
+    is finite.
+    """
+    precision: str
+    repeats: int
+    hw: HwConfig
+    rows: List[dict]
+
+    @property
+    def measured_ms(self) -> float:
+        return sum(r["measured_ms"] for r in self.rows)
+
+    @property
+    def predicted_ms(self) -> float:
+        return sum(r["predicted_ms"] for r in self.rows)
+
+    @property
+    def drift(self) -> float:
+        """Aggregate measured/predicted ratio."""
+        return self.measured_ms / self.predicted_ms
+
+    def row(self, name: str) -> dict:
+        for r in self.rows:
+            if r["site"] == name:
+                return r
+        raise KeyError(name)
+
+    def finite(self) -> bool:
+        import math
+        return all(math.isfinite(r["drift"]) and r["predicted_ms"] > 0
+                   for r in self.rows)
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": DRIFT_SCHEMA,
+            "precision": self.precision,
+            "repeats": self.repeats,
+            "freq_mhz": self.hw.freq_hz / 1e6,
+            "measured_ms": self.measured_ms,
+            "predicted_ms": self.predicted_ms,
+            "drift": self.drift,
+            "rows": [dict(r) for r in self.rows],
+        }
+
+    def table(self) -> str:
+        head = (f"{'site':<16} {'kind':<8} {'route':<10} "
+                f"{'measured ms':>12} {'predicted ms':>13} {'drift':>9} "
+                f"{'meas %':>7} {'pred %':>7}")
+        lines = [head, "-" * len(head)]
+        tm, tp = self.measured_ms, self.predicted_ms
+        for r in self.rows:
+            route = "fused" if r["fused"] else "ref"
+            lines.append(
+                f"{r['site']:<16} {r['kind']:<8} "
+                f"{route + '/' + r['precision']:<10} "
+                f"{r['measured_ms']:>12.3f} {r['predicted_ms']:>13.4f} "
+                f"{r['drift']:>8.0f}x "
+                f"{r['measured_ms'] / tm:>6.1%} "
+                f"{r['predicted_ms'] / tp:>6.1%}")
+        lines.append(f"{'TOTAL':<36} {tm:>12.3f} {tp:>13.4f} "
+                     f"{self.drift:>8.0f}x")
+        return "\n".join(lines)
+
+
+def _boundary_cycles(site, hw: HwConfig) -> float:
+    """Memory-bound floor for a site with no scheduled MACs: its fp32
+    input + output boundary traffic at the DRAM bandwidth."""
+    import math
+    n_in = math.prod(site.in_shape)
+    n_out = math.prod(site.out_shape)
+    return 4.0 * (n_in + n_out) / hw.bytes_per_cycle
+
+
+def drift_report(program, profiler: SiteProfiler, *, plan=None,
+                 hw: HwConfig | None = None,
+                 precision: str | None = None) -> DriftReport:
+    """Reconcile a profiled run against the analytic cycle model.
+
+    ``plan`` must be the plan the profiled run executed (or None for
+    the reference interpreter); ``precision`` is the model's default
+    for sites outside the plan — inferred from the plan when omitted.
+    Raises ``KeyError`` if the profiler is missing any program site:
+    partial profiles do not reconcile.
+    """
+    hw = hw if hw is not None else HwConfig()
+    if precision is None:
+        decisions = plan.decisions.values() if plan is not None else ()
+        precision = "int8" if any(d.precision == "int8" and d.fused
+                                  for d in decisions) else "fp"
+    predicted = {r["site"]: r for r in site_breakdown(
+        program, hw, plan=plan, include_head=True,
+        default_precision=precision)}
+    rows: List[dict] = []
+    for site in program.sites:
+        meas = profiler.measured_ms(site.name)     # KeyError if missing
+        p = predicted.get(site.name)
+        cycles = p["cycles"] if p is not None else 0.0
+        if cycles <= 0.0:
+            cycles = _boundary_cycles(site, hw)
+        pred_ms = cycles / hw.freq_hz * 1e3
+        d = plan.get(site.name) if plan is not None else None
+        rows.append({
+            "site": site.name, "kind": site.kind, "stage": site.stage,
+            "fused": bool(d.fused) if d is not None else False,
+            "precision": d.precision if d is not None else precision,
+            "measured_ms": meas,
+            "predicted_cycles": float(cycles),
+            "predicted_ms": pred_ms,
+            "drift": meas / pred_ms,
+        })
+    return DriftReport(precision=precision, repeats=profiler.repeats,
+                       hw=hw, rows=rows)

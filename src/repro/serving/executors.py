@@ -193,10 +193,14 @@ class ExecutorCache:
                  telemetry: Telemetry | None = None,
                  epilogues: bool = True,
                  faults=None, neg_ttl_s: float = 1.0, clock=None,
-                 devices=None, artifact=None):
+                 devices=None, artifact=None, tracer=None):
         assert buckets and all(b >= 1 for b in buckets), buckets
         self.params = params
         self.cfg = cfg
+        # obs.trace.Tracer (or None): build spans land on the
+        # "executors" track; ladder moves and mesh shrinks are recorded
+        # as zero-duration marks.  Host clocks only — never a device sync.
+        self.tracer = tracer
         if artifact is not None:
             # adopt the searched schedule: validate first (typed
             # ArtifactError on a config-hash/precision mismatch — never
@@ -225,6 +229,8 @@ class ExecutorCache:
         # batch-sharded shard_map over the survivors in DeviceHealth
         self.health = DeviceHealth.of(devices) if devices is not None \
             else None
+        if self.health is not None:
+            self.health.tracer = tracer
         self._lru: "collections.OrderedDict[ExecutorKey, Executor]" = \
             collections.OrderedDict()
         self._donor_plans: dict[int, object] = {}   # resolution -> plan
@@ -278,22 +284,33 @@ class ExecutorCache:
                 raise err from cause
             del self._neg[key]
         self.telemetry.count("executor_miss")
+        bspan = None
+        if self.tracer is not None:
+            bspan = self.tracer.begin(
+                "executor.build", track="executors", bucket=key.batch,
+                resolution=key.resolution, precision=key.precision)
         try:
-            ex = self._build(key)
-        except MeshExhausted:
+            ex = self._build(key, parent=bspan)
+        except MeshExhausted as e:
             # no compile ran and no device will come back — keep the
             # typed error un-wrapped and un-cached so every caller sees
             # MeshExhausted itself, not a negative-cache ExecutorError
             self.telemetry.count("executor_build_failed")
+            self._t_end(bspan, error=type(e).__name__)
             raise
         except ReproError as e:
             self._note_build_failure(key, e)
+            self._t_end(bspan, error=type(e).__name__)
             raise
         except Exception as e:  # non-typed crash inside lower/plan/jit
             err = ExecutorError(f"executor build failed for {key}: {e}",
                                 key=key)
             self._note_build_failure(key, err)
+            self._t_end(bspan, error=type(e).__name__)
             raise err from e
+        self._t_end(bspan, fused_sites=len(ex.fused_sites),
+                    degraded=ex.degraded is not None
+                    and ex.degraded.degraded)
         self._lru[key] = ex
         while self.capacity is not None and len(self._lru) > self.capacity:
             evicted_key, _ = self._lru.popitem(last=False)
@@ -308,6 +325,18 @@ class ExecutorCache:
         requests: smallest cached bucket >= n."""
         return self.get(self.bucket_for(n), resolution)
 
+    # -- tracing helpers (no-ops without a tracer) -----------------------
+    def _t_end(self, span, **attrs) -> None:
+        if self.tracer is not None and span is not None:
+            self.tracer.end(span, **attrs)
+
+    def _t_mark(self, name: str, **attrs) -> None:
+        """Zero-duration mark on the executors track (ladder moves,
+        mesh shrinks) — a begin/end pair at one clock reading."""
+        if self.tracer is not None:
+            self.tracer.end(self.tracer.begin(name, track="executors",
+                                              **attrs))
+
     def _note_build_failure(self, key: ExecutorKey,
                             err: ReproError) -> None:
         """Record a failed build: count it and negative-cache the key.
@@ -321,7 +350,7 @@ class ExecutorCache:
         if self.neg_ttl_s > 0:
             self._neg[key] = (self.clock() + self.neg_ttl_s, err)
 
-    def _build(self, key: ExecutorKey) -> Executor:
+    def _build(self, key: ExecutorKey, parent=None) -> Executor:
         # pick the device slice first: an exhausted mesh must raise its
         # typed error before any compile work (or compile fault) runs
         shard = self.health.shard_for(key.batch) \
@@ -331,12 +360,16 @@ class ExecutorCache:
                              resolution=key.resolution,
                              precision=key.precision)
         state = self._degrade.get(key)
+        lspan = None
+        if self.tracer is not None:
+            lspan = self.tracer.begin("lower", parent=parent)
         # sharded executors lower/plan at the LOCAL batch — shard_map
         # hands each device its own slice of the bucket
         program = lower(self.cfg,
                         batch=shard.local_batch if shard is not None
                         else key.batch,
                         image_size=key.resolution)
+        self._t_end(lspan)
         plan = None
         if self.use_plan and not (state is not None and state.level >= 2):
             precision = "fp" if (state is not None and state.pinned_fp) \
@@ -353,6 +386,10 @@ class ExecutorCache:
                 overrides = self.artifact.overrides_for(
                     shard.local_batch if shard is not None else key.batch,
                     key.resolution)
+            pspan = None
+            if self.tracer is not None:
+                pspan = self.tracer.begin("plan", parent=parent,
+                                          reused_donor=donor is not None)
             plan = plan_program(program, self.params,
                                 autotune=self.autotune,
                                 interpret=self.interpret,
@@ -361,6 +398,7 @@ class ExecutorCache:
                                 demote=(state.demoted if state is not None
                                         else ()),
                                 overrides=overrides)
+            self._t_end(pspan)
             self.telemetry.count("plans_built")
             reused = sum(d.reused for d in plan.decisions.values())
             if reused:
@@ -397,6 +435,8 @@ class ExecutorCache:
             return False
         self.telemetry.count("device_lost")
         self.telemetry.record_device_error(device_id, lost=True)
+        self._t_mark("mesh.shrink", device=device_id,
+                     alive=self.health.n_alive, epoch=self.health.epoch)
         stale = [k for k, ex in self._lru.items()
                  if ex.shard is not None and device_id in ex.device_ids]
         for k in stale:
@@ -439,6 +479,9 @@ class ExecutorCache:
                 state, demoted=state.demoted | {site})
         else:
             state = dataclasses.replace(state, level=2)
+        self._t_mark("ladder.degrade", bucket=key.batch,
+                     resolution=key.resolution, site=site,
+                     level=state.level, demoted=sorted(state.demoted))
         return self._apply_degrade(key, state, "degraded")
 
     def pin_fp(self, batch: int, resolution: int) -> DegradeState:
@@ -449,6 +492,8 @@ class ExecutorCache:
         key = self._key(batch, resolution)
         state = dataclasses.replace(
             self._degrade.get(key, DegradeState()), pinned_fp=True)
+        self._t_mark("ladder.pin_fp", bucket=key.batch,
+                     resolution=key.resolution, level=state.level)
         return self._apply_degrade(key, state, "pinned_fp")
 
     # -- introspection / lifecycle --------------------------------------

@@ -103,9 +103,13 @@ class FaultPlan:
     no-op, which is what the no-fault drift gates run against.
     """
 
-    def __init__(self, *specs: FaultSpec):
+    def __init__(self, *specs: FaultSpec, tracer=None):
         self.specs = list(specs)
         self.fired: dict[str, int] = {}
+        # optional obs.trace.Tracer: every consumed firing becomes a
+        # zero-duration "fault.injected" mark on the "faults" track, so
+        # a chaos trace shows each injection next to what it broke
+        self.tracer = tracer
 
     # -- schedule state --------------------------------------------------
     def armed(self, point: str, **ctx) -> Optional[FaultSpec]:
@@ -120,9 +124,16 @@ class FaultPlan:
         """Every scheduled fault has fired its full budget."""
         return all(s.times == 0 for s in self.specs)
 
-    def _consume(self, spec: FaultSpec) -> None:
+    def _consume(self, spec: FaultSpec, **ctx) -> None:
         spec.times -= 1
         self.fired[spec.point] = self.fired.get(spec.point, 0) + 1
+        if self.tracer is not None:
+            safe = {k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in ctx.items()
+                    if isinstance(v, (bool, int, float, str, tuple))}
+            self.tracer.end(self.tracer.begin(
+                "fault.injected", track="faults", point=spec.point,
+                site=spec.site, note=spec.note, **safe))
 
     # -- injection -------------------------------------------------------
     def fire(self, point: str, **ctx) -> None:
@@ -130,7 +141,7 @@ class FaultPlan:
         spec = self.armed(point, **ctx)
         if spec is None:
             return
-        self._consume(spec)
+        self._consume(spec, **ctx)
         msg = (f"injected fault at {point} (ctx={ctx})"
                + (f": {spec.note}" if spec.note else ""))
         if point == "kernel.launch":
@@ -151,7 +162,7 @@ class FaultPlan:
         spec = self.armed(point, **ctx)
         if spec is None:
             return out
-        self._consume(spec)
+        self._consume(spec, **ctx)
         return out.at[..., 0].set(jnp.nan)
 
     # -- autotuner hook --------------------------------------------------

@@ -112,6 +112,11 @@ class Request:
     status: str = "pending"              # pending | completed | shed | failed
     error: Optional[ReproError] = None   # typed cause for shed/failed
     retries: int = 0                     # failed dispatch attempts so far
+    # tracing handles (obs.trace spans; None when no tracer is threaded):
+    # ``span`` is the request's root span (submit -> terminal), ``qspan``
+    # the currently-open queue-residency child (one per queue/backoff stay)
+    span: Optional[object] = dataclasses.field(default=None, repr=False)
+    qspan: Optional[object] = dataclasses.field(default=None, repr=False)
 
     @property
     def resolution(self) -> int:
@@ -242,9 +247,13 @@ class MicroBatchScheduler:
                  max_retries: int = 4, backoff_ms: float = 10.0,
                  backoff_base: float = 2.0, faults=None,
                  watchdog_ms: float | None = None,
-                 result_cache: int | None = None):
+                 result_cache: int | None = None, tracer=None):
         self.cache = cache
         self.params = params
+        # obs.trace.Tracer (or None).  Span recording is host-clock only
+        # — begin/end cost two clock reads and a deque append; nothing
+        # on the dispatch path synchronizes with the device.
+        self.tracer = tracer
         self.policy = policy if policy is not None else BucketedPolicy()
         self.telemetry = (telemetry if telemetry is not None
                           else cache.telemetry)
@@ -258,13 +267,31 @@ class MicroBatchScheduler:
         self.results = ResultCache(result_cache) \
             if result_cache is not None else None
         self._queues: dict[int, collections.deque] = {}
-        # in flight: (device_out, requests, bucket_key, executor, t_disp)
+        # in flight: (device_out, requests, bucket_key, executor, t_disp,
+        #             device_span) — the watchdog indexes t_disp at [4]
         self._pending: list = []
         self._retry: list = []       # (not_before, resolution, requests)
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
+
+    # -- tracing helpers (no-ops without a tracer) -----------------------
+    def _t_end(self, span, **attrs) -> None:
+        if self.tracer is not None and span is not None:
+            self.tracer.end(span, **attrs)
+
+    def _t_event(self, req: Request, name: str, **attrs) -> None:
+        if self.tracer is not None:
+            self.tracer.event(req.span, name, **attrs)
+
+    def _t_close(self, req: Request, status: str) -> None:
+        """Close a request's open spans at a terminal transition."""
+        if self.tracer is None:
+            return
+        self._t_end(req.qspan)
+        req.qspan = None
+        self._t_end(req.span, status=status)
 
     # -- terminal states (the no-lost / no-duplicated invariant) ---------
     def _shed(self, req: Request, err: ReproError) -> None:
@@ -274,11 +301,15 @@ class MicroBatchScheduler:
         self.telemetry.count(
             "shed_deadline" if isinstance(err, DeadlineExceeded)
             else "shed_capacity")
+        self._t_event(req, "shed", error=type(err).__name__)
+        self._t_close(req, "shed")
 
     def _fail(self, req: Request, err: ReproError) -> None:
         assert req.status == "pending", (req.rid, req.status)
         req.status, req.error = "failed", err
         self.telemetry.count("failed")
+        self._t_event(req, "failed", error=type(err).__name__)
+        self._t_close(req, "failed")
 
     # -- admission -------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -289,6 +320,9 @@ class MicroBatchScheduler:
         with self._lock:
             req.arrival = self.clock()
             self.telemetry.count("submitted")
+            if self.tracer is not None:
+                req.span = self.tracer.begin(
+                    "request", rid=req.rid, resolution=req.resolution)
             if self.results is not None:
                 hit = self.results.get(req.image)
                 if hit is not None:
@@ -296,6 +330,8 @@ class MicroBatchScheduler:
                     req.status = "completed"
                     self.telemetry.count("result_cache_hit")
                     self.telemetry.count("completed")
+                    self._t_event(req, "result_cache_hit")
+                    self._t_close(req, "completed")
                     return True
                 self.telemetry.count("result_cache_miss")
             if self.faults is not None:
@@ -311,6 +347,8 @@ class MicroBatchScheduler:
                     f"admission queue full ({self.max_queue_depth}); "
                     f"request {req.rid} shed"))
                 return False
+            if self.tracer is not None:
+                req.qspan = self.tracer.begin("queue", parent=req.span)
             self._queues.setdefault(req.resolution,
                                     collections.deque()).append(req)
             self._work.notify_all()
@@ -403,6 +441,13 @@ class MicroBatchScheduler:
                     if take == 0:
                         break
                     reqs = [q.popleft() for _ in range(take)]
+                    if self.tracer is not None:
+                        with self.tracer.span(
+                                "form", resolution=res, bucket=size,
+                                rids=[r.rid for r in reqs]):
+                            for r in reqs:
+                                self._t_end(r.qspan)
+                                r.qspan = None
                     self._dispatch(res, reqs, size)
                     dispatched += take
             return dispatched
@@ -411,9 +456,16 @@ class MicroBatchScheduler:
                   bucket: int) -> None:
         now = self.clock()
         key = (bucket, resolution, self.cache.precision)
+        rids = [r.rid for r in reqs]
+        dspan = None
+        if self.tracer is not None:
+            dspan = self.tracer.begin(
+                "dispatch", rids=rids, bucket=bucket,
+                resolution=resolution, precision=self.cache.precision)
         try:
             ex = self.cache.get(bucket, resolution)
         except ReproError as e:
+            self._t_end(dspan, error=type(e).__name__)
             self._on_failure(resolution, reqs, key, e)
             return
         imgs = np.stack([np.asarray(r.image, np.float32) for r in reqs])
@@ -424,6 +476,7 @@ class MicroBatchScheduler:
         try:
             out = ex(self.params, jnp.asarray(imgs))  # async, no host sync
         except ReproError as e:
+            self._t_end(dspan, error=type(e).__name__)
             self._on_failure(resolution, reqs, key, e, ex=ex)
             return
         self.telemetry.record_dispatch(
@@ -433,7 +486,15 @@ class MicroBatchScheduler:
         if getattr(ex, "shard", None) is not None:
             self.telemetry.record_device_dispatch(
                 ex.device_ids, len(reqs), bucket)
-        self._pending.append((out, reqs, key, ex, now))
+        # the "device" span is the host-observed in-flight window:
+        # dispatch -> materialization.  No device sync happens here.
+        devspan = None
+        if self.tracer is not None:
+            devspan = self.tracer.begin(
+                "device", rids=rids, bucket=bucket, resolution=resolution,
+                devices=list(getattr(ex, "device_ids", ()) or ()))
+        self._pending.append((out, reqs, key, ex, now, devspan))
+        self._t_end(dspan)
 
     # -- failure handling: retry/backoff + the degradation ladder --------
     def _on_failure(self, resolution: int, reqs: List[Request], key,
@@ -461,6 +522,7 @@ class MicroBatchScheduler:
         for r in reqs:
             r.retries = attempt
         bucket = key[0]
+        blamed = getattr(err, "site", None)
         if isinstance(err, DeviceLostError):
             dev = err.device
             if dev is None and ex is not None:
@@ -470,12 +532,25 @@ class MicroBatchScheduler:
             if getattr(self.cache, "on_device_lost", None) is not None \
                     and self.cache.on_device_lost(dev):
                 self.telemetry.count("device_failover", len(reqs))
+                for r in reqs:
+                    self._t_event(r, "failover", device=dev,
+                                  error=type(err).__name__)
         elif isinstance(err, NumericsError):
-            self.cache.pin_fp(bucket, resolution)
+            # fake caches in tests may return None; attrs degrade softly
+            state = self.cache.pin_fp(bucket, resolution)
+            for r in reqs:
+                self._t_event(r, "pin_fp", site=blamed,
+                              level=getattr(state, "level", None),
+                              error=type(err).__name__)
         elif not isinstance(err, MeshExhausted) \
                 and (not err.transient or attempt >= 2):
-            self.cache.degrade(bucket, resolution,
-                               site=getattr(err, "site", None))
+            state = self.cache.degrade(bucket, resolution, site=blamed)
+            for r in reqs:
+                self._t_event(r, "degrade", site=blamed,
+                              level=getattr(state, "level", None),
+                              demoted=sorted(getattr(state, "demoted",
+                                                     ()) or ()),
+                              error=type(err).__name__)
         if isinstance(err, MeshExhausted) \
                 or getattr(self.cache, "mesh_exhausted", False):
             if not isinstance(err, MeshExhausted):
@@ -491,6 +566,14 @@ class MicroBatchScheduler:
         self.telemetry.count("retries", len(reqs))
         not_before = self.clock() + self.backoff_ms / 1e3 \
             * self.backoff_base ** (attempt - 1)
+        if self.tracer is not None:
+            for r in reqs:
+                self._t_event(r, "retry", attempt=attempt,
+                              error=type(err).__name__, site=blamed)
+                # backoff is queue time: a fresh residency span
+                self._t_end(r.qspan)
+                r.qspan = self.tracer.begin("queue", parent=r.span,
+                                            retry=attempt)
         self._retry.append((not_before, resolution, list(reqs)))
 
     # -- completion ------------------------------------------------------
@@ -510,18 +593,27 @@ class MicroBatchScheduler:
             self._check_watchdog()
             done = 0
             pending, self._pending = self._pending, []
-            for out, reqs, key, ex, _t in pending:
+            for out, reqs, key, ex, _t, devspan in pending:
                 try:
                     arr = np.asarray(out)          # sync on this chunk
                 except ReproError as e:
+                    self._t_end(devspan, error=type(e).__name__)
                     self._on_failure(key[1], reqs, key, e, ex=ex)
                     continue
                 except Exception as e:             # untyped XLA crash
+                    self._t_end(devspan, error=type(e).__name__)
                     self._on_failure(key[1], reqs, key, ExecutorError(
                         f"materializing executor {key} output failed: "
                         f"{e}"), ex=ex)
                     continue
+                self._t_end(devspan)
+                fspan = None
+                if self.tracer is not None:
+                    fspan = self.tracer.begin(
+                        "finalize", rids=[r.rid for r in reqs],
+                        bucket=key[0], resolution=key[1])
                 if not np.all(np.isfinite(arr[:len(reqs)])):
+                    self._t_end(fspan, error="NumericsError")
                     self._on_failure(key[1], reqs, key, NumericsError(
                         f"non-finite logits delivered by executor {key} "
                         f"(int8 epilogue blow-up signature)", key=key),
@@ -538,8 +630,10 @@ class MicroBatchScheduler:
                     if self.results is not None and healthy \
                             and self.results.put(r.image, arr[i]):
                         self.telemetry.count("result_cache_store")
+                    self._t_close(r, "completed")
                 self.telemetry.record_latency(
                     key, [(t - r.arrival) * 1e3 for r in reqs])
+                self._t_end(fspan)
                 done += len(reqs)
             self.telemetry.count("completed", done)
             if done:
@@ -566,8 +660,11 @@ class MicroBatchScheduler:
             (hung if now - entry[4] > self.watchdog_ms / 1e3
              else keep).append(entry)
         self._pending = keep
-        for _out, reqs, key, ex, t in hung:
+        for _out, reqs, key, ex, t, devspan in hung:
             self.telemetry.count("watchdog_fired")
+            self._t_end(devspan, error="watchdog")
+            for r in reqs:
+                self._t_event(r, "watchdog_fired", bucket=key[0])
             self._on_failure(key[1], reqs, key, DeadlineExceeded(
                 f"batch {key} in flight for {(now - t) * 1e3:.0f} ms "
                 f"(watchdog bound {self.watchdog_ms:g} ms) — declared "

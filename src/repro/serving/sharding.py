@@ -86,6 +86,9 @@ class DeviceHealth:
     devices: tuple
     _dead: set = field(default_factory=set)
     epoch: int = 0
+    # optional obs.trace.Tracer: mesh deaths become zero-duration marks
+    # on the "mesh" track (ExecutorCache threads it through)
+    tracer: object = field(default=None, repr=False, compare=False)
 
     @classmethod
     def of(cls, devices=None) -> "DeviceHealth":
@@ -113,6 +116,10 @@ class DeviceHealth:
             return False
         self._dead.add(device_id)
         self.epoch += 1
+        if self.tracer is not None:
+            self.tracer.end(self.tracer.begin(
+                "device.lost", track="mesh", device=device_id,
+                alive=self.n_alive, epoch=self.epoch))
         return True
 
     def attribute(self, err, shard: ShardSpec | None) -> int | None:

@@ -76,8 +76,10 @@ class BucketStats:
             "queue_depth_p50": percentile(self.queue_depth, 0.5),
             "wait_ms_p50": percentile(self.wait_ms, 0.5),
             "wait_ms_p95": percentile(self.wait_ms, 0.95),
+            "wait_ms_p99": percentile(self.wait_ms, 0.99),
             "latency_ms_p50": percentile(self.latency_ms, 0.5),
             "latency_ms_p95": percentile(self.latency_ms, 0.95),
+            "latency_ms_p99": percentile(self.latency_ms, 0.99),
         }
 
 
@@ -201,7 +203,8 @@ class Telemetry:
             "counters": dict(self.counters),
             "series": {
                 name: {"n": len(v), "p50": percentile(v, 0.5),
-                       "p95": percentile(v, 0.95)}
+                       "p95": percentile(v, 0.95),
+                       "p99": percentile(v, 0.99)}
                 for name, v in self.series.items()},
             "buckets": {"/".join(str(k) for k in key): b.snapshot()
                         for key, b in sorted(self.buckets.items(),
@@ -214,10 +217,18 @@ class Telemetry:
         }
 
     def table(self) -> str:
-        """Per-bucket pretty table (benchmark / EXPERIMENTS.md output)."""
+        """Per-bucket pretty table (benchmark / EXPERIMENTS.md output).
+
+        Empty observation series render as ``-`` (``percentile`` of an
+        empty ring is NaN by contract — the *renderer* translates, the
+        snapshot keeps NaN for machine consumers to detect)."""
+        def cell(v: float, width: int, align: str = ">") -> str:
+            return (f"{'-':{align}{width}}" if math.isnan(v)
+                    else f"{v:{align}{width}.1f}")
+
         head = (f"{'bucket':<22} {'disp':>5} {'samples':>8} {'pad':>5} "
-                f"{'occ':>6} {'q p50':>6} {'wait p50/p95 ms':>16} "
-                f"{'lat p50/p95 ms':>16}")
+                f"{'occ':>6} {'q p50':>6} {'wait p50/p95/p99 ms':>20} "
+                f"{'lat p50/p95/p99 ms':>20}")
         lines = [head, "-" * len(head)]
         for key, b in sorted(self.buckets.items(), key=lambda kv: str(kv[0])):
             s = b.snapshot()
@@ -225,9 +236,13 @@ class Telemetry:
             lines.append(
                 f"{name:<22} {b.dispatches:>5} {b.samples:>8} "
                 f"{b.padded:>5} {b.occupancy:>5.0%} "
-                f"{s['queue_depth_p50']:>6.1f} "
-                f"{s['wait_ms_p50']:>7.1f}/{s['wait_ms_p95']:<8.1f} "
-                f"{s['latency_ms_p50']:>7.1f}/{s['latency_ms_p95']:<8.1f}")
+                f"{cell(s['queue_depth_p50'], 6)} "
+                f"{cell(s['wait_ms_p50'], 7)}/"
+                f"{cell(s['wait_ms_p95'], 1, '<')}/"
+                f"{cell(s['wait_ms_p99'], 1, '<')} "
+                f"{cell(s['latency_ms_p50'], 7)}/"
+                f"{cell(s['latency_ms_p95'], 1, '<')}/"
+                f"{cell(s['latency_ms_p99'], 1, '<')}")
         lines.append(
             f"{'TOTAL':<22} {self.total('dispatches'):>5} "
             f"{self.total('samples'):>8} {self.total('padded'):>5} "

@@ -80,12 +80,20 @@ class VisionServeConfig:
 class VisionEngine:
     def __init__(self, params, cfg: EfficientViTConfig,
                  serve_cfg: VisionServeConfig = VisionServeConfig(), *,
-                 faults=None):
+                 faults=None, tracer=None):
         assert serve_cfg.policy in ("bucketed", "fixed"), serve_cfg.policy
         self.params = params
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.faults = faults  # serving.faults.FaultPlan (chaos testing)
+        # one obs.trace.Tracer threaded through the whole runtime: the
+        # executor cache, every scheduler this engine vends, and the
+        # fault plan (if it doesn't already carry one).  None = tracing
+        # off, zero overhead.
+        self.tracer = tracer
+        if faults is not None and tracer is not None \
+                and getattr(faults, "tracer", None) is None:
+            faults.tracer = tracer
         artifact = serve_cfg.artifact
         if isinstance(artifact, str):
             from repro.search.artifact import ScheduleArtifact
@@ -114,7 +122,7 @@ class VisionEngine:
             use_plan=serve_cfg.use_plan, autotune=serve_cfg.autotune,
             capacity=serve_cfg.capacity, telemetry=self.telemetry,
             epilogues=serve_cfg.epilogues, faults=faults,
-            devices=serve_cfg.devices, artifact=artifact)
+            devices=serve_cfg.devices, artifact=artifact, tracer=tracer)
         # primary executor built eagerly: plan construction (autotune
         # sweeps included) happens here, outside the request loop, and
         # .program / .plan keep their pre-runtime meaning
@@ -184,9 +192,24 @@ class VisionEngine:
         kw.setdefault("faults", self.faults)
         kw.setdefault("result_cache", self.serve_cfg.result_cache)
         kw.setdefault("watchdog_ms", self.serve_cfg.watchdog_ms)
+        kw.setdefault("tracer", self.tracer)
         return MicroBatchScheduler(self.cache, self.params, policy=policy,
                                    telemetry=self.telemetry, clock=clock,
                                    **kw)
+
+    def export_trace(self, path: str) -> dict:
+        """Write the engine's request timeline as Chrome trace JSON
+        (``chrome://tracing`` / Perfetto).  Requires a tracer."""
+        if self.tracer is None:
+            raise ValueError("VisionEngine built without tracer=; "
+                             "nothing to export")
+        return self.tracer.export(path)
+
+    def metrics(self):
+        """A ``repro.obs.MetricsRegistry`` over this engine's telemetry
+        (Prometheus text / JSON export)."""
+        from repro.obs import MetricsRegistry
+        return MetricsRegistry(telemetry=self.telemetry)
 
     def serve(self, requests: list[Request]) -> np.ndarray:
         """Serve a list of ``scheduler.Request``s (mixed resolutions and
