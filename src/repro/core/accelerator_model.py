@@ -331,6 +331,14 @@ def site_breakdown(program: Program, hw: HwConfig = HwConfig(), *,
     given; the offline schedule search passes the serving precision so
     fp and int8 candidate schedules are comparable.
 
+    Super-site members (``SiteDecision.group`` set by the planner's
+    grouping pass) keep their per-site compute/DRAM rows — the chain
+    does the same MACs — but the group's ONE launch lands on the first
+    member's row (0 for the rest), and the member rows carry ``blocks:
+    {}``: the chain kernel bands over output rows itself, so the
+    member's per-site tile choice no longer runs (the search evaluator
+    scores the launch delta, not stale per-site tiling overcompute).
+
     Scheduling each site separately is exact, not an approximation:
     ``core.program.site_records`` guarantees no fused pair spans a site
     boundary.  This is the evaluator surface of the search subsystem —
@@ -339,6 +347,8 @@ def site_breakdown(program: Program, hw: HwConfig = HwConfig(), *,
     from repro.core.program import site_records
 
     assert default_precision in ("fp", "int8"), default_precision
+    groups = getattr(plan, "groups", None) or {}
+    group_first = {g.members[0] for g in groups.values()}
     rows: list[dict] = []
     for site, ops in site_records(program):
         if not include_head and site.stage == "head":
@@ -359,14 +369,19 @@ def site_breakdown(program: Program, hw: HwConfig = HwConfig(), *,
                 extra = 4.0 * n
                 dram += extra
                 cycles += extra / hw.bytes_per_cycle
+        grouped = d is not None and bool(getattr(d, "group", ""))
         rows.append({
             "site": site.name, "kind": site.kind, "stage": site.stage,
             "fused": bool(fused), "precision": prec,
             "reason": d.reason if d is not None else "-",
-            "blocks": dict(d.blocks) if d is not None else {},
+            "blocks": {} if grouped else (
+                dict(d.blocks) if d is not None else {}),
+            "group": d.group if grouped else "",
             # scheduled op groups = launches: fusion merges paired ops
-            # into one, the reference path launches every op separately
-            "launches": len(sched),
+            # into one, the reference path launches every op separately;
+            # a super-site member's launch collapses onto the first row
+            "launches": (1 if site.name in group_first else 0) if grouped
+            else len(sched),
             "macs": int(sum(s.macs for s in sched)),
             "compute_cycles": float(sum(s.compute_cycles for s in sched)),
             "dram_bytes": float(dram),

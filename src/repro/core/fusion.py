@@ -35,10 +35,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
-__all__ = ["SiteDecision", "SiteOverride", "FusionPlan", "build_plan",
-           "plan_program", "plan_report", "report_dict", "launch_counts",
-           "site_traffic", "EXPECTED_B1_FUSED_LAUNCHES",
-           "EXPECTED_B1_FUSED_LAUNCHES_INT8"]
+__all__ = ["SiteDecision", "SiteOverride", "GroupDecision", "FusionPlan",
+           "build_plan", "plan_program", "plan_report", "report_dict",
+           "launch_counts", "site_traffic", "EXPECTED_B1_FUSED_LAUNCHES",
+           "EXPECTED_B1_FUSED_LAUNCHES_INT8",
+           "EXPECTED_B1_SUPERSITE_LAUNCHES",
+           "EXPECTED_B1_SUPERSITE_LAUNCHES_INT8"]
 
 # Drift gate: one fused launch per fusible site of EfficientViT-B1
 # (1 stem DSConv + 2+3 MBConv + 2 downsamples + (3+4) x (MSA + MBConv)).
@@ -50,6 +52,14 @@ EXPECTED_B1_FUSED_LAUNCHES = 22
 # XLA convs, so each fused int8 MSA site counts ``n_branches`` launches
 # (1 attention core + 1 per aggregation scale): 22 + 7 msa x 1 scale.
 EXPECTED_B1_FUSED_LAUNCHES_INT8 = 29
+# With the inter-layer super-site pass (``kernels/supersite``) the
+# planner collapses each stage's consecutive conv chain into ONE launch:
+# B1 groups S1 [mb0, mb1] (-1 launch) and S2 [mb0, mb1, mb2] (-2).
+# stem.ds0 is a run of one and the S3/S4 conv sites interleave with MSA
+# sites, so no other run qualifies.  The per-site numbers above remain
+# the ``supersites=False`` expectation.
+EXPECTED_B1_SUPERSITE_LAUNCHES = 19           # 22 - 3
+EXPECTED_B1_SUPERSITE_LAUNCHES_INT8 = 26      # 29 - 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +80,10 @@ class SiteDecision:
     #                           output (producer side), None -> fp
     q_in: bool = False     # the producer's epilogue delivers this site's
     #                        input already quantized (int8 boundary)
+    group: str = ""        # super-site membership ("" = ungrouped): the
+    #                        grouping pass stamps members with the
+    #                        ``GroupDecision`` name so artifacts and the
+    #                        accounting can reconstruct the fusion groups
 
     def to_dict(self) -> dict:
         """JSON-serializable form (schedule artifacts, benchmark dumps)."""
@@ -78,7 +92,7 @@ class SiteDecision:
             "name": self.name, "kind": self.kind, "fused": self.fused,
             "reason": self.reason, "blocks": dict(self.blocks),
             "shape": list(self.shape), "precision": self.precision,
-            "reused": self.reused, "q_in": self.q_in,
+            "reused": self.reused, "q_in": self.q_in, "group": self.group,
             "epilogue": None if ep is None else {
                 "out_dtype": ep.out_dtype, "scale": ep.scale,
                 "residual": ep.residual},
@@ -111,17 +125,45 @@ class SiteOverride:
     precision: str | None = None      # None -> the plan-level request
     blocks: Mapping[str, int] | None = None   # None -> donor/tuner path
     reason: str = "search"
+    group_break: bool | None = None   # True: the super-site grouping pass
+    #                                   must not extend a chain ACROSS this
+    #                                   site (it may still START one here) —
+    #                                   the search's split/merge lever over
+    #                                   fusion-group boundaries
 
     @classmethod
     def from_decision(cls, d: "SiteDecision | dict") -> "SiteOverride":
         """Pin a previously frozen decision (e.g. a ``ScheduleArtifact``
-        entry) so replanning reproduces it."""
+        entry) so replanning reproduces it.  ``group_break`` is left for
+        the artifact's own group post-pass (``ScheduleArtifact.
+        overrides_for``) — a single decision row cannot know its run
+        context."""
         if isinstance(d, SiteDecision):
             d = d.to_dict()
         return cls(fused=bool(d["fused"]),
                    precision=d.get("precision"),
                    blocks=dict(d.get("blocks") or {}),
                    reason=d.get("reason", "search"))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupDecision:
+    """One super-site fusion group frozen into a plan: ``members`` name
+    the consecutive conv sites the executor collapses into a single
+    ``kernels/supersite`` launch (``core.program.SuperSite.of`` re-derives
+    the validated chain from the program at execute time)."""
+    name: str                 # e.g. "S1.ss0"
+    members: tuple            # member site names, program order
+    precision: str = "fp"     # uniform across the chain
+    blocks: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    #                           fp: {"block_rows": R}; int8: {} (whole-map)
+    shape: tuple = ()         # in_shape + out_shape of the chain
+    kind: str = "supersite"
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "members": list(self.members),
+                "precision": self.precision, "blocks": dict(self.blocks),
+                "shape": list(self.shape), "kind": self.kind}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +175,10 @@ class FusionPlan:
     # producers (e.g. a quantized stem conv feeding a fused int8 DSConv),
     # which have no SiteDecision of their own
     epilogues: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    # super-site fusion groups by group name (the grouping pass's output;
+    # member decisions carry the back-pointer in ``SiteDecision.group``)
+    groups: Mapping[str, GroupDecision] = dataclasses.field(
+        default_factory=dict)
 
     def get(self, name):
         return self.decisions.get(name)
@@ -313,6 +359,97 @@ def assign_epilogues(program, params, decisions):
     return epilogues, q_in
 
 
+def _group_supersites(program, decisions, overrides):
+    """The inter-layer super-site pass: maximal runs of consecutive,
+    same-stage, uniform-precision fused conv sites -> ``GroupDecision``
+    fusion groups, each executed as ONE ``kernels/supersite`` launch.
+
+    Runs AFTER epilogue assignment (the int8 fit check needs the exit
+    member's epilogue) and mutates ``decisions`` in place: members are
+    stamped with ``group=<name>``; an fp site the per-site pass demoted
+    for VMEM (reason ``"vmem"``) is *rescued* into a group when the
+    banded chain fits — spatial tiling is exactly what the lone whole-map
+    kernel lacked — and becomes ``fused=True, reason="ok"``.  Any other
+    demotion reason (``"fault"``, ``"search"``, ``"disabled"``, precision
+    mismatches) excludes the site and splits the run around it, which is
+    how the serving degradation ladder's per-site demotions break groups
+    back into member launches instead of falling to reference wholesale.
+    """
+    from repro.core.program import SUPERSITE_KINDS, SuperSite
+    from repro.kernels.supersite.ops import (
+        VMEM_BUDGET_BYTES, choose_block_rows, supersite_vmem_bytes_int8)
+
+    overrides = overrides or {}
+    groups: dict[str, GroupDecision] = {}
+    counters: dict[str, int] = {}
+    run: list = []                       # [(site, decision), ...]
+
+    def member_decision(site):
+        if site.kind not in SUPERSITE_KINDS:
+            return None
+        d = decisions.get(site.name)
+        if d is None:
+            return None
+        if d.fused and d.reason == "ok":
+            return d
+        # the VMEM rescue: only fp — int8 grouping is whole-map, so a
+        # site that didn't fit alone won't fit inside a chain either,
+        # and the epilogue pass already planned around its fp boundary
+        if not d.fused and d.reason == "vmem" and d.precision == "fp":
+            return d
+        return None
+
+    def flush():
+        nonlocal run
+        members, run = run, []
+        if len(members) < 2:
+            return
+        names = tuple(s.name for s, _ in members)
+        prec = members[0][1].precision
+        sup = SuperSite.of(program, names)       # validates the chain
+        if prec == "fp":
+            rows = choose_block_rows(sup)
+            if rows is None:
+                return                           # no band height fits
+            blocks = {"block_rows": rows}
+        else:
+            ep = members[-1][1].epilogue
+            keep_fp = (ep is not None and ep.emits_q
+                       and ep.residual != "none")
+            if supersite_vmem_bytes_int8(
+                    sup, keep_fp=keep_fp) > VMEM_BUDGET_BYTES:
+                return                           # whole-map doesn't fit
+            blocks = {}
+        stage = names[0].split(".", 1)[0]
+        i = counters.get(stage, 0)
+        counters[stage] = i + 1
+        gname = f"{stage}.ss{i}"
+        groups[gname] = GroupDecision(
+            gname, names, precision=prec, blocks=blocks,
+            shape=tuple(sup.in_shape) + tuple(sup.out_shape))
+        for s, d in members:
+            decisions[s.name] = dataclasses.replace(
+                d, fused=True, reason="ok", group=gname)
+
+    prev_stage = None
+    for site in program.sites:
+        d = member_decision(site)
+        if d is None:
+            flush()
+            prev_stage = None
+            continue
+        ov = overrides.get(site.name)
+        stage = site.name.split(".", 1)[0]
+        if run and (bool(getattr(ov, "group_break", None))
+                    or stage != prev_stage
+                    or d.precision != run[0][1].precision):
+            flush()
+        run.append((site, d))
+        prev_stage = stage
+    flush()
+    return groups
+
+
 def plan_program(program, params, *, fuse_dsconv: bool = True,
                  fuse_mbconv: bool = True, fuse_msa: bool = True,
                  autotune: bool = True, interpret: bool | None = None,
@@ -320,7 +457,8 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
                  reuse: FusionPlan | None = None,
                  epilogues: bool = True,
                  demote=(),
-                 overrides: Mapping[str, SiteOverride] | None = None
+                 overrides: Mapping[str, SiteOverride] | None = None,
+                 supersites: bool = True
                  ) -> FusionPlan:
     """Freeze per-site routing for a lowered ``core.program.Program``.
 
@@ -365,6 +503,13 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
     adds stay fp).  ``False`` keeps the legacy consumer-side-quantize
     dataflow — an A/B lever the serving executor cache keys on.
 
+    ``supersites`` (default on) runs the inter-layer grouping pass
+    (``_group_supersites``) last: maximal runs of >=2 consecutive fused
+    conv sites collapse into single-launch ``FusionPlan.groups`` with
+    the chain's weights packed VMEM-resident once per launch.  An
+    override's ``group_break`` splits a run at that site (the offline
+    search's boundary lever); ``False`` keeps per-site launches.
+
     Runs outside jit: autotune sweeps (when ``autotune=True`` and the
     cache is cold) time the real kernels on synthetic inputs here, never
     at trace time.
@@ -406,8 +551,11 @@ def plan_program(program, params, *, fuse_dsconv: bool = True,
             if ep is not None or arrives_q:
                 decisions[name] = dataclasses.replace(
                     d, epilogue=ep, q_in=arrives_q)
+    groups: dict[str, GroupDecision] = {}
+    if supersites:
+        groups = _group_supersites(program, decisions, overrides)
     return FusionPlan(decisions=decisions, interpret=interpret,
-                      epilogues=ep_map)
+                      epilogues=ep_map, groups=groups)
 
 
 def build_plan(params, cfg, *, batch: int = 1, image_size: int | None = None,
@@ -586,25 +734,57 @@ def plan_report(plan: FusionPlan) -> list[dict]:
     two agree within the residual-fp correction once producer-side
     emission covers the chain, which is exactly what
     ``benchmarks/e2e_latency.py`` gates.
+
+    Super-site members (``SiteDecision.group``) report what the single
+    chain launch actually moves: the group's one launch lands on its
+    FIRST member's row (0 for the rest); ``hbm_delivered`` is the chain
+    entry boundary on the first member, 0 for interior members (their
+    boundaries live in VMEM), and the exit boundary (per the exit
+    epilogue) on the last.  ``hbm_w`` keeps the per-site weight bytes —
+    the resident pack reads each member's weights exactly once per
+    launch, same total as the per-site convention.
     """
+    first_of, last_of = {}, {}
+    for g in plan.groups.values():
+        first_of[g.members[0]] = g
+        last_of[g.members[-1]] = g
     rows = []
     for d in plan.decisions.values():
         unf, fus, w_bytes, launches = _site_accounting(d.kind, d.shape,
                                                        d.precision)
         hbm_fused = fus if d.fused else unf
+        grouped = bool(d.group) and d.kind in ("mbconv", "dsconv")
+        if grouped:
+            launches_fused = 1 if d.name in first_of else 0
+            B, H, W, C, _, F, stride = d.shape
+            delivered = 0
+            if d.name in first_of:
+                delivered += B * H * W * C * (1 if d.q_in else 4)
+            if d.name in last_of:
+                outn = (B * (H // stride) * (W // stride) * F
+                        if d.kind == "mbconv" else B * H * W * F)
+                ep = d.epilogue
+                if ep is None or not ep.emits_q:
+                    delivered += outn * 4
+                else:
+                    delivered += outn * (1 + (4 if ep.keeps_fp else 0))
+        else:
+            launches_fused = launches[1] if d.fused else launches[0]
+            delivered = _delivered_bytes(d.kind, d.shape, d.fused,
+                                         unf, fus, d.q_in, d.epilogue)
         rows.append({
             "site": d.name, "kind": d.kind, "fused": d.fused,
             "reason": d.reason, "precision": d.precision,
+            "group": d.group,
             "hbm_unfused": unf, "hbm_fused": hbm_fused,
             "saving_x": unf / fus if d.fused and fus else 1.0,
             "hbm_w": w_bytes,
             "hbm_total": hbm_fused + w_bytes,
-            "hbm_delivered": _delivered_bytes(d.kind, d.shape, d.fused,
-                                              unf, fus, d.q_in, d.epilogue),
+            "hbm_delivered": delivered,
             "q_in": d.q_in,
             "epilogue": d.epilogue,
             "launches_ref": launches[0],
-            "launches_fused": launches[1] if d.fused else launches[0],
+            "launches_fused": launches_fused,
         })
     return rows
 

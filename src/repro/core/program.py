@@ -39,8 +39,9 @@ from repro.core.efficientvit import (
     B1, EfficientViTConfig, OpRecord, _act, conv_bn_act, dsconv, mbconv)
 from repro.core.relu_attention import MSAConfig, msa
 
-__all__ = ["Epilogue", "EPILOGUE_FP", "Site", "Program", "lower", "execute",
-           "manifest", "site_records", "FUSIBLE_KINDS", "params_at"]
+__all__ = ["Epilogue", "EPILOGUE_FP", "Site", "SuperSite", "Program",
+           "lower", "execute", "manifest", "site_records", "FUSIBLE_KINDS",
+           "SUPERSITE_KINDS", "params_at"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,9 @@ EPILOGUE_FP = Epilogue()
 # moment ``lower`` emits its Site.  FUSIBLE_KINDS lists the built-ins.
 STRUCTURAL_KINDS = ("conv_bn", "gap", "fc")
 FUSIBLE_KINDS = ("dsconv", "mbconv", "msa")
+# Conv-chain kinds the inter-layer super-site pass may group into one
+# launch (core.fusion.plan_program's grouping pass + kernels/supersite).
+SUPERSITE_KINDS = ("dsconv", "mbconv")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +128,89 @@ class Site:
         prefix = f"{self.stage}."
         return self.name[len(prefix):] if self.name.startswith(prefix) \
             else self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperSite:
+    """A chain of consecutive conv Sites lowered as ONE Pallas launch.
+
+    The paper's *inter-layer* TMP fusion at the IR level: member sites'
+    intermediate activations live only in VMEM scratch, and member
+    weights are packed once into a resident block shared across grid
+    steps (``kernels/supersite``).  Built by the fusion planner's
+    grouping pass (``core.fusion.plan_program``) — ``of`` validates the
+    chain so an invalid grouping fails at plan time as a typed
+    ``LoweringError``, never as a shape error inside a jitted executor.
+    """
+    name: str
+    stage: str
+    sites: Tuple[Site, ...]
+
+    @classmethod
+    def of(cls, program: "Program", names, name: str | None = None
+           ) -> "SuperSite":
+        """Validate + build a super-site from member site names.
+
+        Members must be >= 2 consecutive sites of ``program``, all of
+        one stage, all super-site-fusible conv kinds, with an unbroken
+        activation chain (each consumes exactly its predecessor's
+        output).  Violations raise ``LoweringError`` naming the site.
+        """
+        names = tuple(names)
+        if len(names) < 2:
+            raise LoweringError(
+                f"super-site needs >= 2 members, got {names}",
+                site=names[0] if names else None)
+        idx = {s.name: i for i, s in enumerate(program.sites)}
+        for n in names:
+            if n not in idx:
+                raise LoweringError(f"super-site member {n!r} is not a "
+                                    f"site of the program", site=n)
+        order = [idx[n] for n in names]
+        if order != list(range(order[0], order[0] + len(names))):
+            raise LoweringError(
+                f"super-site members {names} are not consecutive "
+                f"program sites", site=names[0])
+        members = tuple(program.sites[i] for i in order)
+        stage = members[0].stage
+        for m in members:
+            if m.kind not in SUPERSITE_KINDS:
+                raise LoweringError(
+                    f"super-site member {m.name} has kind {m.kind!r}; "
+                    f"only {SUPERSITE_KINDS} chain", site=m.name)
+            if m.stage != stage:
+                raise LoweringError(
+                    f"super-site member {m.name} is in stage {m.stage}, "
+                    f"group started in {stage}", site=m.name)
+        for a, b in zip(members, members[1:]):
+            if a.out_shape != b.in_shape:
+                raise LoweringError(
+                    f"super-site chain break {a.name} -> {b.name}: "
+                    f"{a.out_shape} != {b.in_shape}", site=b.name)
+        return cls(name or f"{stage}.ss", stage, members)
+
+    # Site-like surface so registry impls / the cycle model can treat a
+    # super-site as one schedulable unit.
+    kind: str = dataclasses.field(default="supersite", init=False)
+
+    @property
+    def members(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.sites)
+
+    @property
+    def in_shape(self) -> Tuple[int, ...]:
+        return self.sites[0].in_shape
+
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        return self.sites[-1].out_shape
+
+    @property
+    def stride(self) -> int:
+        out = 1
+        for s in self.sites:
+            out *= s.stride
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -377,8 +464,30 @@ def execute(program: Program, params, x, *, plan=None, attention_fn=None,
     cfg = program.cfg
     epilogues = (getattr(plan, "epilogues", None) or {}) \
         if attention_fn is None else {}
+    # super-site groups (core.fusion's grouping pass): the whole member
+    # chain runs as one launch, entered at the first member.  Disabled
+    # under an attention_fn override (legacy dataflow) and under
+    # profiling (the drift report needs one wall-clock window PER site).
+    groups = (getattr(plan, "groups", None) or {}) \
+        if (attention_fn is None and profile is None) else {}
+    group_entry: dict[str, Any] = {}
+    group_skip: set[str] = set()
+    for g in groups.values():
+        group_entry[g.members[0]] = g
+        group_skip.update(g.members[1:])
     y = x
     for site in program.sites:
+        if site.name in group_skip:
+            continue
+        if site.name in group_entry:
+            g = group_entry[site.name]
+            from repro.kernels.registry import get_kernel
+            impl = get_kernel("supersite", g.precision)
+            sup = SuperSite.of(program, g.members, name=g.name)
+            exit_ep = epilogues.get(g.members[-1])
+            y = impl.apply(params, y, sup, g, interpret=plan.interpret,
+                           epilogue=exit_ep)
+            continue
         if profile is not None:
             profile.begin(site)
         p = params_at(params, site.param_path) if site.param_path else None

@@ -233,6 +233,7 @@ _BUILTIN_MODULES = (
     "repro.kernels.relu_attn.ops",
     "repro.kernels.int8_matmul.ops",
     "repro.kernels.group_conv.ops",
+    "repro.kernels.supersite.ops",
 )
 _builtins_loaded = False
 

@@ -113,12 +113,32 @@ class ScheduleArtifact:
         """``plan_program(overrides=...)`` pins reproducing the searched
         plan for one executor shape, or ``None`` when the artifact does
         not cover it (e.g. a sharded executor's local batch) — the
-        caller then plans normally."""
+        caller then plans normally.
+
+        Super-site fusion groups are pinned too: a stored decision that
+        does NOT continue its predecessor's group gets
+        ``group_break=True``, so the planner's grouping pass re-forms
+        exactly the searched chains — no more (a chain the search split
+        stays split) and no fewer (members the search kept together
+        carry no break).  Artifacts from before the grouping pass store
+        no ``group`` fields; they pin nothing and the planner groups by
+        its defaults.
+        """
         from repro.core.fusion import SiteOverride
         stored = self.decisions_for(batch, resolution)
         if stored is None:
             return None
-        return {d["name"]: SiteOverride.from_decision(d) for d in stored}
+        out = {d["name"]: SiteOverride.from_decision(d) for d in stored}
+        prev_group = None
+        for d in stored:
+            if "group" not in d:
+                continue
+            g = d.get("group") or ""
+            if not (g and g == prev_group):
+                out[d["name"]] = dataclasses.replace(
+                    out[d["name"]], group_break=True)
+            prev_group = g
+        return out
 
     # -- persistence -----------------------------------------------------
     def to_dict(self) -> dict:

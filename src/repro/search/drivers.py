@@ -70,20 +70,34 @@ def sweep_blocks(cfg, params, *, batch: int, resolution: int,
 
 
 def anneal(objective, state, *, universe_buckets: Sequence[int],
-           universe_sites: Sequence[str], seed: int = 0,
-           iters: int = 64, verbose: bool = False):
-    """Seeded simulated annealing over (bucket set, demoted site set).
+           universe_sites: Sequence[str], universe_breaks: Sequence[str] = (),
+           seed: int = 0, iters: int = 64, verbose: bool = False):
+    """Seeded simulated annealing over (bucket set, demoted site set,
+    super-site boundary set).
 
-    ``objective(buckets: frozenset, demoted: frozenset) -> float``;
-    ``state`` is the (buckets, demoted) start.  Moves toggle one bucket
-    in/out of the universe (never emptying the set) or one site's
-    demotion.  Returns (best_state, best_objective, evaluations).
+    ``objective(buckets: frozenset, demoted: frozenset[, breaks:
+    frozenset]) -> float``; ``state`` is the (buckets, demoted[,
+    breaks]) start.  Moves toggle one bucket in/out of the universe
+    (never emptying the set), one site's demotion, or one group
+    boundary in ``universe_breaks`` — splitting a default super-site
+    chain at that member, or merging it back (the grouping pass's
+    ``SiteOverride.group_break`` lever).  With ``universe_breaks``
+    empty (and a 2-tuple ``state``) the walk and the objective arity
+    are exactly the legacy 2-axis search.  Returns (best_state,
+    best_objective, evaluations).
     """
     rng = random.Random(seed)
     universe_buckets = tuple(sorted(set(int(b) for b in universe_buckets)))
     universe_sites = tuple(universe_sites)
-    cur = (frozenset(state[0]), frozenset(state[1]))
-    cur_obj = objective(*cur)
+    universe_breaks = tuple(universe_breaks)
+    three = len(state) > 2 or bool(universe_breaks)
+    cur = (frozenset(state[0]), frozenset(state[1]),
+           frozenset(state[2]) if len(state) > 2 else frozenset())
+
+    def _obj(s):
+        return objective(*s) if three else objective(s[0], s[1])
+
+    cur_obj = _obj(cur)
     best, best_obj = cur, cur_obj
     evals = 1
     # temperature spans a fixed fraction of the start objective and
@@ -93,21 +107,26 @@ def anneal(objective, state, *, universe_buckets: Sequence[int],
     for i in range(iters):
         frac = i / max(1, iters - 1)
         temp = t0 * (0.01 ** frac)
-        bset, demoted = set(cur[0]), set(cur[1])
-        if (rng.random() < 0.5 or not universe_sites) \
+        bset, demoted, breaks = set(cur[0]), set(cur[1]), set(cur[2])
+        if (rng.random() < 0.5
+                or not (universe_sites or universe_breaks)) \
                 and len(universe_buckets) > 1:
             b = rng.choice(universe_buckets)
             if b in bset and len(bset) > 1:
                 bset.remove(b)
             else:
                 bset.add(b)
+        elif universe_breaks and (not universe_sites
+                                  or rng.random() < 0.5):
+            s = rng.choice(universe_breaks)
+            breaks.symmetric_difference_update({s})
         elif universe_sites:
             s = rng.choice(universe_sites)
             demoted.symmetric_difference_update({s})
-        cand = (frozenset(bset), frozenset(demoted))
+        cand = (frozenset(bset), frozenset(demoted), frozenset(breaks))
         if cand == cur:
             continue
-        cand_obj = objective(*cand)
+        cand_obj = _obj(cand)
         evals += 1
         delta = cand_obj - cur_obj
         if delta <= 0 or rng.random() < math.exp(-delta / max(temp, 1e-9)):
@@ -117,8 +136,9 @@ def anneal(objective, state, *, universe_buckets: Sequence[int],
                 if verbose:
                     print(f"  anneal[{i:>3}] new best {best_obj:,.0f} "
                           f"buckets={sorted(best[0])} "
-                          f"demoted={sorted(best[1])}")
-    return best, best_obj, evals
+                          f"demoted={sorted(best[1])} "
+                          f"breaks={sorted(best[2])}")
+    return (best if three else best[:2]), best_obj, evals
 
 
 def search(cfg, params, trace, *, buckets: Sequence[int] = (1, 2, 4, 8),
@@ -170,21 +190,36 @@ def search(cfg, params, trace, *, buckets: Sequence[int] = (1, 2, 4, 8),
     default_objective = raw_default["objective"] \
         + compile_penalty * raw_default["n_keys"]
 
-    # layer 2: annealing over (bucket set x demotion set), swept blocks
+    # layer 2: annealing over (bucket set x demotion set x super-site
+    # boundary set), swept blocks.  The break universe is every interior
+    # member of a default-plan fusion group — the sites where a
+    # group_break override actually changes the grouping — across the
+    # trace's resolutions.
     searched_cache: dict = {}
 
-    def objective(bset, demoted):
+    def objective(bset, demoted, breaks):
         return evaluate(cfg, params, trace, buckets=sorted(bset),
                         precision=precision, deadline_ms=deadline_ms,
-                        demoted=demoted, blocks_for=blocks_for,
+                        demoted=demoted, breaks=breaks,
+                        blocks_for=blocks_for,
                         compile_penalty=compile_penalty, hw=hw,
                         cost_cache=searched_cache)["objective"]
 
     site_names = tuple(s.name for s in lower(
         cfg, batch=1, image_size=resolutions[0]).fusible())
-    (best_buckets, best_demoted), best_obj, evals = anneal(
-        objective, (base, frozenset()), universe_buckets=universe,
-        universe_sites=site_names, seed=seed, iters=iters,
+    break_names: list[str] = []
+    for res in resolutions:
+        dprog = lower(cfg, batch=1, image_size=res)
+        dplan = plan_program(dprog, params, autotune=False,
+                             precision=precision)
+        for g in dplan.groups.values():
+            for m in g.members[1:]:
+                if m not in break_names:
+                    break_names.append(m)
+    (best_buckets, best_demoted, best_breaks), best_obj, evals = anneal(
+        objective, (base, frozenset(), frozenset()),
+        universe_buckets=universe, universe_sites=site_names,
+        universe_breaks=tuple(break_names), seed=seed, iters=iters,
         verbose=verbose)
     assert best_obj <= default_objective + 1e-6, \
         (best_obj, default_objective)   # start state guarantees this
@@ -198,11 +233,13 @@ def search(cfg, params, trace, *, buckets: Sequence[int] = (1, 2, 4, 8),
             for site in program.fusible():
                 if site.name in best_demoted:
                     overrides[site.name] = SiteOverride(fused=False)
-                else:
-                    blk = blocks_for(site, b, res)
-                    if blk:
-                        overrides[site.name] = SiteOverride(
-                            blocks=dict(blk))
+                    continue
+                blk = blocks_for(site, b, res)
+                brk = site.name in best_breaks
+                if blk or brk:
+                    overrides[site.name] = SiteOverride(
+                        blocks=dict(blk) if blk else None,
+                        group_break=True if brk else None)
             plan = plan_program(program, params, autotune=False,
                                 precision=precision,
                                 overrides=overrides or None)
@@ -213,7 +250,8 @@ def search(cfg, params, trace, *, buckets: Sequence[int] = (1, 2, 4, 8),
               f"{default_objective:,.0f} -> {best_obj:,.0f} "
               f"({best_obj / default_objective:.3f}x), buckets "
               f"{sorted(base)} -> {sorted(best_buckets)}, "
-              f"{len(best_demoted)} site(s) demoted")
+              f"{len(best_demoted)} site(s) demoted, "
+              f"{len(best_breaks)} group boundary(ies) split")
     return ScheduleArtifact(
         config_hash=config_hash(cfg), precision=precision,
         trace_fingerprint=trace_fingerprint(trace),

@@ -63,6 +63,7 @@ LAUNCH_OVERHEAD_CYCLES = 1000.0
 def key_cycles(cfg, params, batch: int, resolution: int, *,
                precision: str = "auto",
                demoted: frozenset = frozenset(),
+               breaks: frozenset = frozenset(),
                blocks_for: Optional[Callable] = None,
                launch_overhead: float = LAUNCH_OVERHEAD_CYCLES,
                hw: HwConfig = HwConfig()) -> float:
@@ -70,22 +71,29 @@ def key_cycles(cfg, params, batch: int, resolution: int, *,
     candidate schedule.
 
     ``demoted`` pins those site names to the reference path
-    (``SiteOverride(fused=False)``); ``blocks_for(site) -> blocks|None``
-    supplies searched block choices for the rest (``None``/missing ->
-    the planner's heuristic default).  Building the plan through
-    ``plan_program`` itself — not a shadow model — means the precision
-    policies, VMEM guards and epilogue assignment that shape the real
-    serve-time plan shape the search cost identically.
+    (``SiteOverride(fused=False)``); ``breaks`` pins super-site group
+    boundaries (``SiteOverride(group_break=True)`` — the planner's
+    grouping pass will not extend a chain across those sites), which is
+    the annealer's split/merge lever over inter-layer fusion groups;
+    ``blocks_for(site) -> blocks|None`` supplies searched block choices
+    for the rest (``None``/missing -> the planner's heuristic default).
+    Building the plan through ``plan_program`` itself — not a shadow
+    model — means the precision policies, VMEM guards, epilogue
+    assignment and super-site grouping that shape the real serve-time
+    plan shape the search cost identically.
     """
     program = lower(cfg, batch=batch, image_size=resolution)
     overrides: dict[str, SiteOverride] = {}
     for site in program.fusible():
         if site.name in demoted:
             overrides[site.name] = SiteOverride(fused=False)
-        elif blocks_for is not None:
-            blk = blocks_for(site)
-            if blk:
-                overrides[site.name] = SiteOverride(blocks=dict(blk))
+            continue
+        blk = blocks_for(site) if blocks_for is not None else None
+        brk = site.name in breaks
+        if blk or brk:
+            overrides[site.name] = SiteOverride(
+                blocks=dict(blk) if blk else None,
+                group_break=True if brk else None)
     plan = plan_program(program, params, autotune=False,
                         precision=precision,
                         overrides=overrides or None)
@@ -117,17 +125,18 @@ def evaluate(cfg, params, trace, *, buckets: Sequence[int],
              precision: str = "auto",
              deadline_ms: float | None = None,
              demoted: frozenset = frozenset(),
+             breaks: frozenset = frozenset(),
              blocks_for: Optional[Callable] = None,
              compile_penalty: float = 0.0,
              hw: HwConfig = HwConfig(),
              cost_cache: Optional[dict] = None) -> dict:
-    """Score one candidate (bucket set, demotion set, block assignment)
-    against a trace; returns ``{"objective", "workload", "per_key",
-    "n_keys"}``.
+    """Score one candidate (bucket set, demotion set, group-boundary
+    set, block assignment) against a trace; returns ``{"objective",
+    "workload", "per_key", "n_keys"}``.
 
     ``cost_cache`` (a plain dict the caller owns) memoizes per-key
     cycles across evaluations — the annealer revisits the same
-    (b, r, demoted) triples constantly and ``key_cycles`` is the
+    (b, r, demoted, breaks) tuples constantly and ``key_cycles`` is the
     expensive part.  ``blocks_for`` here takes ``(site, batch,
     resolution)`` since block choices are shape-specific.
     """
@@ -137,7 +146,7 @@ def evaluate(cfg, params, trace, *, buckets: Sequence[int],
     per_key: dict[tuple, float] = {}
     total = 0.0
     for (b, res), n in sorted(wl.items()):
-        ck = (b, res, demoted)
+        ck = (b, res, demoted, breaks)
         if cost_cache is not None and ck in cost_cache:
             cycles = cost_cache[ck]
         else:
@@ -145,7 +154,8 @@ def evaluate(cfg, params, trace, *, buckets: Sequence[int],
                   else (lambda site, _b=b, _r=res:
                         blocks_for(site, _b, _r)))
             cycles = key_cycles(cfg, params, b, res, precision=precision,
-                                demoted=demoted, blocks_for=bf, hw=hw)
+                                demoted=demoted, breaks=breaks,
+                                blocks_for=bf, hw=hw)
             if cost_cache is not None:
                 cost_cache[ck] = cycles
         per_key[(b, res)] = cycles

@@ -18,8 +18,9 @@ from repro.core.efficientvit import (
     B1, B1_SMOKE, efficientvit, init_efficientvit, layer_manifest,
     total_macs)
 from repro.core.fusion import (
-    EXPECTED_B1_FUSED_LAUNCHES, EXPECTED_B1_FUSED_LAUNCHES_INT8, build_plan,
-    launch_counts, plan_program, plan_report, site_traffic)
+    EXPECTED_B1_FUSED_LAUNCHES, EXPECTED_B1_FUSED_LAUNCHES_INT8,
+    EXPECTED_B1_SUPERSITE_LAUNCHES, EXPECTED_B1_SUPERSITE_LAUNCHES_INT8,
+    build_plan, launch_counts, plan_program, plan_report, site_traffic)
 from repro.core.program import FUSIBLE_KINDS, execute, lower, manifest, params_at
 from repro.core.quantization import quantize_efficientvit
 from repro.kernels import registry
@@ -117,23 +118,37 @@ def test_execute_is_the_forward(tmp_autotune_cache):
 # ---------------------------------------------------------------------------
 
 def test_b1_fused_launch_drift_gate(tmp_autotune_cache):
-    """22 fused launches at B1/224 fp and 29 at int8 (the grouped
-    aggregation kernel adds one launch per scale per fused MSA module).
-    If a lowering or planner change moves either, update
-    EXPECTED_B1_FUSED_LAUNCHES / _INT8 (and the EXPERIMENTS.md
-    narrative) explicitly — this test failing is the drift alarm, not
-    an inconvenience to silence."""
+    """19 fused launches at B1/224 fp and 26 at int8: super-site
+    grouping collapses the S1 pair (-1) and the S2 triple (-2) into one
+    launch each at both precisions, down from the per-site 22/29 (the
+    grouped aggregation kernel adds one launch per scale per fused MSA
+    module).  If a lowering or planner change moves any of these,
+    update EXPECTED_B1_SUPERSITE_LAUNCHES / _INT8 (or, with
+    supersites=False, EXPECTED_B1_FUSED_LAUNCHES / _INT8) and the
+    EXPERIMENTS.md narrative explicitly — this test failing is the
+    drift alarm, not an inconvenience to silence."""
     program = lower(B1, batch=1)
     assert len(program.fusible()) == EXPECTED_B1_FUSED_LAUNCHES
     params = init_efficientvit(jax.random.PRNGKey(4), B1)
-    expected = {"fp": EXPECTED_B1_FUSED_LAUNCHES,
-                "int8": EXPECTED_B1_FUSED_LAUNCHES_INT8}
+    expected = {"fp": EXPECTED_B1_SUPERSITE_LAUNCHES,
+                "int8": EXPECTED_B1_SUPERSITE_LAUNCHES_INT8}
+    persite = {"fp": EXPECTED_B1_FUSED_LAUNCHES,
+               "int8": EXPECTED_B1_FUSED_LAUNCHES_INT8}
     for prec, tree in (("fp", params),
                        ("int8", quantize_efficientvit(params))):
         plan = plan_program(program, tree, autotune=False)
         lc = launch_counts(plan)
         assert lc["fused"] == expected[prec], (prec, lc)
         assert lc["reference"] > lc["fused"]
+        assert {g.name: list(g.members) for g in plan.groups.values()} \
+            == {"S1.ss0": ["S1.mb0", "S1.mb1"],
+                "S2.ss0": ["S2.mb0", "S2.mb1", "S2.mb2"]}
+        # the per-site expectation is still what the planner produces
+        # with the grouping pass disabled
+        flat = plan_program(program, tree, autotune=False,
+                            supersites=False)
+        assert launch_counts(flat)["fused"] == persite[prec], prec
+        assert not flat.groups
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,231 @@
+"""Inter-layer super-site fusion + single-load weight residency.
+
+The contracts under test (ISSUE 10 / ROADMAP item 2):
+
+  * ``SuperSite.of`` validates member chains at plan time (typed
+    ``LoweringError``, never a shape error inside a jitted executor);
+  * the grouping pass in ``plan_program`` collapses consecutive fused
+    conv sites of one stage into one launch, and the grouped forward
+    matches the site-by-site interpreter — fp to <1e-5, int8 BIT-EXACT;
+  * weights are resident: one ``WeightPack`` per (param tree, precision,
+    member chain), built once and shared across resolution buckets and
+    executor rebuilds (``pack_stats`` / ``weight_pack_*`` telemetry),
+    and the plan report counts each member's weight bytes exactly once
+    with interior activation traffic at zero;
+  * ``SiteOverride.group_break`` splits a chain exactly where pinned
+    (the offline search's split/merge lever);
+  * the fault ladder demotes a blamed member OUT of its group — the
+    survivors regroup or run per-site, the key does not fall straight
+    to the reference interpreter.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.common.errors import LoweringError
+from repro.core.efficientvit import EfficientViTConfig, init_efficientvit
+from repro.core.fusion import (
+    SiteOverride, launch_counts, plan_program, plan_report)
+from repro.core.program import SuperSite, execute, lower
+from repro.core.quantization import quantize_efficientvit
+from repro.kernels.supersite.pack import (
+    clear_pack_cache, get_pack, pack_stats, reset_pack_stats)
+from repro.serving.executors import ExecutorCache
+
+# Deep enough to form real chains (B1_SMOKE's depths of 1 group
+# nothing): stem.ss0 = [stem.ds0, stem.ds1], S1.ss0 = [S1.mb0, S1.mb1],
+# S2.ss0 = [S2.mb0, S2.mb1, S2.mb2].
+CFG = EfficientViTConfig(name="ss-smoke", widths=(8, 16, 24, 32, 48),
+                         depths=(2, 2, 3, 1, 1), head_widths=(64, 64),
+                         num_classes=10, image_size=64)
+N_GROUPS = 3
+
+
+@pytest.fixture
+def params():
+    return init_efficientvit(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(autouse=True)
+def fresh_pack_cache():
+    clear_pack_cache()
+    reset_pack_stats()
+    yield
+    clear_pack_cache()
+    reset_pack_stats()
+
+
+def _images(n, res=64, seed=1):
+    return np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), (n, res, res, 3)), np.float32)
+
+
+def _groups(plan):
+    return {g.name: tuple(g.members) for g in plan.groups.values()}
+
+
+# ---------------------------------------------------------------------------
+# SuperSite validation
+# ---------------------------------------------------------------------------
+
+def test_supersite_of_validates(params):
+    program = lower(CFG, batch=1, image_size=64)
+    sup = SuperSite.of(program, ("S2.mb0", "S2.mb1", "S2.mb2"))
+    assert sup.stage == "S2" and len(sup.sites) == 3
+    with pytest.raises(LoweringError):
+        SuperSite.of(program, ("S2.mb0",))             # < 2 members
+    with pytest.raises(LoweringError):
+        SuperSite.of(program, ("S2.mb0", "S2.mb2"))    # not consecutive
+    with pytest.raises(LoweringError):
+        SuperSite.of(program, ("S1.mb1", "S2.mb0"))    # stage boundary
+
+
+# ---------------------------------------------------------------------------
+# grouping pass + chain parity vs the site-by-site interpreter
+# ---------------------------------------------------------------------------
+
+def test_grouping_pass_forms_expected_chains(params, tmp_autotune_cache):
+    program = lower(CFG, batch=1, image_size=64)
+    for tree in (params, quantize_efficientvit(params)):
+        plan = plan_program(program, tree, autotune=False)
+        assert _groups(plan) == {
+            "stem.ss0": ("stem.ds0", "stem.ds1"),
+            "S1.ss0": ("S1.mb0", "S1.mb1"),
+            "S2.ss0": ("S2.mb0", "S2.mb1", "S2.mb2")}
+        flat = plan_program(program, tree, autotune=False,
+                            supersites=False)
+        assert not flat.groups
+        # each chain of k members collapses k launches into 1
+        saved = sum(len(g.members) - 1 for g in plan.groups.values())
+        assert launch_counts(flat)["fused"] \
+            == launch_counts(plan)["fused"] + saved
+
+
+def test_supersite_chain_parity_fp(params, tmp_autotune_cache):
+    """Grouped vs site-by-site fused: <1e-5; both vs reference: close."""
+    batch = 2
+    program = lower(CFG, batch=batch, image_size=64)
+    x = _images(batch)
+    grouped = plan_program(program, params, autotune=False)
+    flat = plan_program(program, params, autotune=False, supersites=False)
+    assert grouped.groups and not flat.groups
+    ref = execute(program, params, x)
+    y_grouped = execute(program, params, x, plan=grouped)
+    y_flat = execute(program, params, x, plan=flat)
+    assert float(jnp.max(jnp.abs(y_grouped - y_flat))) < 1e-5
+    assert_allclose(np.asarray(y_grouped), np.asarray(ref),
+                    rtol=1e-3, atol=1e-3)
+
+
+def test_supersite_chain_parity_int8_bit_exact(params, tmp_autotune_cache):
+    """The grouped int8 chain is BIT-EXACT vs the site-by-site fused
+    path: identical integer arithmetic, identical per-map quantization
+    boundaries — the whole-map grid never re-quantizes mid-chain."""
+    qparams = quantize_efficientvit(params)
+    for batch in (1, 2):
+        program = lower(CFG, batch=batch, image_size=64)
+        x = _images(batch)
+        grouped = plan_program(program, qparams, autotune=False)
+        flat = plan_program(program, qparams, autotune=False,
+                            supersites=False)
+        assert all(g.precision == "int8" for g in grouped.groups.values())
+        y_grouped = execute(program, qparams, x, plan=grouped)
+        y_flat = execute(program, qparams, x, plan=flat)
+        np.testing.assert_array_equal(np.asarray(y_grouped),
+                                      np.asarray(y_flat))
+
+
+# ---------------------------------------------------------------------------
+# single-load weight residency
+# ---------------------------------------------------------------------------
+
+def test_weight_pack_built_once_counted_once(params, tmp_autotune_cache):
+    program = lower(CFG, batch=1, image_size=64)
+    plan = plan_program(program, params, autotune=False)
+    g = plan.groups["S2.ss0"]
+    sup = SuperSite.of(program, g.members, name=g.name)
+    pack, hit = get_pack(params, sup, g.precision)
+    assert not hit and pack_stats() == {"built": 1, "hits": 0}
+    again, hit2 = get_pack(params, sup, g.precision)
+    assert hit2 and again is pack                 # resident, not rebuilt
+    assert pack_stats() == {"built": 1, "hits": 1}
+    # the pack IS its flat buffers: every member weight appears once
+    q_bytes = int(pack.q.size) if pack.q is not None else 0
+    assert pack.nbytes == int(pack.fp.size) * 4 + q_bytes
+
+    # report-level accounting: grouping never double-counts weight HBM,
+    # and interior members deliver ZERO activation bytes
+    flat_plan = plan_program(program, params, autotune=False,
+                             supersites=False)
+    rep, flat_rep = plan_report(plan), plan_report(flat_plan)
+    assert sum(r["hbm_w"] for r in rep) \
+        == sum(r["hbm_w"] for r in flat_rep)
+    rows = {r["site"]: r for r in rep}
+    for grp in plan.groups.values():
+        for interior in grp.members[1:-1]:
+            assert rows[interior]["hbm_delivered"] == 0, interior
+        assert sum(rows[m]["launches_fused"] for m in grp.members) == 1
+
+
+def test_bucket_switch_never_reuploads_weights(params, tmp_autotune_cache):
+    """The pack cache keys on (param tree, precision, member chain) —
+    NOT resolution — so a resolution-bucket switch re-hits every
+    resident pack instead of re-uploading."""
+    cache = ExecutorCache(params, CFG, buckets=(1, 2), autotune=False)
+    cache.get(1, 64)
+    t = cache.telemetry.counters
+    assert t["weight_pack_built"] == N_GROUPS
+    assert t.get("weight_pack_hit", 0) == 0
+    cache.get(1, 32)                    # new resolution: fresh plan...
+    assert t["weight_pack_built"] == N_GROUPS     # ...same packs
+    assert t["weight_pack_hit"] == N_GROUPS
+    cache.get(2, 64)                    # new bucket, same resolution
+    assert t["weight_pack_built"] == N_GROUPS
+    assert t["weight_pack_hit"] == 2 * N_GROUPS
+    assert pack_stats()["built"] == N_GROUPS
+
+
+# ---------------------------------------------------------------------------
+# split/merge pins + the fault ladder
+# ---------------------------------------------------------------------------
+
+def test_group_break_override_splits_exactly_there(params,
+                                                   tmp_autotune_cache):
+    program = lower(CFG, batch=1, image_size=64)
+    plan = plan_program(
+        program, params, autotune=False,
+        overrides={"S2.mb1": SiteOverride(group_break=True)})
+    gs = _groups(plan)
+    # the chain may not extend ACROSS S2.mb1: S2.mb0 is left alone
+    # (a run of one groups nothing) and a new chain starts AT S2.mb1
+    assert ("S2.mb1", "S2.mb2") in gs.values()
+    assert not any("S2.mb0" in m for m in gs.values())
+    assert gs["stem.ss0"] == ("stem.ds0", "stem.ds1")   # others intact
+    assert gs["S1.ss0"] == ("S1.mb0", "S1.mb1")
+
+
+def test_fault_demotion_splits_group_not_reference(params,
+                                                   tmp_autotune_cache):
+    """Blaming one member demotes THAT site (reason "fault") and the
+    surviving members regroup — level 1 of the ladder, with a live
+    fused plan, not a fall to the reference interpreter."""
+    cache = ExecutorCache(params, CFG, buckets=(1,), autotune=False)
+    healthy = cache.get(1, 64)
+    assert "S2.ss0" in healthy.plan.groups
+    state = cache.degrade(1, 64, site="S2.mb0")
+    assert state.level == 1 and state.demoted == {"S2.mb0"}
+    ex = cache.get(1, 64)
+    assert ex.plan is not None                    # NOT the interpreter
+    d = ex.plan.decisions["S2.mb0"]
+    assert not d.fused and d.reason == "fault" and d.group == ""
+    gs = _groups(ex.plan)
+    assert gs["S2.ss0"] == ("S2.mb1", "S2.mb2")   # survivors regroup
+    assert gs["S1.ss0"] == ("S1.mb0", "S1.mb1")
+    # the degraded plan still serves correctly
+    x = _images(1)
+    program = lower(CFG, batch=1, image_size=64)
+    ref = execute(program, params, x)
+    out = execute(program, params, x, plan=ex.plan)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-3)
